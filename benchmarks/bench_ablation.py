@@ -1,0 +1,64 @@
+"""Paper Table 9: component ablation of LoCo.
+
+LoCo1  no error feedback (naive quant)
+LoCo2  + error feedback (beta=1, no averaging, no reset, fp error)
+LoCo3  + moving average on the error (beta=0.5)
+LoCo4  + reset 64, fp32 error (no compression)
+LoCo5  + 8-bit error compression (f8) -- the full method
+LoCo6  reset 16 (faster reset, paper's 128-vs-512 probe)
+plus the beta sweep the paper leaves implicit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.loco import SyncConfig
+from repro.core.quantizer import QuantConfig
+from benchmarks.common import csv_row, train_sim
+
+Q = QuantConfig(mode="fixed", scale=2.0**9)  # coarse -> components matter
+
+VARIANTS = {
+    "loco1_no_feedback": SyncConfig(strategy="naive4", quant=Q),
+    "loco2_ef_only": SyncConfig(
+        strategy="loco", beta=1.0, reset_every=0,
+        quant=dataclasses.replace(Q, error_codec="none")),
+    "loco3_plus_avg": SyncConfig(
+        strategy="loco", beta=0.5, reset_every=0,
+        quant=dataclasses.replace(Q, error_codec="none")),
+    "loco4_plus_reset": SyncConfig(
+        strategy="loco", beta=0.5, reset_every=64,
+        quant=dataclasses.replace(Q, error_codec="none")),
+    "loco5_full_f8err": SyncConfig(
+        strategy="loco", beta=0.5, reset_every=64,
+        quant=dataclasses.replace(Q, error_codec="f8")),
+    "loco5_int8err": SyncConfig(
+        strategy="loco", beta=0.5, reset_every=64,
+        quant=dataclasses.replace(Q, error_codec="int8")),
+    "loco6_reset16": SyncConfig(
+        strategy="loco", beta=0.5, reset_every=16,
+        quant=dataclasses.replace(Q, error_codec="f8")),
+}
+
+BETAS = [0.1, 0.3, 0.5, 0.9, 1.0]
+
+
+def run(steps=150):
+    out = {}
+    for name, sync in VARIANTS.items():
+        r = train_sim(sync, steps=steps)
+        out[name] = r.final_loss
+        csv_row(f"ablation/{name}", r.wall_s / steps * 1e6,
+                f"final_loss={r.final_loss:.4f}")
+    for b in BETAS:
+        sync = SyncConfig(strategy="loco", beta=b, reset_every=64,
+                          quant=dataclasses.replace(Q, error_codec="f8"))
+        r = train_sim(sync, steps=steps)
+        out[f"beta={b}"] = r.final_loss
+        csv_row(f"ablation/beta_{b}", r.wall_s / steps * 1e6,
+                f"final_loss={r.final_loss:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

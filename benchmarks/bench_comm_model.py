@@ -1,0 +1,103 @@
+"""Paper Tables 1/7/10/11: communication volume & projected throughput.
+
+Two parts:
+1. Table-1 reproduction -- per-method communication time and memory formulas
+   evaluated symbolically at the paper's operating points (Psi = 7B/13B/70B,
+   N_d = 32/64/128), verifying LoCo-Adam's 2.25/4 = 0.5625x comm-time vs Adam
+   and ~1Psi extra memory.
+2. Measured-volume projection -- reads the dry-run JSONs (if present) for
+   per-device wire bytes under sync=loco vs sync=fp on the production mesh,
+   and projects the paper's Table-7-style speedup across interconnect
+   bandwidths and accumulation numbers:
+       step_time(bw) ~ T_compute + wire_bytes / bw
+   with T_compute from the dry-run compute/memory terms.  The paper's
+   qualitative claims (speedup grows with lower bandwidth / more chips /
+   smaller accumulation) fall out of the model and are printed as checks.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+GB = 1e9
+
+
+def table1_formulas(psi=7e9, nd=64, bw=25 * GB):
+    """Comm seconds per step per method (collective rows of Table 1)."""
+    def coll(bg, bw_bits):
+        return (bg + bw_bits) * psi * (nd - 1) / (8 * nd * bw)
+
+    return {
+        "adam16": coll(16, 16),
+        "loco_adam": coll(4, 16),        # 4-bit grads, 16-bit params: 2.25Psi
+        "zeropp": coll(4, 8),            # 1.5Psi
+        "loco_zeropp": coll(4, 8),
+        "powersgd_r32": 4 * 32 * (psi ** 0.5) * (nd - 1) / (8 * nd * bw) * 16,
+    }
+
+
+def table1_memory(psi=7e9, nd=64):
+    """Bytes of state per device (mixed-precision rows of Table 1)."""
+    return {
+        "adam16": 2 * psi + 14 * psi / nd,
+        "loco_adam": 3 * psi + 14 * psi / nd,   # +1Psi: the 8-bit error
+        "ef16": 4 * psi + 10 * psi / nd,
+        "onebit_adam": 18 * psi + 2 * psi / nd,
+    }
+
+
+def run(dryrun_dir="experiments/dryrun_final"):
+    # ---- part 1: paper Table 1 at its operating points ----------------------
+    for psi, tag in [(7e9, "7B"), (13e9, "13B"), (70e9, "70B")]:
+        for nd in (32, 64, 128):
+            t = table1_formulas(psi, nd)
+            sp = t["adam16"] / t["loco_adam"]
+            csv_row(f"table1/comm_{tag}_nd{nd}", t["loco_adam"] * 1e6,
+                    f"adam={t['adam16']:.3f}s loco={t['loco_adam']:.3f}s "
+                    f"speedup_comm={sp:.3f}x")
+    m = table1_memory()
+    csv_row("table1/memory_7B_nd64", 0.0,
+            f"adam={m['adam16']/GB:.2f}GB loco={m['loco_adam']/GB:.2f}GB "
+            f"state_only_overhead={(m['loco_adam']/m['adam16']-1)*100:.1f}% "
+            f"(peak overhead <10%: amortized vs activations, Table 8)")
+
+    # ---- part 2: measured wire bytes from the dry-run -----------------------
+    recs = {}
+    for f in glob.glob(os.path.join(dryrun_dir, "*__train_4k__16x16__*.json")):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            recs[(r["arch"], r["sync"])] = r
+    archs = sorted({a for a, _ in recs})
+    for arch in archs:
+        lo = recs.get((arch, "loco"))
+        fp = recs.get((arch, "fp"))
+        if not (lo and fp):
+            continue
+        wl, wf = lo["collectives"]["wire_bytes"], fp["collectives"]["wire_bytes"]
+        # isolate dp-axis *gradient* traffic: identical TP/activation
+        # collectives cancel in the difference; what remains is
+        # reduce-scatter-bf16 (fp) vs 4-bit all2all (loco).
+        grad_delta = max(wf - wl, 0.0)
+        a2a_loco = lo["collectives"]["bytes_by_kind"].get("all-to-all", 0)
+        grad_fp = grad_delta + a2a_loco
+        t_comp = max(lo["roofline"]["compute_s"], lo["roofline"]["memory_s"])
+        for bw_gb, net in [(50, "ICI"), (25, "DCN-fast"), (6, "DCN-slow")]:
+            t_fp = t_comp + wf / (bw_gb * GB)
+            t_lo = t_comp + wl / (bw_gb * GB)
+            grad_sp = ((t_comp + grad_fp / (bw_gb * GB))
+                       / (t_comp + a2a_loco / (bw_gb * GB)))
+            csv_row(f"table7/{arch}_{net}", t_lo * 1e6,
+                    f"wire_fp={wf/GB:.2f}GB wire_loco={wl/GB:.2f}GB "
+                    f"system_speedup={t_fp/t_lo:.3f}x "
+                    f"grad_traffic_speedup={grad_sp:.3f}x "
+                    f"(TPU TP activation traffic dominates; see EXPERIMENTS)")
+    if not archs:
+        csv_row("table7/no_dryrun_data", 0.0,
+                "run launch.dryrun with --sync loco and --sync fp first")
+
+
+if __name__ == "__main__":
+    run()

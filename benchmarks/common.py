@@ -1,0 +1,138 @@
+"""Shared harness for the benchmark suite.
+
+``train_sim`` trains a small decoder LM on one device while *simulating* N
+data-parallel nodes through ``repro.core.loco.sim_sync`` -- bit-equivalent
+to the distributed path (tests/test_comm_dist.py proves dist == sim), but
+hundreds of optimizer steps run in seconds on CPU.  This is how the paper's
+training-quality tables (2-6, 9, Fig. 2) are reproduced at laptop scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.loco import SyncConfig, maybe_reset, sim_init, sim_sync
+from repro.data.synthetic import DataConfig, make_batch_fn
+from repro.optim.optimizers import OPTIMIZERS, clip_by_global_norm
+
+TINY = ArchConfig(
+    name="bench-lm", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, d_ff=352, vocab=512, source="benchmark harness")
+
+
+def _init_lm(cfg: ArchConfig, key):
+    d, f, V, hd = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.hd
+    ks = iter(jax.random.split(key, 64))
+    p = {"emb": jax.random.normal(next(ks), (V, d)) * 0.02}
+    for i in range(cfg.n_layers):
+        s = 1 / np.sqrt(d)
+        p[f"l{i}"] = {
+            "n1": jnp.ones((d,)), "n2": jnp.ones((d,)),
+            "wq": jax.random.normal(next(ks), (d, d)) * s,
+            "wk": jax.random.normal(next(ks), (d, d)) * s,
+            "wv": jax.random.normal(next(ks), (d, d)) * s,
+            "wo": jax.random.normal(next(ks), (d, d)) * s,
+            "w1": jax.random.normal(next(ks), (d, f)) * s,
+            "w3": jax.random.normal(next(ks), (d, f)) * s,
+            "w2": jax.random.normal(next(ks), (f, d)) / np.sqrt(f),
+        }
+    p["nf"] = jnp.ones((d,))
+    return p
+
+
+def _rms(x, s):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-5) * s
+
+
+def _lm_loss(p, tokens, cfg: ArchConfig):
+    x = p["emb"][tokens[:, :-1]]
+    B, S, d = x.shape
+    pos = jnp.arange(S)
+    mask = pos[None, :] <= pos[:, None]
+    for i in range(cfg.n_layers):
+        l = p[f"l{i}"]
+        h = _rms(x, l["n1"])
+        q = (h @ l["wq"]).reshape(B, S, cfg.n_heads, -1)
+        k = (h @ l["wk"]).reshape(B, S, cfg.n_heads, -1)
+        v = (h @ l["wv"]).reshape(B, S, cfg.n_heads, -1)
+        a = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(q.shape[-1])
+        a = jnp.where(mask[None, None], a, -1e30)
+        o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(a, -1), v)
+        x = x + o.reshape(B, S, d) @ l["wo"]
+        h = _rms(x, l["n2"])
+        x = x + (jax.nn.silu(h @ l["w1"]) * (h @ l["w3"])) @ l["w2"]
+    x = _rms(x, p["nf"])
+    logits = x @ p["emb"].T
+    tgt = tokens[:, 1:]
+    lse = jax.nn.logsumexp(logits, -1)
+    tl = jnp.take_along_axis(logits, tgt[..., None], -1)[..., 0]
+    return jnp.mean(lse - tl)
+
+
+@dataclasses.dataclass
+class SimResult:
+    losses: np.ndarray
+    final_loss: float
+    wall_s: float
+    label: str
+
+
+def train_sim(sync: SyncConfig, *, steps=150, n_nodes=4, batch_per_node=4,
+              seq=64, optimizer="adam", lr=2e-3, seed=0, cfg: ArchConfig = TINY,
+              log_every=0) -> SimResult:
+    params = _init_lm(cfg, jax.random.PRNGKey(seed))
+    flat, tdef = jax.tree.flatten(params)
+    sizes = [x.size for x in flat]
+    d_raw = sum(sizes)
+    d_total = -(-d_raw // 512) * 512  # pad: 4-bit pack + quant block granule
+    opt = OPTIMIZERS[optimizer]()
+    opt_state = opt.init(params)
+    mask = jax.tree.map(lambda p: jnp.float32(p.ndim >= 2), params)
+    state = sim_init(sync, n_nodes, d_total)
+    bf = make_batch_fn(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                  global_batch=n_nodes * batch_per_node, seed=seed))
+
+    def flatten_grads(g):
+        v = jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(g)])
+        return jnp.pad(v, (0, d_total - d_raw))
+
+    def unflatten(v):
+        out, o = [], 0
+        for x, n in zip(flat, sizes):
+            out.append(v[o:o + n].reshape(x.shape))
+            o += n
+        return jax.tree.unflatten(tdef, out)
+
+    @jax.jit
+    def step_fn(params, opt_state, state, step, tokens):
+        tb = tokens.reshape(n_nodes, batch_per_node, -1)
+        loss, gn = jax.vmap(
+            lambda t: jax.value_and_grad(_lm_loss)(params, t, cfg))(tb)
+        g_nodes = jax.vmap(flatten_grads)(gn)
+        ghat, state = sim_sync(g_nodes, state, step, sync)
+        grads = unflatten(ghat)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        new_params, opt_state = opt.update(grads, opt_state, params, step,
+                                           lr, mask)
+        return new_params, opt_state, state, jnp.mean(loss)
+
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        tokens = bf(jnp.int32(i))["tokens"]
+        params, opt_state, state, loss = step_fn(params, opt_state, state,
+                                                 jnp.int32(i + 1), tokens)
+        losses.append(float(loss))
+        if log_every and i % log_every == 0:
+            print(f"  [{sync.strategy}] step {i} loss {loss:.4f}", flush=True)
+    return SimResult(np.array(losses), float(np.mean(losses[-10:])),
+                     time.time() - t0, sync.strategy)
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

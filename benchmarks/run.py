@@ -1,0 +1,54 @@
+"""Benchmark entry point: one module per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only quality,...]
+"""
+import os
+
+# 8 host devices: bench_memory / bench_moe exercise the real 2x2-mesh
+# distributed path (NOT the dry-run's 512 -- that stays in launch/dryrun.py).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="fewer steps")
+    ap.add_argument("--only", default=None,
+                    help="comma list: quality,ablation,comm,memory,kernels,moe")
+    args = ap.parse_args()
+    steps = 60 if args.fast else 150
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if want("quality"):
+        from benchmarks import bench_quality
+        bench_quality.run(steps=steps)
+    if want("ablation"):
+        from benchmarks import bench_ablation
+        bench_ablation.run(steps=steps)
+    if want("comm"):
+        from benchmarks import bench_comm_model
+        bench_comm_model.run()
+    if want("memory"):
+        from benchmarks import bench_memory
+        bench_memory.run()
+    if want("kernels"):
+        from benchmarks import bench_kernels
+        bench_kernels.run()
+    if want("moe"):
+        from benchmarks import bench_moe
+        bench_moe.run(steps=12 if args.fast else 20)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

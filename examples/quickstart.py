@@ -1,0 +1,52 @@
+"""Quickstart: train a tiny LM with LoCo 4-bit gradient sync on a 2x2 CPU mesh.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig, get_arch, reduced
+from repro.core.loco import SyncConfig
+from repro.core.quantizer import QuantConfig
+from repro.data.synthetic import DataConfig, make_batch_fn
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import RunConfig, make_init, make_train_step
+
+
+def main():
+    cfg = reduced(get_arch("llama2-400m"))           # 2L, d=256 smoke variant
+    mesh = make_local_mesh(dp=2, tp=2)               # FSDP over 2, TP over 2
+    shape = ShapeConfig("quickstart", seq_len=64, global_batch=8, kind="train")
+
+    run = RunConfig(
+        sync=SyncConfig(                             # <- the paper's technique
+            strategy="loco",                         # 4-bit error-feedback sync
+            quant=QuantConfig(mode="block"),         # per-256-block scales
+            beta=0.5,                                # error moving average (Eqn. 5)
+            reset_every=512,                         # T_c (Eqn. 7)
+        ),
+        optimizer="adam", lr=2e-3, microbatch=2, total_steps=50, warmup_steps=5,
+    )
+
+    init_fn, _ = make_init(cfg, run, mesh)
+    chunks, states, opt = init_fn(jax.random.PRNGKey(0))
+    bundle = make_train_step(cfg, run, mesh, shape)
+    batch_fn = make_batch_fn(DataConfig(cfg.vocab, shape.seq_len, shape.global_batch))
+
+    for step in range(50):
+        batch = batch_fn(jnp.int32(step))
+        chunks, states, opt, m = bundle.fn(chunks, states, opt, jnp.int32(step), batch)
+        if step % 10 == 0 or step == 49:
+            print(f"step {step:3d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['gnorm']):.2f}")
+    print("done -- gradients were synchronized as 4-bit all-to-all payloads "
+          "with an f8 compensation-error state the whole time.")
+
+
+if __name__ == "__main__":
+    main()

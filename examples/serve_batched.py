@@ -1,0 +1,32 @@
+"""Serve a small model with batched requests: prefill a batch of prompts,
+then decode greedily in lockstep (the decode_32k-shaped path at CPU scale).
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python examples/serve_batched.py --arch mamba2-2.7b
+"""
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-steps", type=int, default=48)
+    args = ap.parse_args()
+
+    from repro.launch import serve
+    serve.main([
+        "--arch", args.arch, "--reduced",
+        "--batch", str(args.batch),
+        "--prompt-len", str(args.prompt_len),
+        "--decode-steps", str(args.decode_steps),
+        "--dp", "2", "--tp", "2",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Builds the §Dry-run / §Roofline markdown tables from dryrun JSONs.
+
+  PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "chameleon-34b", "mixtral-8x7b", "qwen3-moe-30b-a3b", "minicpm-2b",
+    "gemma2-27b", "zamba2-2.7b", "whisper-small", "command-r-35b",
+    "mamba2-2.7b", "h2o-danube-1.8b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: str, mesh: str = None, sync: str = "loco"):
+    recs = {}
+    for f in glob.glob(os.path.join(dir_, "*.json")):
+        r = json.load(open(f))
+        if sync and r.get("sync") != sync:
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def _fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(recs, mesh="16x16"):
+    lines = [
+        "| arch | shape | persistent GiB | peak GiB (CPU) | FLOPs/dev | HBM B/dev | "
+        "wire B/dev | compute s | memory s | collective s | dominant | "
+        "useful-FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {a} | {s} | — | — | — | — | — | — | — | — | "
+                             f"skipped: {r['reason']} | — |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {a} | {s} | ERROR | | | | | | | | {r['error'][:60]} | |")
+                continue
+            rf = r["roofline"]
+            fit = "" if r["memory"]["peak_bytes"] <= 16 * 2**30 else " ⚠"
+            ratio = r.get("useful_flops_ratio")
+            rat = f"{ratio:.2f}" if ratio else "n/a"
+            lines.append(
+                f"| {a} | {s} | {_fmt_bytes(r['memory']['argument_bytes'])} | "
+                f"{_fmt_bytes(r['memory']['peak_bytes'])}{fit} | "
+                f"{r['flops_per_device']:.2e} | {r['hbm_bytes_per_device']:.2e} | "
+                f"{r['collectives']['wire_bytes']:.2e} | "
+                f"{rf['compute_s']:.4f} | {rf['memory_s']:.4f} | "
+                f"{rf['collective_s']:.4f} | {rf['dominant'].replace('_s','')} | "
+                f"{rat} |")
+    return "\n".join(lines)
+
+
+def collective_table(recs, mesh="16x16", shape="train_4k"):
+    lines = [
+        "| arch | all-gather | all-reduce | all-to-all | reduce-scatter | total wire |",
+        "|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        r = recs.get((a, shape, mesh))
+        if not r or r["status"] != "ok":
+            continue
+        bk = r["collectives"]["bytes_by_kind"]
+        lines.append(
+            f"| {a} | " + " | ".join(
+                f"{bk.get(k, 0)/2**30:.2f}" for k in
+                ("all-gather", "all-reduce", "all-to-all", "reduce-scatter"))
+            + f" | {r['collectives']['wire_bytes']/2**30:.2f} GiB |")
+    return "\n".join(lines)
+
+
+def compare_meshes(recs_all):
+    lines = ["| arch | shape | single-pod wire | 2-pod wire | single-pod dom | 2-pod dom |",
+             "|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r1 = recs_all.get((a, s, "16x16"))
+            r2 = recs_all.get((a, s, "2x16x16"))
+            if not (r1 and r2) or r1["status"] != "ok" or r2["status"] != "ok":
+                continue
+            lines.append(
+                f"| {a} | {s} | {r1['collectives']['wire_bytes']/2**30:.2f} GiB | "
+                f"{r2['collectives']['wire_bytes']/2**30:.2f} GiB | "
+                f"{r1['roofline']['dominant'].replace('_s','')} | "
+                f"{r2['roofline']['dominant'].replace('_s','')} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Roofline (single-pod 16x16, sync=loco)\n")
+    print(roofline_table(recs, args.mesh))
+    print("\n## Collective bytes by kind (train_4k)\n")
+    print(collective_table(recs))
+    print("\n## Mesh comparison\n")
+    print(compare_meshes(recs))
+
+
+if __name__ == "__main__":
+    main()

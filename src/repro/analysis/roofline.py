@@ -1,0 +1,118 @@
+"""Roofline-term extraction from compiled XLA artifacts (deliverable (g)).
+
+Per (arch x shape x mesh) we derive, from ``compiled.cost_analysis()`` and
+the post-SPMD HLO text:
+
+  compute term    = HLO_FLOPs / peak_FLOPs_per_chip
+  memory term     = HLO_bytes / HBM_bw_per_chip
+  collective term = collective_bytes / link_bw
+
+(cost_analysis of the partitioned module is already per-device).  Hardware
+constants are TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+collective_bytes is parsed from the compiled HLO: for each collective op we
+count the bytes that actually cross the links per device:
+
+  all-gather       out_bytes * (N-1)/N      (receives everyone else's shard)
+  reduce-scatter   in_bytes  * (N-1)/N
+  all-reduce       2 * in_bytes * (N-1)/N   (ring RS + AG)
+  all-to-all       in_bytes  * (N-1)/N
+  collective-permute  in_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link (effective, one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    wire_bytes: float  # per-device bytes crossing links
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict = {}
+    bytes_by_kind: dict = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-gather|all-reduce|reduce-scatter|"
+                     r"all-to-all|collective-permute)(?:-start)?\(", ls)
+        if not m:
+            continue
+        result_type, kind = m.group(1), m.group(2)
+        if "-done" in ls.split("(")[0]:
+            continue
+        out_b = _shape_bytes(result_type)
+        # group size N
+        n = 1
+        g = _GROUPS_RE.search(ls)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_V2_RE.search(ls)
+            if g2:
+                n = int(g2.group(2))
+        frac = (n - 1) / n if n > 1 else 0.0
+        if kind == "all-gather":
+            w = out_b * frac
+        elif kind == "reduce-scatter":
+            w = out_b * (n - 1)  # out is the scattered shard; in = out * n
+        elif kind == "all-reduce":
+            w = 2 * out_b * frac
+        elif kind == "all-to-all":
+            w = out_b * frac
+        else:  # collective-permute
+            w = out_b
+        counts[kind] = counts.get(kind, 0) + 1
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + w
+        wire += w
+    return CollectiveStats(counts=counts, bytes_by_kind=bytes_by_kind, wire_bytes=wire)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float) -> dict:
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = wire_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    denom = max(t_compute, t_memory, t_coll)
+    terms["compute_fraction_of_roofline"] = t_compute / denom if denom else 0.0
+    return terms
+
+
+def model_flops_per_step(n_params_active: float, tokens: float) -> float:
+    """6 * N * D rule (per optimizer step; D = tokens processed)."""
+    return 6.0 * n_params_active * tokens

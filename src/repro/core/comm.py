@@ -1,0 +1,214 @@
+"""Collective helpers for the manual-mesh runtime.
+
+Everything here runs *inside* a ``jax.shard_map`` body where all mesh axes
+are manual.  Multi-axis collectives (the multi-pod ``("pod", "data")``
+data-parallel group) are built by composing single-axis primitives; chunk
+ordering follows rank ``r = pod * DATA + data`` so that sequential
+``all_gather``/``psum_scatter``/``all_to_all`` stay mutually inverse.
+
+``dist_sync`` is the distributed form of the strategies in
+:mod:`repro.core.loco`: quantize locally, exchange the low-bit payload with
+all-to-all over the dp axes, decompress and average **locally in fp32**
+(paper §3.3's all2all-instead-of-reduce-scatter argument).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer as Q
+from repro.core.loco import SyncConfig, local_compress
+
+
+def axis_size(axes: tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= jax.lax.axis_size(a)
+    return n
+
+
+def all_gather_flat(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Gather 1-D chunks over possibly-multiple axes, innermost axis last."""
+    for a in reversed(axes):  # gather innermost ('data') first
+        x = jax.lax.all_gather(x, a, tiled=True)
+    return x
+
+
+def psum_scatter_flat(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Inverse of :func:`all_gather_flat` composed with a sum over peers."""
+    for a in axes:  # scatter outermost ('pod') first
+        x = jax.lax.psum_scatter(x, a, tiled=True)
+    return x
+
+
+def all_to_all_chunks(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Full personalized exchange over the dp group.
+
+    x: (N, c, ...) where N = prod(axis sizes); row i is the payload for peer i
+    (rank order pod*DATA+data).  Returns (N, c, ...): row j is what peer j
+    sent for *my* chunk.
+    """
+    import math
+
+    sizes = [jax.lax.axis_size(a) for a in axes]
+    n = x.shape[0]
+    assert n == math.prod(sizes), (n, sizes)
+    lead = x.shape[1:]
+    x = x.reshape(*sizes, *lead)
+    for dim, a in enumerate(axes):
+        x = jax.lax.all_to_all(x, a, split_axis=dim, concat_axis=dim)
+    return x.reshape(n, *lead)
+
+
+# ---------------------------------------------------------------------------
+# distributed gradient synchronization (one flat tensor)
+# ---------------------------------------------------------------------------
+
+def dist_sync(
+    g: jax.Array,
+    state: jax.Array,
+    cfg: SyncConfig,
+    dp_axes: tuple[str, ...],
+) -> tuple[jax.Array, jax.Array]:
+    """Synchronize a flat local gradient across the dp group.
+
+    g:     (n,) local full gradient, n divisible by D * 2 * block
+    state: per-node compressor state (see loco.state_dtype)
+    returns (g_shard (n/D,), new_state): the *averaged* gradient chunk this
+    rank owns, and the updated local compressor state.
+    """
+    n = g.shape[0]
+    D = axis_size(dp_axes)
+    g = g.astype(jnp.float32)
+
+    if cfg.strategy == "fp":
+        # 16-bit-style baseline: reduce-scatter mean (bf16 wire).
+        g_shard = psum_scatter_flat(g.astype(jnp.bfloat16), dp_axes)
+        return g_shard.astype(jnp.float32) / D, state
+
+    if cfg.strategy == "ef21":
+        raise NotImplementedError(
+            "ef21 distributed path needs a receiver-side mean-estimate shard; "
+            "use the post-grad reference (loco.sim_sync) for ef21, or "
+            "strategy='ef'/'loco' here."
+        )
+
+    if cfg.strategy in ("loco", "ef", "naive4"):
+        qc = cfg.quant
+        use_kernels = (
+            cfg.use_kernels
+            and cfg.strategy == "loco"
+            and qc.mode == "block"
+            and qc.bits == 4
+            and qc.error_codec == "f8"
+        )
+        # --- local compensate + quantize (steps 1-2 of Algorithm 1) -------
+        if use_kernels:
+            from repro.kernels import ops as K
+
+            payload, scales, new_state = K.loco_compress(
+                g, state, beta=cfg.beta, escale=qc.error_scale
+            )
+        else:
+            if cfg.strategy == "loco":
+                e = Q.error_decode(state, qc)
+                h = g + e
+            elif cfg.strategy == "ef":
+                h = g + state.astype(jnp.float32)
+            else:  # naive4
+                h = g
+            payload, scales = Q.compress(h, qc)
+            d = Q.decompress(payload, scales, qc)
+            # --- state update ----------------------------------------------
+            if cfg.strategy == "loco":
+                e_tilde = (1.0 - cfg.beta) * Q.error_decode(state, qc) + cfg.beta * (h - d)
+                new_state = Q.error_encode(e_tilde, qc)
+            elif cfg.strategy == "ef":
+                new_state = (h - d).astype(state.dtype)
+            else:
+                new_state = state
+
+        # --- all2all of the low-bit payload (step 3 / §3.3) ---------------
+        if cfg.hierarchical and len(dp_axes) == 2 and cfg.strategy == "loco":
+            return _hierarchical_exchange(payload, scales, new_state, n, qc, dp_axes)
+        pay_rows = payload.reshape(D, -1)
+        recv_pay = all_to_all_chunks(pay_rows, dp_axes)
+        if qc.mode == "block":
+            sc_rows = scales.reshape(D, -1)
+            recv_sc = all_to_all_chunks(sc_rows, dp_axes)
+        else:
+            recv_sc = jnp.broadcast_to(scales, (D, 1))
+
+        if use_kernels:
+            from repro.kernels import ops as K
+
+            g_shard = K.dequant_mean(recv_pay, recv_sc)
+        else:
+
+            def deq_row(p_row, s_row):
+                return Q.decompress(p_row, s_row, qc)
+
+            contrib = jax.vmap(deq_row)(recv_pay, recv_sc)  # (D, n/D) fp32
+            g_shard = jnp.mean(contrib, axis=0)
+        return g_shard, new_state
+
+    if cfg.strategy == "onebit":
+        h = g + state.astype(jnp.float32)
+        scale = jnp.mean(jnp.abs(h))
+        bits = (h > 0).astype(jnp.int8)  # 0/1 wire, 1 bit semantically
+        d = (2.0 * bits.astype(jnp.float32) - 1.0) * scale
+        new_state = (h - d).astype(state.dtype)
+        recv = all_to_all_chunks(bits.reshape(D, -1), dp_axes)
+        recv_scale = jax.lax.all_gather(scale, dp_axes[-1])  # per-peer scales
+        for a in reversed(dp_axes[:-1]):
+            recv_scale = jax.lax.all_gather(recv_scale, a, tiled=True)
+        contrib = (2.0 * recv.astype(jnp.float32) - 1.0) * recv_scale.reshape(D, 1)
+        return jnp.mean(contrib, axis=0), new_state
+
+    raise ValueError(cfg.strategy)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical (two-stage) multi-pod exchange -- beyond-paper optimization
+# ---------------------------------------------------------------------------
+
+def _hierarchical_exchange(payload, scales, new_state, n, qc, dp_axes):
+    """4-bit intra-pod all2all + fp32 mean, then 8-bit inter-pod all2all.
+
+    Chunk mapping: device (p, d) ends up with flat chunk r = p*Dd + d, same
+    as the flat exchange, so the FSDP layout is unchanged.  See
+    SyncConfig.hierarchical for rationale.
+    """
+    pod_axis, data_axis = dp_axes
+    Pp = jax.lax.axis_size(pod_axis)
+    Dd = jax.lax.axis_size(data_axis)
+    c = n // (Pp * Dd)
+
+    # stage 1 (ICI): group d = strided chunks {p*Dd + d}; a2a within the pod.
+    def regroup(x, elems_per_chunk):
+        # flat -> (Pp, Dd, chunk_payload) -> rows (Dd, Pp*chunk_payload)
+        return (x.reshape(Pp, Dd, elems_per_chunk)
+                 .transpose(1, 0, 2).reshape(Dd, Pp * elems_per_chunk))
+
+    pay_rows = regroup(payload, (c // 2) if qc.bits == 4 else c)
+    recv_pay = all_to_all_chunks(pay_rows, (data_axis,))
+    if qc.mode == "block":
+        sc_rows = regroup(scales, c // qc.block)
+        recv_sc = all_to_all_chunks(sc_rows, (data_axis,))
+    else:
+        recv_sc = jnp.broadcast_to(scales, (Dd, 1))
+
+    def deq_row(p_row, s_row):
+        return Q.decompress(p_row, s_row, qc)
+
+    contrib = jax.vmap(deq_row)(recv_pay, recv_sc)        # (Dd, Pp*c) fp32
+    pod_mean = jnp.mean(contrib, axis=0)                  # my group's pod mean
+
+    # stage 2 (DCN): 8-bit block-scaled exchange of the pod means.
+    qc8 = Q.QuantConfig(bits=8, mode="block", block=qc.block)
+    q8, s8 = Q.quant_block(pod_mean, qc8)
+    recv8 = all_to_all_chunks(q8.reshape(Pp, c), (pod_axis,))
+    recv8s = all_to_all_chunks(s8.reshape(Pp, c // qc8.block), (pod_axis,))
+    contrib2 = jax.vmap(lambda p_, s_: Q.dequant_block(p_, s_, qc8))(recv8, recv8s)
+    g_shard = jnp.mean(contrib2, axis=0)                  # (c,)
+    return g_shard, new_state

@@ -1,0 +1,398 @@
+"""Flat-parameter FSDP layout (PyTorch-FSDP-style) for the manual mesh.
+
+Every parameter tensor is described by a :class:`ParamInfo` and stored as a
+**flat fp32 master chunk** per device:
+
+* the logical tensor is first sliced along its ``tp_dim`` over the "model"
+  axis (``None`` = replicated across TP, e.g. norms, kv-proj when kv < TP);
+* the per-TP-slice is flattened, padded to a multiple of ``D * GRAIN``
+  (``GRAIN = 512`` keeps every dp chunk divisible by the int4 pack factor
+  and the quantizer block), and split into ``D`` equal dp chunks.
+
+Storage shapes (global, under the manual shard_map):
+
+=================  ==========================  ===========================
+object             global shape                PartitionSpec
+param chunk        (TP, padlen)                P("model", dp_axes)
+compressor state   (TP, D, padlen)             P("model", dp_axes, None)
+optimizer state    like param chunk            P("model", dp_axes)
+stacked (scan) x L prepend (L,)                prepend None
+serve (no FSDP)    (TP, *local_shape)          P("model", None, ...)
+=================  ==========================  ===========================
+
+``materialize`` turns a chunk back into the logical (TP-local) bf16 tensor
+inside the step body: bf16 cast -> FSDP all-gather (with the LoCo hijack on
+the backward) -> unpad -> reshape -> (grad-psum wrapper if TP-replicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import loco as loco_lib
+from repro.core.hijack import gather_fp, gather_with_sync, replicated_grad_psum
+from repro.core.loco import SyncConfig
+
+GRAIN = 512  # dp chunks stay divisible by 2 (int4 pack) * 256 (quant block)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamInfo:
+    """Static description of one logical parameter tensor."""
+
+    name: str
+    shape: tuple[int, ...]          # logical *global* shape
+    tp_dim: int | None = None       # dim sharded over "model" (None = replicated)
+    init: str = "normal"            # normal | zeros | ones | embed
+    init_scale: float | None = None  # overrides default fan-in scaling
+    loco: bool = True               # quantized sync (False -> bf16 reduce-scatter)
+    decay: bool = True              # weight-decay mask
+
+    def local_shape(self, tp: int) -> tuple[int, ...]:
+        if self.tp_dim is None:
+            return self.shape
+        s = list(self.shape)
+        assert s[self.tp_dim] % tp == 0, (self.name, self.shape, self.tp_dim, tp)
+        s[self.tp_dim] //= tp
+        return tuple(s)
+
+    def numel_local(self, tp: int) -> int:
+        return math.prod(self.local_shape(tp))
+
+    def padlen(self, tp: int, d: int) -> int:
+        n = self.numel_local(tp)
+        g = d * GRAIN
+        return (n + g - 1) // g * g
+
+    def chunklen(self, tp: int, d: int) -> int:
+        return self.padlen(tp, d) // d
+
+    def fan_scale(self) -> float:
+        if self.init_scale is not None:
+            return self.init_scale
+        if self.init == "embed":
+            return 1.0
+        fan_in = self.shape[0] if len(self.shape) >= 2 else self.shape[-1]
+        return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTopo:
+    """Static mesh topology facts used everywhere."""
+
+    dp_axes: tuple[str, ...]
+    tp_axis: str
+    dp: int
+    tp: int
+
+    @staticmethod
+    def from_mesh(mesh: jax.sharding.Mesh) -> "MeshTopo":
+        names = mesh.axis_names
+        if "pod" in names:
+            dp_axes = ("pod", "data")
+        else:
+            dp_axes = ("data",)
+        dp = math.prod(mesh.shape[a] for a in dp_axes)
+        return MeshTopo(dp_axes=dp_axes, tp_axis="model", dp=dp, tp=mesh.shape["model"])
+
+    def chunk_spec(self, stacked: bool) -> P:
+        dims = ("model", self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0])
+        return P(None, *dims) if stacked else P(*dims)
+
+    def state_spec(self, stacked: bool) -> P:
+        dims = ("model", self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0], None)
+        return P(None, *dims) if stacked else P(*dims)
+
+    def serve_spec(self, info: ParamInfo, stacked: bool) -> P:
+        dims: list = ["model"] + [None] * len(info.shape)
+        return P(None, *dims) if stacked else P(*dims)
+
+
+def _named_key(base: jax.Array, name: str, extra: int = 0) -> jax.Array:
+    k = jax.random.fold_in(base, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+    return jax.random.fold_in(k, extra)
+
+
+def _init_local(info: ParamInfo, key: jax.Array, tp: int, tp_rank) -> jax.Array:
+    """Generate this TP-rank's slice of the logical tensor (fp32)."""
+    shape = info.local_shape(tp)
+    if info.init == "zeros":
+        return jnp.zeros(shape, jnp.float32)
+    if info.init == "ones":
+        return jnp.ones(shape, jnp.float32)
+    if info.tp_dim is None:
+        return jax.random.normal(key, shape, jnp.float32) * info.fan_scale()
+    # TP-sharded: every rank draws its own slice from a rank-folded key so
+    # ranks disagree (as slices of one big tensor would).
+    k = jax.random.fold_in(key, tp_rank)
+    return jax.random.normal(k, shape, jnp.float32) * info.fan_scale()
+
+
+# ---------------------------------------------------------------------------
+# inside-shard_map primitives
+# ---------------------------------------------------------------------------
+
+def init_chunk(info: ParamInfo, key: jax.Array, topo: MeshTopo) -> jax.Array:
+    """Create this device's fp32 master chunk (runs inside shard_map)."""
+    tp_rank = jax.lax.axis_index(topo.tp_axis)
+    full = _init_local(info, _named_key(key, info.name), topo.tp, tp_rank).reshape(-1)
+    pad = info.padlen(topo.tp, topo.dp) - full.shape[0]
+    full = jnp.pad(full, (0, pad))
+    dp_rank = _dp_rank(topo)
+    chunk = jax.lax.dynamic_slice_in_dim(
+        full, dp_rank * info.chunklen(topo.tp, topo.dp), info.chunklen(topo.tp, topo.dp)
+    )
+    return chunk
+
+
+def _dp_rank(topo: MeshTopo):
+    r = jax.lax.axis_index(topo.dp_axes[0])
+    for a in topo.dp_axes[1:]:
+        r = r * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return r
+
+
+def init_sync_state(info: ParamInfo, cfg: SyncConfig, topo: MeshTopo) -> jax.Array:
+    """Per-device compressor state for this param ((padlen,) or dummy)."""
+    if info.loco and cfg.needs_state():
+        return jnp.zeros((info.padlen(topo.tp, topo.dp),), loco_lib.state_dtype(cfg))
+    return jnp.zeros((1,), jnp.float32)
+
+
+def materialize(
+    chunk: jax.Array,
+    state: jax.Array,
+    info: ParamInfo,
+    cfg: SyncConfig,
+    topo: MeshTopo,
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """fp32 chunk -> logical bf16 TP-local tensor (FSDP gather w/ LoCo bwd)."""
+    w = chunk.astype(compute_dtype)
+    if info.loco:
+        flat = gather_with_sync(w, state, cfg, topo.dp_axes)
+    else:
+        flat = gather_fp(w, topo.dp_axes)
+    n = info.numel_local(topo.tp)
+    t = flat[:n].reshape(info.local_shape(topo.tp))
+    if info.tp_dim is None and topo.tp > 1:
+        t = replicated_grad_psum(t, topo.tp_axis)
+    return t
+
+
+def materialize_serve(t: jax.Array, info: ParamInfo, topo: MeshTopo, compute_dtype=jnp.bfloat16):
+    """Serve-mode params are already logical TP-local tensors."""
+    return t.astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# group-level containers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamGroup:
+    """A named set of ParamInfos, optionally stacked L times for lax.scan."""
+
+    name: str
+    infos: tuple[ParamInfo, ...]
+    n_layers: int | None = None  # None = not stacked
+
+    @property
+    def stacked(self) -> bool:
+        return self.n_layers is not None
+
+
+class TrainStore:
+    """Bridges flat master chunks + sync states to model-visible tensors.
+
+    Built *inside* the differentiated loss so that `chunks` and `states`
+    are the traced arguments of jax.grad.
+    """
+
+    def __init__(self, groups, chunks, states, cfg: SyncConfig, topo: MeshTopo, compute_dtype=jnp.bfloat16):
+        self.groups = {g.name: g for g in groups}
+        self.chunks = chunks  # {group: {name: (L?, 1, chunk)}} local views
+        self.states = states  # {group: {name: (L?, 1, 1.., padlen)}} local views
+        self.cfg = cfg
+        self.topo = topo
+        self.compute_dtype = compute_dtype
+
+    # ---- non-stacked groups ------------------------------------------------
+    def group(self, gname: str) -> dict[str, jax.Array]:
+        g = self.groups[gname]
+        assert not g.stacked
+        out = {}
+        for info in g.infos:
+            c = self.chunks[gname][info.name].reshape(-1)
+            s = _squeeze_state(self.states[gname][info.name])
+            out[info.name] = materialize(c, s, info, self.cfg, self.topo, self.compute_dtype)
+        return out
+
+    # ---- stacked groups: xs for lax.scan ------------------------------------
+    def scan_xs(self, gname: str):
+        g = self.groups[gname]
+        assert g.stacked
+        return (self.chunks[gname], self.states[gname])
+
+    def materialize_slice(self, gname: str, xs_slice) -> dict[str, jax.Array]:
+        g = self.groups[gname]
+        cs, ss = xs_slice
+        out = {}
+        for info in g.infos:
+            c = cs[info.name].reshape(-1)
+            s = _squeeze_state(ss[info.name])
+            out[info.name] = materialize(c, s, info, self.cfg, self.topo, self.compute_dtype)
+        return out
+
+
+class ServeStore:
+    """Same interface over logical TP-local bf16 tensors (no FSDP)."""
+
+    def __init__(self, groups, tensors, topo: MeshTopo, compute_dtype=jnp.bfloat16):
+        self.groups = {g.name: g for g in groups}
+        self.tensors = tensors
+        self.topo = topo
+        self.compute_dtype = compute_dtype
+
+    def group(self, gname: str) -> dict[str, jax.Array]:
+        g = self.groups[gname]
+        out = {}
+        for info in g.infos:
+            t = self.tensors[gname][info.name]
+            t = t.reshape(info.local_shape(self.topo.tp))
+            out[info.name] = t.astype(self.compute_dtype)
+        return out
+
+    def scan_xs(self, gname: str):
+        return (self.tensors[gname],)
+
+    def materialize_slice(self, gname: str, xs_slice) -> dict[str, jax.Array]:
+        g = self.groups[gname]
+        (ts,) = xs_slice
+        out = {}
+        for info in g.infos:
+            t = ts[info.name].reshape(info.local_shape(self.topo.tp))
+            out[info.name] = t.astype(self.compute_dtype)
+        return out
+
+
+def _squeeze_state(s: jax.Array) -> jax.Array:
+    """Drop the leading singleton mesh dims of a local state view."""
+    return s.reshape(s.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# whole-model init (runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+def init_train_state_local(groups: Sequence[ParamGroup], key: jax.Array, cfg: SyncConfig, topo: MeshTopo):
+    """Returns (chunks, states) local pytrees, to be used with the specs below."""
+    chunks, states = {}, {}
+    for g in groups:
+        cg, sg = {}, {}
+        for info in g.infos:
+            if g.stacked:
+                keys = jax.random.split(_named_key(key, g.name + "/" + info.name), g.n_layers)
+                c = jax.vmap(lambda k: init_chunk(info, k, topo))(keys)
+                s = jnp.stack([init_sync_state(info, cfg, topo)] * g.n_layers)
+                cg[info.name] = c[:, None, :]              # (L, 1, chunk) local
+                sg[info.name] = s[:, None, None, :]        # (L, 1, 1, padlen) local
+            else:
+                c = init_chunk(info, _named_key(key, g.name + "/" + info.name), topo)
+                s = init_sync_state(info, cfg, topo)
+                cg[info.name] = c[None, :]                 # (1, chunk) local
+                sg[info.name] = s[None, None, :]           # (1, 1, padlen) local
+        chunks[g.name], states[g.name] = cg, sg
+    return chunks, states
+
+
+def init_serve_params_local(groups: Sequence[ParamGroup], key: jax.Array, topo: MeshTopo):
+    tensors = {}
+    tp_rank = jax.lax.axis_index(topo.tp_axis)
+    for g in groups:
+        tg = {}
+        for info in g.infos:
+            kk = _named_key(key, g.name + "/" + info.name)
+            if g.stacked:
+                keys = jax.random.split(kk, g.n_layers)
+                t = jax.vmap(lambda k: _init_local(info, _named_key(k, info.name), topo.tp, tp_rank))(keys)
+                tg[info.name] = t[:, None].astype(jnp.bfloat16)   # (L, 1, *local)
+            else:
+                t = _init_local(info, _named_key(kk, info.name), topo.tp, tp_rank)
+                tg[info.name] = t[None].astype(jnp.bfloat16)      # (1, *local)
+        tensors[g.name] = tg
+    return tensors
+
+
+# ---------------------------------------------------------------------------
+# global specs / shapes (outside shard_map; for jit in_shardings + dryrun)
+# ---------------------------------------------------------------------------
+
+def train_state_specs(groups: Sequence[ParamGroup], topo: MeshTopo):
+    chunks, states = {}, {}
+    for g in groups:
+        cg, sg = {}, {}
+        for info in g.infos:
+            cg[info.name] = topo.chunk_spec(g.stacked)
+            sg[info.name] = topo.state_spec(g.stacked)
+        chunks[g.name], states[g.name] = cg, sg
+    return chunks, states
+
+
+def train_state_shapes(groups: Sequence[ParamGroup], cfg: SyncConfig, topo: MeshTopo):
+    """Global ShapeDtypeStructs for dry-run lowering (no allocation)."""
+    chunks, states = {}, {}
+    for g in groups:
+        cg, sg = {}, {}
+        for info in g.infos:
+            pad = info.padlen(topo.tp, topo.dp)
+            cshape = (topo.tp, pad)
+            sshape = (topo.tp, topo.dp, pad)
+            sdt = loco_lib.state_dtype(cfg) if (info.loco and cfg.needs_state()) else jnp.float32
+            if not (info.loco and cfg.needs_state()):
+                sshape = sshape[:-1] + (1,)
+            if g.stacked:
+                cshape = (g.n_layers,) + cshape
+                sshape = (g.n_layers,) + sshape
+            cg[info.name] = jax.ShapeDtypeStruct(cshape, jnp.float32)
+            sg[info.name] = jax.ShapeDtypeStruct(sshape, sdt)
+        chunks[g.name], states[g.name] = cg, sg
+    return chunks, states
+
+
+def serve_param_specs(groups: Sequence[ParamGroup], topo: MeshTopo):
+    out = {}
+    for g in groups:
+        og = {}
+        for info in g.infos:
+            og[info.name] = topo.serve_spec(info, g.stacked)
+        out[g.name] = og
+    return out
+
+
+def serve_param_shapes(groups: Sequence[ParamGroup], topo: MeshTopo):
+    out = {}
+    for g in groups:
+        og = {}
+        for info in g.infos:
+            shape = (topo.tp,) + info.local_shape(topo.tp)
+            if g.stacked:
+                shape = (g.n_layers,) + shape
+            og[info.name] = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+        out[g.name] = og
+    return out
+
+
+def count_params(groups: Sequence[ParamGroup]) -> int:
+    n = 0
+    for g in groups:
+        mult = g.n_layers if g.stacked else 1
+        for info in g.infos:
+            n += mult * math.prod(info.shape)
+    return n

@@ -1,0 +1,113 @@
+"""FSDP gather with compressed-gradient backward (the "cotangent hijack").
+
+PyTorch LoCo hooks the FSDP reduce-scatter during backward.  The JAX
+equivalent: a ``custom_vjp`` whose forward is the FSDP ``all_gather`` of a
+flat parameter chunk, and whose backward replaces the autodiff transpose
+(full-precision reduce-scatter) with LoCo's compensate -> quantize ->
+all_to_all -> dequant-mean.  The updated compensation-error buffer is
+returned as the *cotangent of the error input* -- legal because the error
+is stored in a float dtype (f8_e4m3 / bf16), so primal and cotangent dtypes
+match and ``jax.grad(loss, argnums=(params, errors))`` yields
+``(grad_shards, new_errors)`` in a single backward pass, layer by layer
+inside the backward scan (grad buffers freed as in real FSDP).
+
+See DESIGN.md §3 for the full rationale.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import all_gather_flat, axis_size, dist_sync, psum_scatter_flat
+from repro.core.loco import SyncConfig
+
+
+@lru_cache(maxsize=None)
+def _make_gather(cfg: SyncConfig, dp_axes: tuple[str, ...]):
+    """Build (and cache) the custom_vjp gather for a given static config."""
+
+    @jax.custom_vjp
+    def gather(w_chunk: jax.Array, state: jax.Array) -> jax.Array:
+        return all_gather_flat(w_chunk, dp_axes)
+
+    def fwd(w_chunk, state):
+        return all_gather_flat(w_chunk, dp_axes), state
+
+    def bwd(state, g_full):
+        # chunk dtype == gathered dtype, so g_full.dtype is the right
+        # cotangent dtype for w_chunk.
+        g_shard, new_state = dist_sync(g_full, state, cfg, dp_axes)
+        return g_shard.astype(g_full.dtype), new_state.astype(state.dtype)
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def gather_with_sync(
+    w_chunk: jax.Array,
+    state: jax.Array,
+    cfg: SyncConfig,
+    dp_axes: tuple[str, ...],
+) -> jax.Array:
+    """FSDP all-gather whose backward runs the configured sync strategy.
+
+    w_chunk: (n/D,) local flat parameter chunk (bf16 recommended on the wire)
+    state:   per-device compressor state, shape (n,) (full local-gradient
+             size) in a float dtype; its cotangent carries the new state.
+    """
+    assert jnp.issubdtype(state.dtype, jnp.floating), (
+        "hijack state must be a float dtype (f8/bf16/f32) so its cotangent "
+        "can carry the updated state; int8 error storage is only available "
+        "in the post-grad reference path"
+    )
+    return _make_gather(cfg, tuple(dp_axes))(w_chunk, state)
+
+
+def gather_fp(w_chunk: jax.Array, dp_axes: tuple[str, ...]) -> jax.Array:
+    """Plain differentiable FSDP gather: backward is a full-precision
+    reduce-scatter *sum*.  Used for small (non-LoCo) tensors; callers divide
+    the resulting grads by D to get the mean (see steps.py)."""
+
+    @jax.custom_vjp
+    def gather(w_chunk):
+        return all_gather_flat(w_chunk, dp_axes)
+
+    def fwd(w_chunk):
+        return all_gather_flat(w_chunk, dp_axes), None
+
+    def bwd(_, g_full):
+        # bf16 wire (the "16-bit Adam" baseline of the paper); mean in f32.
+        D = axis_size(dp_axes)
+        g = psum_scatter_flat(g_full.astype(jnp.bfloat16), dp_axes)
+        return ((g.astype(jnp.float32) / D).astype(w_chunk.dtype),)
+
+    gather.defvjp(fwd, bwd)
+    return gather(w_chunk)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _sum_grads_over_model(x, axes):
+    return x
+
+
+def _sgm_fwd(x, axes):
+    return x, None
+
+
+def _sgm_bwd(axes, _res, g):
+    return (jax.lax.psum(g, axes),)
+
+
+_sum_grads_over_model.defvjp(_sgm_fwd, _sgm_bwd)
+
+
+def replicated_grad_psum(x: jax.Array, tp_axis: str = "model") -> jax.Array:
+    """Identity forward; backward psums the cotangent over the TP axis.
+
+    Wrap every weight that is *replicated* across the tensor-parallel axis
+    (kv projections when kv_heads < TP, norm scales, ...) so each dp node's
+    local gradient is the true full gradient before LoCo sees it.
+    """
+    return _sum_grads_over_model(x, tp_axis)

@@ -1,0 +1,187 @@
+"""LoCo (Algorithm 1 of the paper) and baseline compressors.
+
+Two execution forms of the same math:
+
+* **simulation** (`sim_*`): N logical nodes live on one device as a leading
+  axis of an ``(N, d)`` array.  Bit-exact with the distributed form; used by
+  the training-quality benchmarks (paper Tables 3/4/5/9, Fig. 2) and the
+  Lemma-2 property tests, where we want hundreds of optimizer steps on CPU
+  without a mesh.
+
+* **distributed** (`repro.core.comm`): the same per-node compressor running
+  inside ``shard_map`` with an ``all_to_all`` over the data-parallel axes
+  (paper §3.3), wired into the backward pass through
+  ``repro.core.hijack.gather_with_sync``.
+
+Strategy registry (paper §5.2 baselines):
+
+=========  =================================================================
+fp         full-precision reduce-scatter (the 16-bit Adam baseline)
+loco       Algorithm 1: error-feedback + moving average + reset + 8-bit error
+ef         Seide et al. error feedback (beta=1, full-precision error, no reset)
+ef21       Richtarik et al.: communicate C(g - g_est), g_est += C(...)
+naive4     Zero++-style 4-bit quantization, no error feedback
+onebit     sign compression with per-tensor L1 scale + error feedback
+=========  =================================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer as Q
+from repro.core.quantizer import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    """Static config of the gradient-synchronization strategy."""
+
+    strategy: Literal["fp", "loco", "ef", "ef21", "naive4", "onebit"] = "loco"
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    beta: float = 0.5            # moving-average weight on the *current* error (Eqn. 5)
+    reset_every: int = 512       # T_c (Eqn. 7); 0 disables reset
+    use_kernels: bool = False    # route quant math through the Pallas kernels
+    # Beyond-paper: two-stage multi-pod exchange -- 4-bit all2all + fp32 mean
+    # inside each pod (ICI), then an 8-bit all2all of the pod-means across
+    # pods (DCN).  Cuts inter-pod traffic ~8x vs the flat dp-group all2all;
+    # error feedback covers stage 1 (the lossy hop), stage 2's 8-bit error
+    # is small and unbiased-ish (documented in EXPERIMENTS.md §Perf).
+    hierarchical: bool = False
+
+    def needs_state(self) -> bool:
+        return self.strategy in ("loco", "ef", "ef21", "onebit")
+
+
+# ---------------------------------------------------------------------------
+# per-node compressor cores (pure: no collectives). Each returns
+#   (dequantized_contribution, new_state)
+# where `dequantized_contribution` is what the *receiver* reconstructs --
+# running the wire codec round-trip keeps simulation == distributed.
+# ---------------------------------------------------------------------------
+
+def state_dtype(cfg: SyncConfig):
+    if cfg.strategy == "loco":
+        return Q.error_dtype(cfg.quant)
+    if cfg.strategy in ("ef", "onebit"):
+        return jnp.bfloat16
+    if cfg.strategy == "ef21":
+        return jnp.bfloat16
+    return jnp.float32  # dummy
+
+
+def init_state(cfg: SyncConfig, n: int) -> jax.Array:
+    """Per-node compressor state for a flat gradient of length n."""
+    if cfg.needs_state():
+        return jnp.zeros((n,), state_dtype(cfg))
+    return jnp.zeros((1,), jnp.float32)
+
+
+def _loco_local(g: jax.Array, e8: jax.Array, cfg: SyncConfig):
+    """Paper Algorithm 1 steps 1-2 on one node.
+
+    g:  float32 local gradient (flat)
+    e8: 8-bit compensation error storage
+    returns (d = deq(compress(h)), e8_new)
+    """
+    qc = cfg.quant
+    e = Q.error_decode(e8, qc)                       # decompressor(e; s_e)
+    h = g + e                                        # Eqn. (2)
+    d = Q.roundtrip(h, qc)                           # Eqn. (3) then deq, = d_{k+1}
+    e_tilde = (1.0 - cfg.beta) * e + cfg.beta * (h - d)   # Eqn. (5)
+    e8_new = Q.error_encode(e_tilde, qc)             # Eqn. (7), reset applied by caller
+    return d, e8_new
+
+
+def _ef_local(g: jax.Array, e: jax.Array, cfg: SyncConfig):
+    """Seide et al. EF: compensate with last step's full compression error."""
+    h = g + e.astype(jnp.float32)
+    d = Q.roundtrip(h, cfg.quant)
+    return d, (h - d).astype(e.dtype)
+
+
+def _ef21_local(g: jax.Array, gest: jax.Array, cfg: SyncConfig):
+    """EF21: communicate the compressed innovation c = C(g - g_est)."""
+    c = Q.roundtrip(g - gest.astype(jnp.float32), cfg.quant)
+    gest_new = gest.astype(jnp.float32) + c
+    return gest_new, gest_new.astype(gest.dtype)  # receiver reconstructs g_est + c
+
+
+def _naive4_local(g: jax.Array, _state: jax.Array, cfg: SyncConfig):
+    return Q.roundtrip(g, cfg.quant), _state
+
+
+def _onebit_local(g: jax.Array, e: jax.Array, cfg: SyncConfig):
+    h = g + e.astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(h))
+    d = jnp.sign(h) * scale
+    return d, (h - d).astype(e.dtype)
+
+
+LOCAL_COMPRESSORS: dict[str, Callable] = {
+    "loco": _loco_local,
+    "ef": _ef_local,
+    "ef21": _ef21_local,
+    "naive4": _naive4_local,
+    "onebit": _onebit_local,
+}
+
+
+def local_compress(g: jax.Array, state: jax.Array, cfg: SyncConfig):
+    """Dispatch to the strategy's per-node compressor. fp is identity."""
+    if cfg.strategy == "fp":
+        return g, state
+    return LOCAL_COMPRESSORS[cfg.strategy](g, state, cfg)
+
+
+def maybe_reset(state: jax.Array, step: jax.Array, cfg: SyncConfig) -> jax.Array:
+    """Error reset (Eqn. 7): zero the error every T_c steps.
+
+    Applied to LoCo-style error states only; EF21's g_est must persist.
+    """
+    if cfg.strategy not in ("loco", "ef", "onebit") or cfg.reset_every <= 0:
+        return state
+    do_reset = (step % cfg.reset_every) == 0
+    return jnp.where(do_reset, jnp.zeros_like(state), state)
+
+
+# ---------------------------------------------------------------------------
+# simulation of N nodes on one device
+# ---------------------------------------------------------------------------
+
+def sim_init(cfg: SyncConfig, n_nodes: int, d: int) -> jax.Array:
+    if cfg.needs_state():
+        return jnp.zeros((n_nodes, d), state_dtype(cfg))
+    return jnp.zeros((n_nodes, 1), jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def sim_sync(g_nodes: jax.Array, state: jax.Array, step: jax.Array, cfg: SyncConfig):
+    """One synchronization round over N simulated nodes.
+
+    g_nodes: (N, d) per-node local gradients
+    returns (g_hat (d,), new_state (N, d)) where g_hat is the gradient every
+    node would reconstruct after the collective (paper Eqn. 8).
+    """
+    if cfg.strategy == "fp":
+        return jnp.mean(g_nodes, axis=0), state
+    d, new_state = jax.vmap(lambda g, s: local_compress(g, s, cfg))(g_nodes, state)
+    new_state = jax.vmap(lambda s: maybe_reset(s, step, cfg))(new_state)
+    return jnp.mean(d, axis=0), new_state
+
+
+def deviation_bound(cfg: SyncConfig, d: int, k: int, c_inf: float, alpha: float = 1.0):
+    """Lemma 2 upper bound on ||sum_i (g_hat_i - g_i)||: T_c sqrt(d) a c_inf + sqrt(d) k / (2 s_e).
+
+    Used by the property tests; for block-scaled error codecs we take
+    1/(2 s_e) as the worst-case f8 relative step at the configured pre-scale.
+    """
+    tc = cfg.reset_every if cfg.reset_every > 0 else k
+    se = cfg.quant.error_scale
+    import math
+
+    return tc * math.sqrt(d) * alpha * c_inf + math.sqrt(d) * k / (2.0 * se)

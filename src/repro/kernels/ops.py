@@ -1,0 +1,33 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel body then executes exactly as written, which is how correctness is
+validated) and False on TPU, where the same BlockSpec tiling compiles to
+Mosaic.  Callers can force either via the ``REPRO_PALLAS_INTERPRET`` env var.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import loco_quant
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def loco_compress(g, e8, *, beta: float, escale: float):
+    """Fused compensate+quant4+pack+error-update (see loco_quant)."""
+    return loco_quant.loco_compress(
+        g, e8, beta=beta, escale=escale, interpret=_interpret_default()
+    )
+
+
+def dequant_mean(payload, scales):
+    """Fused unpack+dequant+mean over the received all-to-all rows."""
+    return loco_quant.dequant_mean(payload, scales, interpret=_interpret_default())

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+These delegate to :mod:`repro.core.quantizer`, which is the single source of
+truth for the codec math; tests assert kernel == oracle across shape/dtype
+sweeps (see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer as Q
+from repro.core.quantizer import QuantConfig
+
+
+def loco_compress_ref(g: jax.Array, e8: jax.Array, *, beta: float, escale: float):
+    """Oracle for kernels.loco_quant.loco_compress (block mode, f8 error)."""
+    qc = QuantConfig(mode="block", error_codec="f8", error_scale=escale)
+    g = g.astype(jnp.float32)
+    e = Q.error_decode(e8, qc)
+    h = g + e
+    payload, scales = Q.compress(h, qc)
+    d = Q.decompress(payload, scales, qc)
+    e_tilde = (1.0 - beta) * e + beta * (h - d)
+    e_new = Q.error_encode(e_tilde, qc)
+    return payload, scales, e_new
+
+
+def dequant_mean_ref(payload: jax.Array, scales: jax.Array):
+    """Oracle for kernels.loco_quant.dequant_mean."""
+    qc = QuantConfig(mode="block")
+
+    def deq(p_row, s_row):
+        return Q.decompress(p_row, s_row, qc)
+
+    contrib = jax.vmap(deq)(payload, scales)
+    return jnp.mean(contrib, axis=0)

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable (e)).
+
+Lowers + compiles every (architecture x input shape) on the production
+single-pod (16,16) mesh and the 2-pod (2,16,16) mesh -- ShapeDtypeStructs
+only, nothing allocated -- then records memory analysis, cost analysis, and
+the parsed collective schedule for the roofline table (EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+The two os.environ lines above MUST stay the first executable lines: jax
+locks the device count on first init, and only the dry-run wants 512 host
+devices.  (No `from __future__` here for that same reason -- py>=3.10 types
+only.)
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import hlo_stats as HS
+from repro.analysis import roofline as RL
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, get_arch
+from repro.core.flatparam import MeshTopo, count_params
+from repro.core.loco import SyncConfig
+from repro.core.quantizer import QuantConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (RunConfig, build_model, make_decode_step,
+                                make_prefill_step, make_train_step)
+
+SKIPS: dict[tuple[str, str], str] = {
+    # long_500k needs sub-quadratic attention (DESIGN.md §6)
+    ("chameleon-34b", "long_500k"): "full attention; 500k KV cache infeasible",
+    ("qwen3-moe-30b-a3b", "long_500k"): "full attention; 500k KV cache infeasible",
+    ("minicpm-2b", "long_500k"): "full attention; 500k KV cache infeasible",
+    ("gemma2-27b", "long_500k"): "global layers are full attention at 500k",
+    ("command-r-35b", "long_500k"): "full attention; 500k KV cache infeasible",
+    ("whisper-small", "long_500k"): "enc-dec ASR; 500k-token decode not meaningful",
+}
+
+
+def default_run(cfg: ArchConfig, sync_strategy: str = "loco") -> RunConfig:
+    return RunConfig(
+        sync=SyncConfig(strategy=sync_strategy, quant=QuantConfig(mode="block")),
+        optimizer="adam",
+        microbatch=1,
+        remat=True,
+    )
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               sync_strategy: str = "loco", out_dir: str | None = None,
+               run_overrides: dict | None = None) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    key = (arch, shape_name)
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "sync": sync_strategy}
+    if key in SKIPS:
+        rec.update(status="skipped", reason=SKIPS[key])
+        return _emit(rec, out_dir)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    topo = MeshTopo.from_mesh(mesh)
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            run = default_run(cfg, sync_strategy)
+            if run_overrides:
+                import dataclasses as _dc
+                run = _dc.replace(run, **run_overrides)
+            bundle = make_train_step(cfg, run, mesh, shape)
+        elif shape.kind == "prefill":
+            bundle = make_prefill_step(cfg, mesh, shape)
+        else:
+            bundle = make_decode_step(cfg, mesh, shape)
+
+        lowered = bundle.fn.lower(*bundle.input_shapes)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        # trip-count-aware static analysis (cost_analysis counts scan bodies
+        # once -- see analysis/hlo_stats.py)
+        st = HS.analyze(hlo)
+        flops = st.flops
+        hbm_bytes = st.bytes
+        terms = RL.roofline_terms(flops, hbm_bytes, st.wire_bytes)
+
+        model = build_model(cfg, topo.tp)
+        n_params = count_params(model.groups())
+        if cfg.n_experts and cfg.top_k:
+            active_frac_ffn = cfg.top_k / cfg.n_experts
+            # crude split: expert params vs the rest
+            expert_params = cfg.n_layers * cfg.n_experts * cfg.d_ff * cfg.d_model * (
+                3 if cfg.mlp in ("swiglu", "geglu") else 2)
+            n_active = n_params - expert_params + expert_params * active_frac_ffn
+        else:
+            n_active = n_params
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops_global = RL.model_flops_per_step(n_active, tokens)
+        elif shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops_global = 2.0 * n_active * tokens
+        else:
+            tokens = shape.global_batch  # one token per sequence
+            model_flops_global = 2.0 * n_active * tokens
+        n_dev = mesh.devices.size
+        model_flops_dev = model_flops_global / n_dev
+
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            n_params=n_params,
+            n_params_active=n_active,
+            memory=dict(
+                argument_bytes=ma.argument_size_in_bytes,
+                output_bytes=ma.output_size_in_bytes,
+                temp_bytes=ma.temp_size_in_bytes,
+                alias_bytes=ma.alias_size_in_bytes,
+                peak_bytes=ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+            ),
+            flops_per_device=flops,
+            hbm_bytes_per_device=hbm_bytes,
+            xla_cost_analysis=dict(flops=float(ca.get("flops", 0.0)),
+                                   bytes=float(ca.get("bytes accessed", 0.0))),
+            collectives=dict(counts={k: round(v) for k, v in st.coll_counts.items()},
+                             bytes_by_kind={k: round(v) for k, v in st.coll_bytes.items()},
+                             wire_bytes=round(st.wire_bytes)),
+            roofline=terms,
+            model_flops_per_device=model_flops_dev,
+            useful_flops_ratio=(model_flops_dev / flops) if flops else None,
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-3000:])
+    return _emit(rec, out_dir)
+
+
+def _emit(rec: dict, out_dir: str | None) -> dict:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__{rec['sync']}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" compile={rec['compile_s']}s peak={rec['memory']['peak_bytes']/2**30:.2f}GiB "
+                 f"dom={r['dominant']} c/m/n={r['compute_s']:.4f}/{r['memory_s']:.4f}/"
+                 f"{r['collective_s']:.4f}s")
+    elif status == "skipped":
+        extra = " " + rec["reason"]
+    else:
+        extra = " " + rec["error"][:160]
+    print(f"[dryrun] {rec['arch']:20s} {rec['shape']:12s} {rec['mesh']:8s} {status}{extra}",
+          flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sync", default="loco")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.all_archs import ASSIGNED
+
+    combos = []
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+    for a, s, mp in combos:
+        if args.skip_existing:
+            name = f"{a}__{s}__{'2x16x16' if mp else '16x16'}__{args.sync}.json"
+            if os.path.exists(os.path.join(args.out, name)):
+                print(f"[dryrun] {a} {s} exists, skip")
+                continue
+        dryrun_one(a, s, multi_pod=mp, sync_strategy=args.sync, out_dir=args.out)
+
+
+if __name__ == "__main__":
+    main()

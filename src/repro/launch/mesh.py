@@ -1,0 +1,23 @@
+"""Production mesh construction (deliverable (e)).
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then calls this.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(dp: int = 1, tp: int = 1, pods: int | None = None) -> jax.sharding.Mesh:
+    """Small mesh for CPU tests/examples (same axis names as production)."""
+    if pods:
+        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, tp), ("data", "model"))

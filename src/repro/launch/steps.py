@@ -1,0 +1,471 @@
+"""Step builders: train / prefill / decode under the fully-manual mesh.
+
+``make_train_step`` wires together:
+  FSDP flat-param chunks (core/flatparam) -> per-layer gather with the LoCo
+  backward (core/hijack) -> model forward/backward (models/*) -> microbatch
+  accumulation (comm per microbatch, like PyTorch FSDP) -> TP-aware global
+  grad clip -> sharded optimizer (optim/*) -> error reset (paper Eqn. 7).
+
+Optimizer states are tuples of chunk-mirroring trees, so all sharding specs
+derive from the chunk specs.  Every builder also exposes the global
+ShapeDtypeStructs (with NamedShardings) that launch/dryrun.py feeds to
+``.lower()`` -- nothing is allocated for the big configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import flatparam as FP
+from repro.core.flatparam import MeshTopo, ParamGroup
+from repro.core.loco import SyncConfig, maybe_reset
+from repro.models import transformer as TF
+from repro.models.common import KVCache
+from repro.models.transformer import DecoderLM, DecodeState, head_layout, vocab_padded
+from repro.models.whisper import EncDecLM, WhisperDecodeState
+from repro.optim import optimizers as OPT
+from repro.optim.schedules import make_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    sync: SyncConfig = dataclasses.field(default_factory=SyncConfig)
+    optimizer: str = "adam"
+    lr: float = 3e-4
+    schedule: str = "cosine"
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatch: int = 1          # per-device microbatch size
+    remat: bool = True
+    # Unroll the gradient-accumulation loop (python loop instead of
+    # lax.scan).  The LoCo error state then chains through SSA values
+    # instead of double-buffered while-loop carries: ~3 fewer copies of the
+    # psi/TP-sized error buffer at the cost of accum x compile time
+    # (EXPERIMENTS.md §Perf iteration 2).
+    unroll_accum: bool = False
+    # Megatron sequence parallelism: shard activations over "model" between
+    # blocks during training.  Cuts the residual-stream / remat memory and
+    # the CE-side buffers by TP, replacing each TP all-reduce with an
+    # all-gather + reduce-scatter of the same total volume.
+    sequence_parallel: bool = True
+
+
+def build_model(cfg: ArchConfig, tp: int, sp: bool = False):
+    if cfg.enc_dec:
+        return EncDecLM(cfg, tp)
+    return DecoderLM(cfg, tp, sp=sp)
+
+
+def _dp_entry(topo: MeshTopo):
+    return topo.dp_axes if len(topo.dp_axes) > 1 else topo.dp_axes[0]
+
+
+def _make_opt(run: RunConfig):
+    name = run.optimizer
+    if name == "adafactor":
+        name = "adafactor_flat"  # factored stats need logical shapes (docstring)
+    kw = {}
+    if name in ("adam", "adamw", "lamb"):
+        kw["weight_decay"] = run.weight_decay
+    return OPT.OPTIMIZERS[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# local<->global view plumbing for the flat-param trees
+# ---------------------------------------------------------------------------
+
+def squeeze_chunks(tree, groups):
+    """local (L,1,chunk)->(L,chunk); (1,chunk)->(chunk,)."""
+    out = {}
+    for g in groups:
+        out[g.name] = {
+            n: (a.reshape(a.shape[0], a.shape[-1]) if g.stacked else a.reshape(a.shape[-1]))
+            for n, a in tree[g.name].items()
+        }
+    return out
+
+
+def squeeze_states(tree, groups):
+    """local (L,1,1,pad)->(L,pad); (1,1,pad)->(pad,)."""
+    return squeeze_chunks(tree, groups)  # same rule: keep (L?, last)
+
+
+def unsqueeze_like(tree, ref):
+    return jax.tree.map(lambda a, r: a.reshape(r.shape), tree, ref)
+
+
+# ---------------------------------------------------------------------------
+# TRAIN
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable                 # jitted step function over global arrays
+    input_shapes: tuple          # ShapeDtypeStructs (w/ shardings) for .lower()
+    helpers: dict
+
+
+def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -> StepBundle:
+    topo = MeshTopo.from_mesh(mesh)
+    model = build_model(cfg, topo.tp, sp=run.sequence_parallel)
+    groups = model.groups()
+    opt = _make_opt(run)
+    sched = make_schedule(run.schedule, run.lr, run.total_steps, run.warmup_steps)
+    sync = run.sync
+    assert shape.global_batch % topo.dp == 0, (shape.global_batch, topo.dp)
+    local_batch = shape.global_batch // topo.dp
+    micro = min(run.microbatch, local_batch)
+    accum = local_batch // micro
+    mask = {g.name: {i.name: jnp.float32(1.0 if i.decay else 0.0) for i in g.infos}
+            for g in groups}
+
+    def body(chunks, states, opt_state, step, batch):
+        chunks_l = squeeze_chunks(chunks, groups)
+        states_l = squeeze_states(states, groups)
+        opt_l = tuple(squeeze_chunks(t, groups) for t in opt_state)
+
+        def loss_fn(c, s, mb):
+            store = FP.TrainStore(groups, c, s, sync, topo)
+            return model.loss_fn(store, mb, remat=run.remat)
+
+        def micro_body(carry, mb):
+            s, gacc = carry
+            (loss, metrics), (g, new_s) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(chunks_l, s, mb)
+            gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+            s = new_s if sync.needs_state() else s
+            return (s, gacc), loss
+
+        gacc0 = jax.tree.map(lambda c: jnp.zeros(c.shape, jnp.float32), chunks_l)
+        mbs = jax.tree.map(lambda x: x.reshape(accum, micro, *x.shape[1:]), batch)
+        if run.unroll_accum:
+            carry, losses_l = (states_l, gacc0), []
+            for i in range(accum):
+                mb = jax.tree.map(lambda x: x[i], mbs)
+                carry, loss_i = micro_body(carry, mb)
+                losses_l.append(loss_i)
+            (states_l, gacc), losses = carry, jnp.stack(losses_l)
+        else:
+            (states_l, gacc), losses = jax.lax.scan(micro_body, (states_l, gacc0), mbs)
+        grads = jax.tree.map(lambda g: g / accum, gacc)
+
+        # ---- global grad-norm clip (TP replication-aware) -------------------
+        local_sq = jnp.float32(0)
+        for g in groups:
+            for info in g.infos:
+                s2 = jnp.sum(grads[g.name][info.name] ** 2)
+                if info.tp_dim is None and topo.tp > 1:
+                    s2 = s2 / topo.tp
+                local_sq = local_sq + s2
+        gnorm = jnp.sqrt(jax.lax.psum(local_sq, topo.dp_axes + (topo.tp_axis,)))
+        if run.clip_norm:
+            cs = jnp.minimum(1.0, run.clip_norm / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * cs, grads)
+
+        lr = sched(step)
+        new_chunks_l, new_opt_l = opt.update(grads, opt_l, chunks_l, step, lr, mask)
+        new_states_l = jax.tree.map(lambda s: maybe_reset(s, step + 1, sync), states_l)
+
+        loss = jax.lax.pmean(jnp.mean(losses), topo.dp_axes)
+        new_chunks = unsqueeze_like(new_chunks_l, chunks)
+        new_states = unsqueeze_like(new_states_l, states)
+        new_opt = tuple(unsqueeze_like(t, chunks) for t in new_opt_l)
+        return new_chunks, new_states, new_opt, {"loss": loss, "gnorm": gnorm, "lr": lr}
+
+    cspec, sspec = FP.train_state_specs(groups, topo)
+    n_opt = len(opt.init(_chunk_shapes_local(groups, topo)))
+    opt_spec = tuple(cspec for _ in range(n_opt))
+    dp = _dp_entry(topo)
+    if cfg.enc_dec:
+        batch_spec = {"frames": P(dp, None, None), "tokens": P(dp, None)}
+    else:
+        batch_spec = {"tokens": P(dp, None)}
+    in_specs = (cspec, sspec, opt_spec, P(), batch_spec)
+    out_specs = (cspec, sspec, opt_spec,
+                 {"loss": P(), "gnorm": P(), "lr": P()})
+    sm = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=False)
+
+    cshapes, sshapes = FP.train_state_shapes(groups, sync, topo)
+    cshapes = _with_sharding(cshapes, cspec, mesh)
+    sshapes = _with_sharding(sshapes, sspec, mesh)
+    opt_shapes = tuple(cshapes for _ in range(n_opt))
+    step_shape = jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=NamedSharding(mesh, P()))
+    batch_shapes = _batch_shapes(cfg, shape, mesh, topo, batch_spec)
+    input_shapes = (cshapes, sshapes, opt_shapes, step_shape, batch_shapes)
+
+    return StepBundle(
+        fn=jax.jit(sm, donate_argnums=(0, 1, 2)),
+        input_shapes=input_shapes,
+        helpers=dict(model=model, groups=groups, topo=topo, opt=opt,
+                     cspec=cspec, sspec=sspec, opt_spec=opt_spec,
+                     batch_spec=batch_spec, local_batch=local_batch,
+                     micro=micro, accum=accum),
+    )
+
+
+def _chunk_shapes_local(groups, topo):
+    out = {}
+    for g in groups:
+        og = {}
+        for info in g.infos:
+            shp = (info.chunklen(topo.tp, topo.dp),)
+            if g.stacked:
+                shp = (g.n_layers,) + shp
+            og[info.name] = jax.ShapeDtypeStruct(shp, jnp.float32)
+        out[g.name] = og
+    return out
+
+
+def _with_sharding(shapes, specs, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _batch_shapes(cfg: ArchConfig, shape: ShapeConfig, mesh, topo, batch_spec):
+    B, S = shape.global_batch, shape.seq_len
+    mk = lambda shp, dt, sp: jax.ShapeDtypeStruct(shp, dt, sharding=NamedSharding(mesh, sp))
+    if cfg.enc_dec:
+        return {
+            "frames": mk((B, S, cfg.d_model), jnp.bfloat16, batch_spec["frames"]),
+            "tokens": mk((B, cfg.dec_len + 1), jnp.int32, batch_spec["tokens"]),
+        }
+    return {"tokens": mk((B, S + 1), jnp.int32, batch_spec["tokens"])}
+
+
+# ---------------------------------------------------------------------------
+# INIT (runs the flatparam init inside the mesh; CPU-scale only)
+# ---------------------------------------------------------------------------
+
+def make_init(cfg: ArchConfig, run: RunConfig, mesh):
+    topo = MeshTopo.from_mesh(mesh)
+    model = build_model(cfg, topo.tp)
+    groups = model.groups()
+    opt = _make_opt(run)
+    cspec, sspec = FP.train_state_specs(groups, topo)
+    n_opt = len(opt.init(_chunk_shapes_local(groups, topo)))
+    opt_spec = tuple(cspec for _ in range(n_opt))
+
+    def body(key):
+        chunks, states = FP.init_train_state_local(groups, key, run.sync, topo)
+        chunks_l = squeeze_chunks(chunks, groups)
+        opt_l = opt.init(chunks_l)
+        opt_state = tuple(unsqueeze_like(t, chunks) for t in opt_l)
+        return chunks, states, opt_state
+
+    sm = jax.shard_map(body, mesh=mesh, in_specs=(P(),),
+                       out_specs=(cspec, sspec, opt_spec), check_vma=False)
+    return jax.jit(sm), dict(model=model, groups=groups, topo=topo, opt=opt)
+
+
+# ---------------------------------------------------------------------------
+# SERVE: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _kv_head_spec(cfg: ArchConfig, topo: MeshTopo):
+    lay = head_layout(cfg, topo.tp)
+    return "model" if lay.kv_sharded else None
+
+
+def decode_state_specs(cfg: ArchConfig, topo: MeshTopo, batch_sharded: bool):
+    """PartitionSpec pytree matching DecodeState/WhisperDecodeState."""
+    from repro.models import common as MC
+
+    dp = _dp_entry(topo) if batch_sharded else None
+    if cfg.family != "ssm":
+        lay = head_layout(cfg, topo.tp)
+        if MC.cp_degree(lay) > 1:
+            # window-sharded cache (kv heads replicated): W over "model",
+            # per-rank pos arrays.
+            kv_spec = KVCache(
+                k=P(None, dp, "model", None, None),
+                v=P(None, dp, "model", None, None),
+                pos=P(None, "model"),
+            )
+        else:
+            kvh = _kv_head_spec(cfg, topo)
+            kv_spec = KVCache(
+                k=P(None, dp, None, kvh, None),
+                v=P(None, dp, None, kvh, None),
+                pos=P(None, None),
+            )
+    else:
+        kv_spec = None
+    if cfg.enc_dec:
+        return WhisperDecodeState(
+            self_kv=tuple(kv_spec),
+            memory=P(dp, None, None),
+            pos=P(),
+        )
+    conv_spec = (P(None, dp, None, "model"),) * 3 if cfg.family in ("ssm", "hybrid") else ()
+    # conv_B / conv_C channels are replicated (ngroups=1):
+    if cfg.family in ("ssm", "hybrid"):
+        conv_spec = (P(None, dp, None, "model"), P(None, dp, None, None), P(None, dp, None, None))
+    ssm_spec = P(None, dp, "model", None, None) if cfg.family in ("ssm", "hybrid") else ()
+    if cfg.family in ("dense", "vlm", "moe"):
+        return DecodeState(kv=kv_spec, conv=(), ssm=(), pos=P())
+    if cfg.family == "ssm":
+        return DecodeState(kv=(), conv=conv_spec, ssm=ssm_spec, pos=P())
+    return DecodeState(kv=kv_spec, conv=conv_spec, ssm=ssm_spec, pos=P())
+
+
+def decode_state_shapes(cfg: ArchConfig, topo: MeshTopo, batch: int, window: int, mesh):
+    """Global ShapeDtypeStructs for the decode cache."""
+    specs = decode_state_specs(cfg, topo, batch_sharded=batch >= topo.dp)
+    lay = head_layout(cfg, topo.tp) if cfg.family != "ssm" else None
+
+    def kv_shapes(n_stack, w):
+        # global shapes: W stays full whether sharded over "model" (cp) or
+        # not; the kv-head dim is kv_pad when head-sharded, n_kv when
+        # replicated (cp mode).
+        kvh = lay.kv_pad if lay.kv_sharded else lay.n_kv
+        return KVCache(
+            k=jax.ShapeDtypeStruct((n_stack, batch, w, kvh, lay.head_dim), jnp.bfloat16),
+            v=jax.ShapeDtypeStruct((n_stack, batch, w, kvh, lay.head_dim), jnp.bfloat16),
+            pos=jax.ShapeDtypeStruct((n_stack, w), jnp.int32),
+        )
+
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    if cfg.enc_dec:
+        st = WhisperDecodeState(
+            self_kv=tuple(kv_shapes(cfg.n_layers, min(window, cfg.dec_len))),
+            memory=jax.ShapeDtypeStruct((batch, window, cfg.d_model), jnp.bfloat16),
+            pos=pos,
+        )
+        return _with_sharding_tree(st, specs, mesh)
+    w_attn = min(window, cfg.window) if cfg.attn_kind == "swa" else window
+    if lay is not None:
+        from repro.models import common as MC
+        cp = MC.cp_degree(lay)
+        w_attn = -(-w_attn // cp) * cp  # global = per-rank-ceil * cp
+    if cfg.family in ("dense", "vlm", "moe"):
+        st = DecodeState(kv=kv_shapes(cfg.n_layers, w_attn), conv=(), ssm=(), pos=pos)
+        return _with_sharding_tree(st, specs, mesh)
+    K, dil, N = cfg.d_conv, cfg.d_inner, cfg.ssm_state
+    conv = (
+        jax.ShapeDtypeStruct((cfg.n_layers, batch, K - 1, dil), jnp.bfloat16),
+        jax.ShapeDtypeStruct((cfg.n_layers, batch, K - 1, N), jnp.bfloat16),
+        jax.ShapeDtypeStruct((cfg.n_layers, batch, K - 1, N), jnp.bfloat16),
+    )
+    ssm = jax.ShapeDtypeStruct(
+        (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32)
+    if cfg.family == "ssm":
+        st = DecodeState(kv=(), conv=conv, ssm=ssm, pos=pos)
+    else:
+        n_apps = cfg.n_layers // cfg.hybrid_attn_every
+        st = DecodeState(kv=kv_shapes(n_apps, window), conv=conv, ssm=ssm, pos=pos)
+    return _with_sharding_tree(st, specs, mesh)
+
+
+def _with_sharding_tree(shapes, specs, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def serve_param_specs_shapes(cfg: ArchConfig, topo: MeshTopo, mesh):
+    model = build_model(cfg, topo.tp)
+    groups = model.groups()
+    specs = FP.serve_param_specs(groups, topo)
+    shapes = FP.serve_param_shapes(groups, topo)
+    shapes = jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return model, groups, specs, shapes
+
+
+def make_decode_step(cfg: ArchConfig, mesh, shape: ShapeConfig) -> StepBundle:
+    """decode_step(params, cache, token) -> (local argmax token ids, cache)."""
+    topo = MeshTopo.from_mesh(mesh)
+    model, groups, pspecs, pshapes = serve_param_specs_shapes(cfg, topo, mesh)
+    B = shape.global_batch
+    batch_sharded = B >= topo.dp
+    B_local = B // topo.dp if batch_sharded else B
+    window = shape.seq_len
+    st_specs = decode_state_specs(cfg, topo, batch_sharded)
+    st_shapes = decode_state_shapes(cfg, topo, B, window, mesh)
+
+    def body(params, state, token):
+        store = FP.ServeStore(groups, params, topo)
+        logits, new_state = model.decode_step(store, state, token)
+        # greedy sample across the vocab-parallel logits
+        vl = logits.shape[-1]
+        col0 = jax.lax.axis_index("model") * vl
+        local_max = jnp.max(logits, axis=-1)
+        local_arg = jnp.argmax(logits, axis=-1) + col0
+        gmax = jax.lax.pmax(local_max, "model")
+        cand = jnp.where(local_max >= gmax, local_arg, jnp.int32(2**30))
+        tok = jax.lax.pmin(cand, "model").astype(jnp.int32)
+        return tok, new_state
+
+    dp = _dp_entry(topo) if batch_sharded else None
+    tok_spec = P(dp, None)
+    sm = jax.shard_map(body, mesh=mesh,
+                       in_specs=(pspecs, st_specs, tok_spec),
+                       out_specs=(tok_spec, st_specs), check_vma=False)
+    tok_shape = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                     sharding=NamedSharding(mesh, tok_spec))
+    return StepBundle(
+        fn=jax.jit(sm, donate_argnums=(1,)),
+        input_shapes=(pshapes, st_shapes, tok_shape),
+        helpers=dict(model=model, groups=groups, topo=topo, pspecs=pspecs,
+                     st_specs=st_specs, B_local=B_local),
+    )
+
+
+def make_prefill_step(cfg: ArchConfig, mesh, shape: ShapeConfig) -> StepBundle:
+    """prefill(params, batch) -> (last-position local logits, cache)."""
+    topo = MeshTopo.from_mesh(mesh)
+    model, groups, pspecs, pshapes = serve_param_specs_shapes(cfg, topo, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    batch_sharded = B >= topo.dp
+    B_local = B // topo.dp if batch_sharded else B
+    st_specs = decode_state_specs(cfg, topo, batch_sharded)
+
+    def body(params, batch):
+        store = FP.ServeStore(groups, params, topo)
+        if cfg.enc_dec:
+            memory = model.encode(store, batch["frames"], remat=False)
+            state = model.init_decode_state(memory, batch["frames"].shape[0],
+                                            min(S, cfg.dec_len))
+            # run one decoder start token to produce logits
+            tok0 = jnp.zeros((memory.shape[0], 1), jnp.int32)
+            logits, state = model.decode_step(store, state, tok0)
+            return logits[:, -1], state
+        tokens = batch["tokens"]
+        state = TF.init_decode_state(cfg, topo.tp, tokens.shape[0], S)
+        logits, _aux, state = model.forward(store, tokens, caches=state, remat=True)
+        return logits[:, -1], state
+
+    dp = _dp_entry(topo) if batch_sharded else None
+    if cfg.enc_dec:
+        batch_spec = {"frames": P(dp, None, None)}
+        batch_shapes = {"frames": jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, batch_spec["frames"]))}
+    else:
+        batch_spec = {"tokens": P(dp, None)}
+        batch_shapes = {"tokens": jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=NamedSharding(mesh, batch_spec["tokens"]))}
+    logit_spec = P(dp, "model")
+    sm = jax.shard_map(body, mesh=mesh, in_specs=(pspecs, batch_spec),
+                       out_specs=(logit_spec, st_specs), check_vma=False)
+    return StepBundle(
+        fn=jax.jit(sm),
+        input_shapes=(pshapes, batch_shapes),
+        helpers=dict(model=model, groups=groups, topo=topo, B_local=B_local),
+    )

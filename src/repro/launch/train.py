@@ -1,0 +1,124 @@
+"""Training driver.
+
+CPU-scale real training (reduced configs / llama2-400m) and the config
+surface a cluster launch would use.  Examples:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama2-400m --reduced \\
+      --steps 200 --seq-len 128 --global-batch 8 --dp 2 --tp 2 \\
+      --sync loco --log-every 10
+
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b --reduced \\
+      --sync fp --optimizer adamw
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as CKPT
+from repro.configs.base import ShapeConfig, get_arch, reduced
+from repro.core.loco import SyncConfig
+from repro.core.quantizer import QuantConfig
+from repro.data.synthetic import DataConfig, make_batch_fn, make_whisper_batch_fn
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.steps import RunConfig, make_init, make_train_step
+
+
+def build_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--dp", type=int, default=2)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--pods", type=int, default=0)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--sync", default="loco",
+                    choices=["fp", "loco", "ef", "naive4"])
+    ap.add_argument("--quant-mode", default="block", choices=["block", "fixed"])
+    ap.add_argument("--quant-scale", type=float, default=2.0**17)
+    ap.add_argument("--error-codec", default="f8", choices=["f8", "bf16", "none"])
+    ap.add_argument("--beta", type=float, default=0.5)
+    ap.add_argument("--reset-every", type=int, default=512)
+    ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine")
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    return ap.parse_args(argv)
+
+
+def make_run(args) -> RunConfig:
+    sync = SyncConfig(
+        strategy=args.sync,
+        quant=QuantConfig(mode=args.quant_mode, scale=args.quant_scale,
+                          error_codec=args.error_codec),
+        beta=args.beta,
+        reset_every=args.reset_every,
+        use_kernels=args.use_kernels,
+    )
+    return RunConfig(sync=sync, optimizer=args.optimizer, lr=args.lr,
+                     schedule=args.schedule, warmup_steps=args.warmup,
+                     total_steps=args.steps, microbatch=args.microbatch)
+
+
+def main(argv=None):
+    args = build_args(argv)
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=bool(args.pods > 1))
+    else:
+        mesh = make_local_mesh(dp=args.dp, tp=args.tp,
+                               pods=args.pods if args.pods else None)
+    shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
+    run = make_run(args)
+
+    init_fn, _ = make_init(cfg, run, mesh)
+    chunks, states, opt = init_fn(jax.random.PRNGKey(args.seed))
+    bundle = make_train_step(cfg, run, mesh, shape)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                    global_batch=args.global_batch, seed=args.seed)
+    batch_fn = (make_whisper_batch_fn(dc, cfg.d_model, cfg.dec_len)
+                if cfg.enc_dec else make_batch_fn(dc))
+
+    start = 0
+    if args.ckpt_dir:
+        latest = CKPT.latest_step(args.ckpt_dir)
+        if latest is not None:
+            state = CKPT.restore(args.ckpt_dir, latest,
+                                 {"chunks": chunks, "states": states, "opt": opt})
+            chunks, states, opt = state["chunks"], state["states"], state["opt"]
+            start = latest
+            print(f"restored step {latest}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = batch_fn(jnp.int32(step))
+        chunks, states, opt, m = bundle.fn(chunks, states, opt, jnp.int32(step), batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            tok_s = (step - start + 1) * args.global_batch * args.seq_len / max(dt, 1e-9)
+            print(f"step {step:5d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['gnorm']):.3f} lr={float(m['lr']):.2e} "
+                  f"tok/s={tok_s:,.0f}", flush=True)
+        if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            CKPT.save(args.ckpt_dir, step + 1,
+                      {"chunks": chunks, "states": states, "opt": opt})
+    print(f"done in {time.time()-t0:.1f}s")
+    return float(m["loss"])
+
+
+if __name__ == "__main__":
+    main()

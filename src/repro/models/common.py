@@ -1,0 +1,419 @@
+"""Manual-tensor-parallel layer library.
+
+Conventions (Megatron-style, all inside a fully-manual shard_map):
+
+* activations ``(B, S, d_model)`` are **replicated** across the "model" axis;
+* weights are TP-sharded per their ParamInfo ``tp_dim``;
+* column-parallel matmul -> local partial features; row-parallel matmul ->
+  partial sums, finished by one ``psum("model")`` per block;
+* attention heads are zero-padded to a multiple of TP (padded heads have
+  zero weights -> zero contribution); kv heads are replicated when
+  ``kv < TP`` (see DESIGN.md §5).
+
+The attention is a blockwise online-softmax ("flash"-style) implementation
+in pure jnp so 32k prefill never materializes S x S scores; the same
+function serves decode (Sq = 1 against a ring-buffer KV cache with absolute
+position tracking, which makes full and sliding-window caches uniform).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+TP_AXIS = "model"
+NEG_INF = -1e30
+
+
+def psum_tp(x):
+    return jax.lax.psum(x, TP_AXIS)
+
+
+def tp_rank():
+    return jax.lax.axis_index(TP_AXIS)
+
+
+def tp_size():
+    return jax.lax.axis_size(TP_AXIS)
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x, scale, bias=None, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm(kind: str, x, scale, eps=1e-5):
+    if kind == "rmsnorm":
+        return rmsnorm(x, scale, eps)
+    return layernorm(x, scale, None, eps)
+
+
+# ---------------------------------------------------------------------------
+# parallel linears (activations replicated; no bias, per the assigned archs)
+# ---------------------------------------------------------------------------
+
+def col_linear(x, w):
+    """(.., d) @ (d, f_local) -> (.., f_local); purely local."""
+    return x @ w
+
+
+def row_linear(x_local, w, sp: bool = False):
+    """(.., f_local) @ (f_local, d) -> (.., d).
+
+    sp=False: finish with psum("model") (activations replicated).
+    sp=True : finish with psum_scatter over the sequence dim (Megatron
+    sequence parallelism) -> output is the caller's S/TP shard.
+    """
+    y = x_local @ w
+    if sp:
+        return jax.lax.psum_scatter(y, TP_AXIS, scatter_dimension=1, tiled=True)
+    return psum_tp(y)
+
+
+def sp_gather(x, sp: bool = True):
+    """(B, S/TP, d) activation shard -> (B, S, d) (sequence-parallel exit)."""
+    if not sp:
+        return x
+    return jax.lax.all_gather(x, TP_AXIS, axis=1, tiled=True)
+
+
+def sp_scatter_sum(x_partial, sp: bool = True):
+    """Partial (B, S, d) -> summed (B, S/TP, d) shard (or psum if not sp)."""
+    if not sp:
+        return psum_tp(x_partial)
+    return jax.lax.psum_scatter(x_partial, TP_AXIS, scatter_dimension=1, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 1e4):
+    """x: (B, S, H, hd); positions: (S,) or (B, S) absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, half)
+        ang = ang[None, :, None, :]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention (online softmax)
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(
+    q,                    # (B, Sq, Hl, hd)
+    k,                    # (B, Sk, Hl, hd)  (already expanded to q heads)
+    v,                    # (B, Sk, Hl, hd)
+    q_pos,                # (Sq,) int32 absolute positions of the queries
+    k_pos,                # (Sk,) int32 absolute positions (-1 = empty slot)
+    *,
+    causal: bool = True,
+    window=None,          # int32 scalar or None; k_pos > q_pos - window kept
+    softcap: float | None = None,
+    block_k: int = 512,
+    scale: float | None = None,
+    return_stats: bool = False,
+):
+    B, Sq, Hl, hd = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bk = min(block_k, Sk)
+    while Sk % bk:
+        bk //= 2
+    nblk = Sk // bk
+
+    # keep k/v in their storage dtype (bf16): no full-cache f32 copies; the
+    # score einsum accumulates in f32 via preferred_element_type.
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype).transpose(0, 2, 1, 3)
+    kb = k.transpose(0, 2, 1, 3).reshape(B, Hl, nblk, bk, hd).transpose(2, 0, 1, 3, 4)
+    vb = v.transpose(0, 2, 1, 3).reshape(B, Hl, nblk, bk, hd).transpose(2, 0, 1, 3, 4)
+    kp = k_pos.reshape(nblk, bk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, kpos = xs
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kblk,
+                       preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        valid = kpos[None, :] >= 0
+        if causal:
+            valid = valid & (kpos[None, :] <= q_pos[:, None])
+        if window is not None:
+            valid = valid & (kpos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hl, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hl, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hl, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, kp))
+    if return_stats:
+        return m, l, acc
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq, Hl, hd)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer with absolute positions; uniform full / sliding)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, W, Hl, hd)
+    v: jax.Array      # (B, W, Hl, hd)
+    pos: jax.Array    # (W,) int32 absolute position in each slot, -1 empty
+
+    @staticmethod
+    def create(batch: int, window: int, heads_local: int, head_dim: int, dtype=jnp.bfloat16):
+        return KVCache(
+            k=jnp.zeros((batch, window, heads_local, head_dim), dtype),
+            v=jnp.zeros((batch, window, heads_local, head_dim), dtype),
+            pos=jnp.full((window,), -1, jnp.int32),
+        )
+
+    def append(self, k_new, v_new, start_pos):
+        """Write Sq new entries at absolute positions start_pos + arange(Sq)."""
+        W = self.k.shape[1]
+        Sq = k_new.shape[1]
+        if Sq >= W:  # ring would wrap: only the last W entries survive
+            k_new, v_new = k_new[:, -W:], v_new[:, -W:]
+            start_pos = start_pos + (Sq - W)
+            Sq = W
+        p = start_pos + jnp.arange(Sq, dtype=jnp.int32)
+        slots = p % W
+        k = self.k.at[:, slots].set(k_new.astype(self.k.dtype))
+        v = self.v.at[:, slots].set(v_new.astype(self.v.dtype))
+        pos = self.pos.at[slots].set(p)
+        return KVCache(k, v, pos)
+
+
+# ---------------------------------------------------------------------------
+# vocab-parallel embedding / logits / cross entropy
+# ---------------------------------------------------------------------------
+
+def vocab_parallel_embed(emb, ids, sp: bool = False):
+    """emb: (V_local, d) local slice; ids: (B, S) global token ids.
+
+    sp=True returns the (B, S/TP, d) sequence shard (psum_scatter)."""
+    vl = emb.shape[0]
+    local = ids - tp_rank() * vl
+    ok = (local >= 0) & (local < vl)
+    e = jnp.take(emb, jnp.clip(local, 0, vl - 1), axis=0)
+    e = jnp.where(ok[..., None], e, 0)
+    return sp_scatter_sum(e, sp) if sp else psum_tp(e)
+
+
+def vocab_parallel_logits(x, w_head):
+    """x: (B, S, d); w_head: (d, V_local) -> local logits (B, S, V_local)."""
+    return x @ w_head
+
+
+def vocab_parallel_xent(local_logits, targets, vocab: int, softcap: float | None = None,
+                        z_loss: float = 0.0):
+    """Cross entropy over TP-sharded logits.
+
+    local_logits: (B, S, V_local) (may include padded vocab tail on the last
+    rank -- callers guarantee target ids < vocab, and padded columns are
+    masked here); targets: (B, S) int32.  Returns mean loss (scalar, f32).
+    """
+    lg = local_logits.astype(jnp.float32)
+    if softcap is not None:
+        lg = softcap * jnp.tanh(lg / softcap)
+    vl = lg.shape[-1]
+    col0 = tp_rank() * vl
+    col_ids = col0 + jnp.arange(vl)
+    lg = jnp.where((col_ids < vocab)[None, None, :], lg, NEG_INF)
+
+    # stability max needs no gradient; pmax lacks a diff rule, so gather the
+    # per-rank maxes (all_gather is differentiable) under stop_gradient.
+    m_loc = jax.lax.stop_gradient(jnp.max(lg, axis=-1))
+    m = jnp.max(jax.lax.all_gather(m_loc, TP_AXIS), axis=0)         # (B, S)
+    se = psum_tp(jnp.sum(jnp.exp(lg - m[..., None]), axis=-1))       # (B, S)
+    lse = m + jnp.log(se)
+
+    local_t = targets - col0
+    ok = (local_t >= 0) & (local_t < vl)
+    tl = jnp.take_along_axis(lg, jnp.clip(local_t, 0, vl - 1)[..., None], axis=-1)[..., 0]
+    tl = psum_tp(jnp.where(ok, tl, 0.0))
+    loss = jnp.mean(lse - tl)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse**2)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# head layout helpers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HeadLayout:
+    """Static resolution of GQA head padding / replication for a TP degree."""
+
+    n_heads: int          # original q heads
+    n_kv: int             # original kv heads
+    head_dim: int
+    tp: int
+    h_pad: int            # padded q heads (multiple of tp)
+    kv_pad: int           # padded kv heads (multiple of tp) if sharded
+    kv_sharded: bool      # kv >= tp -> shard; else replicate
+
+    @staticmethod
+    def make(n_heads: int, n_kv: int, head_dim: int, tp: int) -> "HeadLayout":
+        kv_sharded = n_kv >= tp
+        if kv_sharded:
+            kv_pad = pad_to_multiple(n_kv, tp)
+            group = n_heads // n_kv
+            h_pad = kv_pad * group
+        else:
+            kv_pad = n_kv
+            h_pad = pad_to_multiple(n_heads, tp)
+        return HeadLayout(n_heads, n_kv, head_dim, tp, h_pad, kv_pad, kv_sharded)
+
+    @property
+    def hl(self) -> int:  # local q heads
+        return self.h_pad // self.tp
+
+    @property
+    def kvl(self) -> int:  # local kv heads (replicated -> all)
+        return self.kv_pad // self.tp if self.kv_sharded else self.n_kv
+
+    def kv_map(self):
+        """(hl,) indices into the local kv head axis for each local q head."""
+        group = self.n_heads // self.n_kv
+        if self.kv_sharded:
+            # local q head i -> local kv head i // group
+            return jnp.arange(self.hl) // group
+        # kv replicated: map via *global* q index
+        gq = tp_rank() * self.hl + jnp.arange(self.hl)
+        return jnp.clip(gq // group, 0, self.n_kv - 1)
+
+    def kv_map_global(self):
+        """(h_pad,) kv index for every global q head (kv-replicated case)."""
+        group = self.n_heads // self.n_kv
+        return jnp.clip(jnp.arange(self.h_pad) // group, 0, self.n_kv - 1)
+
+
+def expand_kv(k, kv_map):
+    """k: (B, S, KVl, hd) -> (B, S, Hl, hd) by gathering per-q-head kv."""
+    return jnp.take(k, kv_map, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# context-parallel (window-sharded) KV cache
+#
+# When kv_heads < TP the kv projections are replicated, so a naively stored
+# cache costs TP x the memory (156 GiB/device for command-r decode_32k --
+# EXPERIMENTS.md §Perf iteration 1).  Instead the *window* dim is sharded
+# over "model": each rank persists W/TP slots.  Decode gathers the (tiny)
+# query heads across ranks, runs a partial flash pass over the local window,
+# and merges (m, l, acc) stats with pmax/psum -- flash-decoding-style
+# context parallelism.  Total attention work per rank is H x W/TP, identical
+# to the head-parallel H/TP x W split.
+# ---------------------------------------------------------------------------
+
+def cp_degree(lay: "HeadLayout") -> int:
+    return lay.tp if (not lay.kv_sharded and lay.tp > 1) else 1
+
+
+def build_cp_cache(k, v, w_local: int, cp: int, dtype=None):
+    """Prefill: (B, S, KV, hd) fresh keys -> this rank's window shard.
+
+    Global ring slot g holds the latest position p < S with p % W_g == g;
+    rank r owns slots [r*w_local, (r+1)*w_local).  Pure gather.
+    """
+    B, S = k.shape[:2]
+    dtype = dtype or k.dtype
+    w_g = w_local * cp
+    g = tp_rank() * w_local + jnp.arange(w_local, dtype=jnp.int32)
+    kmax = (S - 1 - g) // w_g
+    p = g + kmax * w_g
+    valid = p >= 0
+    pc = jnp.clip(p, 0, S - 1)
+    kc = jnp.take(k, pc, axis=1).astype(dtype)
+    vc = jnp.take(v, pc, axis=1).astype(dtype)
+    zero = jnp.zeros((), dtype)
+    kc = jnp.where(valid[None, :, None, None], kc, zero)
+    vc = jnp.where(valid[None, :, None, None], vc, zero)
+    return KVCache(k=kc, v=vc, pos=jnp.where(valid, p, -1))
+
+
+def cp_append(cache: KVCache, k_new, v_new, p, cp: int) -> KVCache:
+    """Decode: write one token at absolute position p into the owner rank."""
+    w_local = cache.k.shape[1]
+    g = p % (w_local * cp)
+    owner = g // w_local
+    ls = g % w_local
+    k_upd = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), ls, axis=1)
+    v_upd = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), ls, axis=1)
+    pos_upd = jax.lax.dynamic_update_slice(cache.pos, p[None].astype(jnp.int32), (ls,))
+    mine = owner == tp_rank()
+    return KVCache(
+        k=jnp.where(mine, k_upd, cache.k),
+        v=jnp.where(mine, v_upd, cache.v),
+        pos=jnp.where(mine, pos_upd, cache.pos),
+    )
+
+
+def cp_decode_attention(q, cache: KVCache, kv_map_global, q_pos, *,
+                        window=None, softcap=None):
+    """q: (B, 1, Hl, hd) local query heads -> (B, 1, Hl, hd).
+
+    All query heads attend to this rank's window shard; stats merge across
+    "model".  Decode-only (uses pmax, which has no grad rule).
+    """
+    B, Sq, Hl, hd = q.shape
+    q_all = jax.lax.all_gather(q, TP_AXIS, axis=2, tiled=True)  # (B,1,H,hd)
+    kq = expand_kv(cache.k, kv_map_global)
+    vq = expand_kv(cache.v, kv_map_global)
+    m, l, acc = blockwise_attention(
+        q_all, kq, vq, q_pos, cache.pos, causal=True, window=window,
+        softcap=softcap, return_stats=True)
+    m_g = jax.lax.pmax(m, TP_AXIS)
+    w = jnp.exp(m - m_g)
+    l_g = psum_tp(l * w)
+    acc_g = psum_tp(acc * w[..., None])
+    out_all = acc_g / jnp.maximum(l_g[..., None], 1e-30)   # (B, H, 1, hd)
+    out = jax.lax.dynamic_slice_in_dim(out_all, tp_rank() * Hl, Hl, axis=1)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)       # (B, 1, Hl, hd)

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts layers with two TPU sharding schemes.
+
+* ``tp_dense`` (mixtral, 8 experts): every rank holds a TP slice of *every*
+  expert's FFN (col/row parallel over d_ff); dispatch is local
+  (scatter/gather by capacity slot), combine ends in the block psum.
+* ``ep_a2a``   (qwen3, 128 experts): experts are sharded over the "model"
+  axis (E/TP per rank, full d_ff each).  Tokens are sharded over "model"
+  for the MoE interior, routed to expert-owning ranks with an explicit
+  ``all_to_all``, computed, returned with the inverse ``all_to_all``, and
+  re-replicated with an ``all_gather``.  This is the DeepSpeed-MoE/GShard
+  schedule mapped onto the TP axis -- the collective-heavy path the paper's
+  technique cares about (activation traffic stays bf16; LoCo compresses only
+  dp-axis gradient traffic; see DESIGN.md §6).
+
+Routing is top-k softmax with renormalized weights and capacity-based token
+dropping (GShard); aux load-balance loss (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.common import TP_AXIS
+
+
+def _activation(kind: str, a, b=None):
+    if kind == "swiglu":
+        return jax.nn.silu(a) * b
+    if kind == "geglu":
+        return jax.nn.gelu(a) * b
+    return jax.nn.gelu(a)
+
+
+def route(x2d, w_router, top_k: int, n_experts: int):
+    """x2d: (T, d) -> (weights (T,k), experts (T,k), aux_metrics dict)."""
+    logits = (x2d.astype(jnp.float32) @ w_router.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, top_k)
+    topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+    # Switch aux loss: E * sum_e f_e * P_e
+    T = x2d.shape[0]
+    dispatch_frac = jnp.zeros((n_experts,), jnp.float32).at[topi.reshape(-1)].add(1.0) / (T * top_k)
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = n_experts * jnp.sum(dispatch_frac * prob_frac)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return topv, topi, {"aux": aux, "z": z}
+
+
+def _dispatch_indices(topi, n_experts: int, capacity: int):
+    """Capacity-slot assignment via sort.
+
+    topi: (T, k) expert choice per (token, slot).
+    Returns (slot (T*k,), valid (T*k,)): slot in [0, E*capacity) for tokens
+    that fit their expert's capacity, -1 (and valid=False) for dropped.
+    """
+    Tk = topi.size
+    e_flat = topi.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    # rank within expert segment
+    seg_start = jnp.searchsorted(e_sorted, e_sorted, side="left")
+    rank = jnp.arange(Tk) - seg_start
+    ok = rank < capacity
+    slot_sorted = jnp.where(ok, e_sorted * capacity + rank, -1)
+    # invert the permutation
+    slot = jnp.zeros((Tk,), jnp.int32).at[order].set(slot_sorted.astype(jnp.int32))
+    valid = slot >= 0
+    return slot, valid
+
+
+def _expert_ffn(xe, w1, w3, w2, mlp_kind):
+    """xe: (E_local, C, d); w1/w3: (E_local, d, f_l); w2: (E_local, f_l, d)."""
+    a = jnp.einsum("ecd,edf->ecf", xe, w1)
+    if w3 is not None:
+        b = jnp.einsum("ecd,edf->ecf", xe, w3)
+        h = _activation(mlp_kind, a, b)
+    else:
+        h = _activation(mlp_kind, a)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def moe_block(x, p, cfg, *, deterministic_capacity: int | None = None,
+              sp: bool = False):
+    """x: (B, S, d) replicated over TP -> (y, aux_losses).
+
+    p: dict with router (d, E), w1/w3 (E, d, f_local) or (E_local, d, f),
+    w2 likewise, per cfg.moe_impl.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    x2d = x.reshape(B * S, d)
+
+    if cfg.moe_impl == "tp_dense":
+        T = B * S
+        cap = deterministic_capacity or max(1, int(math.ceil(T * k / E * cfg.capacity_factor)))
+        topv, topi, aux = route(x2d, p["router"], k, E)
+        slot, valid = _dispatch_indices(topi, E, cap)
+        tok = jnp.repeat(jnp.arange(T), k)
+        xe = jnp.zeros((E * cap, d), x.dtype)
+        xe = xe.at[jnp.where(valid, slot, E * cap - 1)].add(
+            jnp.where(valid[:, None], x2d[tok], 0)
+        )
+        xe = xe.reshape(E, cap, d)
+        ye = _expert_ffn(xe, p["w1"], p.get("w3"), p["w2"], cfg.mlp)  # partial (f sliced)
+        ye = ye.reshape(E * cap, d)
+        y_tok = jnp.where(valid[:, None], ye[jnp.clip(slot, 0, E * cap - 1)], 0)
+        y2d = jnp.zeros((T, d), x.dtype).at[tok].add(
+            y_tok * topv.reshape(-1)[:, None].astype(x.dtype)
+        )
+        if sp:  # sequence-parallel exit: scatter the summed tokens over TP
+            y = C.sp_scatter_sum(y2d.reshape(B, S, d), True)
+            return y, aux
+        y2d = C.psum_tp(y2d)  # finish row-parallel d_ff slicing
+        return y2d.reshape(B, S, d), aux
+
+    # ---- ep_a2a: experts sharded over TP, tokens sharded for the interior --
+    tp = C.tp_size()
+    El = E // tp
+    T0 = B * S
+    Tpad = -(-T0 // tp) * tp  # pad tokens so they split evenly over TP
+    if Tpad != T0:
+        x2d = jnp.concatenate([x2d, jnp.zeros((Tpad - T0, d), x2d.dtype)], axis=0)
+    Tl = Tpad // tp
+    r = C.tp_rank()
+    xs = jax.lax.dynamic_slice_in_dim(x2d, r * Tl, Tl, axis=0)  # my token slice
+
+    cap = deterministic_capacity or max(1, int(math.ceil(Tl * k / E * cfg.capacity_factor)))
+    topv, topi, aux = route(xs, p["router"], k, E)
+    slot, valid = _dispatch_indices(topi, E, cap)
+    tok = jnp.repeat(jnp.arange(Tl), k)
+    xe = jnp.zeros((E * cap, d), x.dtype)
+    xe = xe.at[jnp.where(valid, slot, E * cap - 1)].add(
+        jnp.where(valid[:, None], xs[tok], 0)
+    )
+    # (E, cap, d) -> (tp, El, cap, d) -> a2a: receive my El experts from all ranks
+    xe = xe.reshape(tp, El, cap, d)
+    xe = jax.lax.all_to_all(xe, TP_AXIS, split_axis=0, concat_axis=0)  # (tp, El, cap, d)
+    xe = xe.transpose(1, 0, 2, 3).reshape(El, tp * cap, d)
+    ye = _expert_ffn(xe, p["w1"], p.get("w3"), p["w2"], cfg.mlp)
+    ye = ye.reshape(El, tp, cap, d).transpose(1, 0, 2, 3)  # (tp, El, cap, d)
+    ye = jax.lax.all_to_all(ye, TP_AXIS, split_axis=0, concat_axis=0)
+    ye = ye.reshape(E * cap, d)
+    y_tok = jnp.where(valid[:, None], ye[jnp.clip(slot, 0, E * cap - 1)], 0)
+    ys = jnp.zeros((Tl, d), x.dtype).at[tok].add(
+        y_tok * topv.reshape(-1)[:, None].astype(x.dtype)
+    )
+    if sp:
+        # sequence parallelism composes with EP for free: the per-rank token
+        # slice IS the sequence shard -- skip the re-replicating all_gather.
+        assert Tpad == T0, "sp requires (B*S) % TP == 0"
+        return ys.reshape(B, S // tp, d), aux
+    y2d = jax.lax.all_gather(ys, TP_AXIS, tiled=True)  # re-replicate tokens
+    return y2d[:T0].reshape(B, S, d), aux

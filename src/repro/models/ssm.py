@@ -1,0 +1,179 @@
+"""Mamba2 (SSD -- state-space duality) mixer, TP-sharded over ssm heads.
+
+The chunked SSD algorithm [arXiv:2405.21060] in matmul form: intra-chunk
+attention-like matmuls feed the MXU; the inter-chunk recurrence is a short
+``lax.scan`` over T/Q chunks.  Heads are sharded over "model" (d_inner/TP
+channels local); B/C projections (ngroups=1) are replicated; the gated norm
+is per-head (GroupNorm-style) so it needs no cross-TP statistics.
+
+``ssd_reference`` is the O(T) sequential recurrence oracle used by tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+CHUNK = 256
+
+
+def _segsum_lower(cs):
+    """cs: (..., Q) inclusive cumsum of dA.  Returns L (..., Q, Q) with
+    L[i, j] = exp(cs_i - cs_j) for j <= i else 0."""
+    diff = cs[..., :, None] - cs[..., None, :]
+    Q = cs.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(X, dt, A, Bm, Cm, init_state=None):
+    """Chunked SSD scan.
+
+    X:  (B, T, H, P) float32   inputs per head
+    dt: (B, T, H)    float32   positive step sizes (already softplused)
+    A:  (H,)         float32   negative per-head decay rates
+    Bm: (B, T, N)    float32   input projection (ngroups=1, broadcast to H)
+    Cm: (B, T, N)    float32   output projection
+    Returns (Y (B, T, H, P), final_state (B, H, N, P)).
+    """
+    Bb, T, H, P = X.shape
+    N = Bm.shape[-1]
+    Q = min(CHUNK, T)
+    while T % Q:
+        Q //= 2
+    nc = T // Q
+
+    dA = dt * A[None, None, :]                       # (B, T, H) negative
+    dtX = X * dt[..., None]                          # (B, T, H, P)
+
+    # reshape into chunks
+    dAc = dA.reshape(Bb, nc, Q, H)
+    cs = jnp.cumsum(dAc, axis=2)                     # inclusive
+    Bc = Bm.reshape(Bb, nc, Q, N)
+    Cc = Cm.reshape(Bb, nc, Q, N)
+    Xc = dtX.reshape(Bb, nc, Q, H, P)
+
+    # --- intra-chunk (quadratic within Q, shared across heads for B.C) -----
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)        # (B, nc, Q, Q)
+    L = _segsum_lower(cs.transpose(0, 1, 3, 2))      # (B, nc, H, Q, Q)
+    M = G[:, :, None] * L                            # (B, nc, H, Q, Q)
+    Y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, Xc)
+
+    # --- chunk summary states ----------------------------------------------
+    decay_last = jnp.exp(cs[:, :, -1:, :] - cs)      # (B, nc, Q, H)
+    S_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_last, Xc)
+
+    # --- inter-chunk recurrence ---------------------------------------------
+    chunk_decay = jnp.exp(jnp.sum(dAc, axis=2))      # (B, nc, H)
+    S0 = (jnp.zeros((Bb, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(S, xs):
+        dec, Sc = xs                                  # (B, H), (B, H, N, P)
+        S_new = S * dec[..., None, None] + Sc
+        return S_new, S                               # emit state *entering* the chunk
+
+    (S_final, S_prevs) = jax.lax.scan(
+        body, S0, (chunk_decay.transpose(1, 0, 2), S_chunk.transpose(1, 0, 2, 3, 4))
+    )
+    S_prev = S_prevs.transpose(1, 0, 2, 3, 4)        # (B, nc, H, N, P)
+
+    # --- inter-chunk contribution -------------------------------------------
+    instate_decay = jnp.exp(cs)                      # (B, nc, Q, H)
+    Y_off = jnp.einsum("bcin,bchnp,bcih->bcihp", Cc, S_prev, instate_decay)
+
+    Y = (Y_diag + Y_off).reshape(Bb, T, H, P)
+    return Y, S_final
+
+
+def ssd_step(S, x, dt, A, Bv, Cv):
+    """One decode step.  S: (B, H, N, P); x: (B, H, P); dt: (B, H);
+    Bv/Cv: (B, N).  Returns (y (B, H, P), S_new)."""
+    dA = jnp.exp(dt * A[None, :])                    # (B, H)
+    S_new = S * dA[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bv, x * dt[..., None]
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cv, S_new)
+    return y, S_new
+
+
+def ssd_reference(X, dt, A, Bm, Cm):
+    """Sequential recurrence oracle (tests only)."""
+    Bb, T, H, P = X.shape
+    N = Bm.shape[-1]
+    S = jnp.zeros((Bb, H, N, P), jnp.float32)
+    ys = []
+    for t in range(T):
+        y, S = ssd_step(S, X[:, t], dt[:, t], A, Bm[:, t], Cm[:, t])
+        ys.append(y)
+    return jnp.stack(ys, axis=1), S
+
+
+# ---------------------------------------------------------------------------
+# the full mamba2 mixer (projections, conv, gated norm)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv.  x: (B, T, Ch); w: (K, Ch).
+    cache: (B, K-1, Ch) trailing context or None (zeros).
+    Returns (y (B, T, Ch), new_cache (B, K-1, Ch))."""
+    K = w.shape[0]
+    B, T, Ch = x.shape
+    ctx = jnp.zeros((B, K - 1, Ch), x.dtype) if cache is None else cache.astype(x.dtype)
+    xp = jnp.concatenate([ctx, x], axis=1)
+    y = sum(xp[:, i : i + T] * w[i][None, None, :] for i in range(K))
+    new_cache = xp[:, T:]
+    return y, new_cache
+
+
+def mamba2_mixer(x, p, cfg, *, conv_cache=None, ssm_state=None, single_step=False,
+                 sp=False):
+    """x: (B, T, d) replicated -> (y (B, T, d), (conv_cache, ssm_state)).
+
+    p: dict of local params -- w_z (d, dil), w_x (d, dil), w_B (d, N),
+    w_C (d, N), w_dt (d, Hl), dt_bias (Hl,), A_log (Hl,), D (Hl,),
+    conv_x (K, dil), conv_B (K, N), conv_C (K, N), norm (dil,),
+    w_out (dil, d).
+    """
+    B, T, d = x.shape
+    P = cfg.ssm_headdim
+    N = cfg.ssm_state
+    z = C.col_linear(x, p["w_z"])                      # (B, T, dil)
+    xc = C.col_linear(x, p["w_x"])
+    Bm = C.col_linear(x, p["w_B"]).astype(jnp.float32) # replicated (B, T, N)
+    Cm = C.col_linear(x, p["w_C"]).astype(jnp.float32)
+    dt = C.col_linear(x, p["w_dt"]).astype(jnp.float32)
+
+    if single_step:
+        ccx, ccB, ccC = conv_cache
+        xc, ccx = _causal_conv(xc, p["conv_x"], ccx)
+        Bm, ccB = _causal_conv(Bm, p["conv_B"], ccB)
+        Cm, ccC = _causal_conv(Cm, p["conv_C"], ccC)
+    else:
+        xc, ccx = _causal_conv(xc, p["conv_x"])
+        Bm, ccB = _causal_conv(Bm, p["conv_B"])
+        Cm, ccC = _causal_conv(Cm, p["conv_C"])
+    xc = jax.nn.silu(xc)
+    Bm = jax.nn.silu(Bm.astype(jnp.float32))
+    Cm = jax.nn.silu(Cm.astype(jnp.float32))
+
+    Hl = p["A_log"].shape[0]
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32)[None, None])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    X = xc.astype(jnp.float32).reshape(B, T, Hl, P)
+
+    if single_step:
+        y, S = ssd_step(ssm_state, X[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0])
+        y = y[:, None]                                 # (B, 1, Hl, P)
+    else:
+        y, S = ssd_chunked(X, dt, A, Bm, Cm, init_state=ssm_state)
+
+    y = y + X * p["D"].astype(jnp.float32)[None, None, :, None]
+    # gated per-head RMSNorm (GroupNorm-style; TP-local by construction)
+    g = y * jax.nn.silu(z.astype(jnp.float32)).reshape(B, T, Hl, P)
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + 1e-5)
+    g = (g.reshape(B, T, Hl * P) * p["normg"].astype(jnp.float32)[None, None]).astype(x.dtype)
+    out = C.row_linear(g, p["w_out"], sp=sp)           # psum / seq-scatter
+    return out, ((ccx, ccB, ccC), S)

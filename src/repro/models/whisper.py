@@ -1,0 +1,214 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The mel-spectrogram + conv1d frontend is the **stubbed modality frontend**
+(assignment carve-out): ``input_specs`` provides pre-computed frame
+embeddings of shape (B, frames, d_model).  The encoder is bidirectional
+self-attention over frames with sinusoidal positions; the decoder is a
+causal LM with cross-attention to the encoder memory.
+
+Shape mapping (DESIGN.md §6): seq_len = encoder frames; decoder length is
+``cfg.dec_len`` for train/prefill; ``decode_*`` steps one decoder token
+against the cached encoder memory + decoder self-attention KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.flatparam import ParamGroup, ParamInfo
+from repro.models import common as C
+from repro.models.common import HeadLayout, KVCache
+from repro.models.transformer import _pi, head_layout, vocab_padded
+
+
+def sinusoidal(positions, d):
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_block_infos(cfg: ArchConfig, lay: HeadLayout):
+    d, f, hd = cfg.d_model, cfg.d_ff, lay.head_dim
+    kv_tp = 1 if lay.kv_sharded else None
+    return [
+        _pi("norm1", (d,), init="ones", decay=False),
+        _pi("wq", (d, lay.h_pad * hd), tp_dim=1),
+        _pi("wk", (d, lay.kv_pad * hd), tp_dim=kv_tp),
+        _pi("wv", (d, lay.kv_pad * hd), tp_dim=kv_tp),
+        _pi("wo", (lay.h_pad * hd, d), tp_dim=0),
+        _pi("norm2", (d,), init="ones", decay=False),
+        _pi("w1", (d, f), tp_dim=1),
+        _pi("w2", (f, d), tp_dim=0),
+    ]
+
+
+def _dec_block_infos(cfg: ArchConfig, lay: HeadLayout):
+    d, hd = cfg.d_model, lay.head_dim
+    kv_tp = 1 if lay.kv_sharded else None
+    cross = [
+        _pi("normx", (d,), init="ones", decay=False),
+        _pi("xq", (d, lay.h_pad * hd), tp_dim=1),
+        _pi("xk", (d, lay.kv_pad * hd), tp_dim=kv_tp),
+        _pi("xv", (d, lay.kv_pad * hd), tp_dim=kv_tp),
+        _pi("xo", (lay.h_pad * hd, d), tp_dim=0),
+    ]
+    return _enc_block_infos(cfg, lay) + cross
+
+
+def _mha(p, x, kv_src, lay, positions_q, positions_k, causal, names=("wq", "wk", "wv", "wo"),
+         cache: KVCache | None = None):
+    B, Sq, d = x.shape
+    hd = lay.head_dim
+    nq, nk, nv, no = names
+    q = C.col_linear(x, p[nq]).reshape(B, Sq, lay.hl, hd)
+    k = C.col_linear(kv_src, p[nk]).reshape(B, kv_src.shape[1], lay.kvl, hd)
+    v = C.col_linear(kv_src, p[nv]).reshape(B, kv_src.shape[1], lay.kvl, hd)
+    kv_map = lay.kv_map()
+    if cache is not None:
+        cache = cache.append(k, v, positions_q[0])
+        kq, vq = C.expand_kv(cache.k, kv_map), C.expand_kv(cache.v, kv_map)
+        kpos = cache.pos
+    else:
+        kq, vq = C.expand_kv(k, kv_map), C.expand_kv(v, kv_map)
+        kpos = positions_k
+    out = C.blockwise_attention(q, kq, vq, positions_q, kpos, causal=causal)
+    out = out.reshape(B, Sq, lay.hl * hd)
+    return C.row_linear(out, p[no]), cache
+
+
+class WhisperDecodeState(NamedTuple):
+    self_kv: tuple          # stacked decoder self-attn KVCache arrays
+    memory: jax.Array       # (B, frames, d) encoder output (bf16)
+    pos: jax.Array          # next decoder position
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecLM:
+    cfg: ArchConfig
+    tp: int
+
+    def groups(self) -> list[ParamGroup]:
+        cfg = self.cfg
+        lay = head_layout(cfg, self.tp)
+        vp = vocab_padded(cfg, self.tp)
+        d = cfg.d_model
+        return [
+            ParamGroup("embed", (
+                _pi("tok", (vp, d), tp_dim=0, init="embed", init_scale=0.02),
+                _pi("pos_dec", (cfg.dec_len, d), init="embed", init_scale=0.01),
+            )),
+            ParamGroup("enc_block", tuple(_enc_block_infos(cfg, lay)), n_layers=cfg.enc_layers),
+            ParamGroup("dec_block", tuple(_dec_block_infos(cfg, lay)), n_layers=cfg.n_layers),
+            ParamGroup("final", (
+                _pi("norm_enc", (d,), init="ones", decay=False),
+                _pi("norm_f", (d,), init="ones", decay=False),
+            )),
+        ]
+
+    # ---- encoder -------------------------------------------------------------
+    def encode(self, store, frames, remat: bool = True):
+        """frames: (B, T_f, d) stub embeddings -> memory (B, T_f, d)."""
+        cfg = self.cfg
+        lay = head_layout(cfg, self.tp)
+        Tf = frames.shape[1]
+        pos = jnp.arange(Tf, dtype=jnp.int32)
+        x = frames.astype(jnp.bfloat16) + sinusoidal(pos, cfg.d_model)[None].astype(jnp.bfloat16)
+        xs = store.scan_xs("enc_block")
+
+        def body(xc, xs_slice):
+            p = store.materialize_slice("enc_block", xs_slice)
+            h = C.norm(cfg.norm, xc, p["norm1"])
+            a, _ = _mha(p, h, h, lay, pos, pos, causal=False)
+            xc = xc + a
+            h = C.norm(cfg.norm, xc, p["norm2"])
+            xc = xc + C.row_linear(jax.nn.gelu(C.col_linear(h, p["w1"])), p["w2"])
+            return xc, None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, xs)
+        return C.norm(cfg.norm, x, store.group("final")["norm_enc"])
+
+    # ---- decoder over a full target sequence ----------------------------------
+    def decode_seq(self, store, memory, tokens, remat: bool = True):
+        cfg = self.cfg
+        lay = head_layout(cfg, self.tp)
+        B, S = tokens.shape
+        emb = store.group("embed")
+        x = C.vocab_parallel_embed(emb["tok"], tokens)
+        x = x + emb["pos_dec"][None, :S].astype(x.dtype)
+        pos = jnp.arange(S, dtype=jnp.int32)
+        mpos = jnp.arange(memory.shape[1], dtype=jnp.int32)
+        xs = store.scan_xs("dec_block")
+
+        def body(xc, xs_slice):
+            p = store.materialize_slice("dec_block", xs_slice)
+            h = C.norm(cfg.norm, xc, p["norm1"])
+            a, _ = _mha(p, h, h, lay, pos, pos, causal=True)
+            xc = xc + a
+            h = C.norm(cfg.norm, xc, p["normx"])
+            a, _ = _mha(p, h, memory, lay, pos, mpos, causal=False,
+                        names=("xq", "xk", "xv", "xo"))
+            xc = xc + a
+            h = C.norm(cfg.norm, xc, p["norm2"])
+            xc = xc + C.row_linear(jax.nn.gelu(C.col_linear(h, p["w1"])), p["w2"])
+            return xc, None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, xs)
+        x = C.norm(cfg.norm, x, store.group("final")["norm_f"])
+        logits = C.vocab_parallel_logits(x, emb["tok"].T)  # tied head
+        return logits
+
+    def loss_fn(self, store, batch, remat: bool = True):
+        memory = self.encode(store, batch["frames"], remat)
+        tokens = batch["tokens"]
+        logits = self.decode_seq(store, memory, tokens[:, :-1], remat)
+        loss = C.vocab_parallel_xent(logits, tokens[:, 1:], self.cfg.vocab)
+        return loss, {"ce": loss}
+
+    # ---- incremental decode ----------------------------------------------------
+    def init_decode_state(self, memory, batch_local: int, window: int):
+        lay = head_layout(self.cfg, self.tp)
+        kv = KVCache.create(batch_local, window, lay.kvl, lay.head_dim)
+        kv = jax.tree.map(lambda a: jnp.stack([a] * self.cfg.n_layers), kv)
+        return WhisperDecodeState(self_kv=tuple(kv), memory=memory, pos=jnp.int32(0))
+
+    def decode_step(self, store, state: WhisperDecodeState, token):
+        cfg = self.cfg
+        lay = head_layout(cfg, self.tp)
+        emb = store.group("embed")
+        x = C.vocab_parallel_embed(emb["tok"], token)
+        pidx = jnp.minimum(state.pos, cfg.dec_len - 1)
+        x = x + jax.lax.dynamic_slice_in_dim(emb["pos_dec"], pidx, 1, axis=0)[None].astype(x.dtype)
+        pos = state.pos[None]
+        memory = state.memory.astype(jnp.bfloat16)
+        mpos = jnp.arange(memory.shape[1], dtype=jnp.int32)
+        xs = store.scan_xs("dec_block")
+
+        def body(xc, sl):
+            xs_slice, kv = sl
+            p = store.materialize_slice("dec_block", xs_slice)
+            h = C.norm(cfg.norm, xc, p["norm1"])
+            a, nc = _mha(p, h, h, lay, pos, pos, causal=True, cache=KVCache(*kv))
+            xc = xc + a
+            h = C.norm(cfg.norm, xc, p["normx"])
+            a, _ = _mha(p, h, memory, lay, pos, mpos, causal=False,
+                        names=("xq", "xk", "xv", "xo"))
+            xc = xc + a
+            h = C.norm(cfg.norm, xc, p["norm2"])
+            xc = xc + C.row_linear(jax.nn.gelu(C.col_linear(h, p["w1"])), p["w2"])
+            return xc, tuple(nc)
+
+        x, new_kv = jax.lax.scan(body, x, (xs, state.self_kv))
+        x = C.norm(cfg.norm, x, store.group("final")["norm_f"])
+        logits = C.vocab_parallel_logits(x, emb["tok"].T)
+        return logits, WhisperDecodeState(self_kv=tuple(new_kv), memory=state.memory,
+                                          pos=state.pos + 1)

@@ -1,0 +1,233 @@
+"""Optimizers (optax-free, pytree-generic, shard-friendly).
+
+All optimizers are written as ``(init, update)`` pairs over arbitrary
+pytrees of fp32 arrays; in the FSDP runtime they operate directly on the
+flat master chunks (so Adam moments etc. are ZeRO-sharded for free).
+
+Paper context: LoCo is optimizer-agnostic (its Table 3 pairs it with Adam,
+AdamW and Adafactor; Theorems 1-2 cover SGD and the Adam family).  The
+``decay_mask`` argument carries the per-leaf weight-decay mask derived from
+ParamInfo.decay.
+
+Note: adafactor here is the non-factored variant when given flat chunks
+(factored row/col statistics need the logical matrix shape, which the flat
+FSDP layout erases -- same compromise real FSDP deployments make); the
+factored path engages automatically for leaves with ndim >= 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]  # (grads, state, params, step, lr, mask) -> (new_params, new_state)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def _apply_decay(p, g, lr, wd, m):
+    return g + (wd * m) * p if wd else g
+
+
+# ---------------------------------------------------------------------------
+
+def sgd(momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    """State is a tuple of chunk-mirroring trees (uniform across optimizers,
+    which keeps FSDP sharding specs trivial -- see launch/steps.py)."""
+
+    def init(params):
+        if momentum:
+            return (_tmap(jnp.zeros_like, params),)
+        return ()
+
+    def update(grads, state, params, step, lr, mask):
+        del step
+        grads = _tmap(lambda p, g, m: _apply_decay(p, g, lr, weight_decay, m), params, grads, mask)
+        if momentum:
+            buf = _tmap(lambda b, g: momentum * b + g, state[0], grads)
+            state = (buf,)
+            upd = buf
+        else:
+            upd = grads
+        new_params = _tmap(lambda p, u: p - lr * u, params, upd)
+        return new_params, state
+
+    return Optimizer(init, update)
+
+
+def adam(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    decoupled: bool = False,
+) -> Optimizer:
+    """Adam (paper Eqn. 10 family); decoupled=True gives AdamW."""
+
+    def init(params):
+        return (_tmap(jnp.zeros_like, params), _tmap(jnp.zeros_like, params))
+
+    def update(grads, state, params, step, lr, mask):
+        m, v = state
+        if weight_decay and not decoupled:
+            grads = _tmap(lambda p, g, mk: g + weight_decay * mk * p, params, grads, mask)
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g, m, grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * g * g, v, grads)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(p, m_, v_, mk):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and decoupled:
+                u = u + weight_decay * mk * p
+            return p - lr * u
+
+        new_params = _tmap(upd, params, m, v, mask)
+        return new_params, (m, v)
+
+    return Optimizer(init, update)
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    return adam(b1, b2, eps, weight_decay, decoupled=True)
+
+
+def lamb(b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.01) -> Optimizer:
+    """LAMB: Adam update with layerwise trust-ratio scaling (per leaf)."""
+
+    def init(params):
+        return (_tmap(jnp.zeros_like, params), _tmap(jnp.zeros_like, params))
+
+    def update(grads, state, params, step, lr, mask):
+        m, v = state
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g, m, grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * g * g, v, grads)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(p, m_, v_, mk):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + weight_decay * mk * p
+            wn = jnp.linalg.norm(p)
+            un = jnp.linalg.norm(u)
+            trust = jnp.where((wn > 0) & (un > 0), wn / jnp.maximum(un, 1e-12), 1.0)
+            return p - lr * trust * u
+
+        new_params = _tmap(upd, params, m, v, mask)
+        return new_params, (m, v)
+
+    return Optimizer(init, update)
+
+
+def adafactor(
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    decay_rate: float = 0.8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adafactor (Shazeer & Stern); factored second moment for ndim>=2 leaves."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        pairs = []
+        for p in jax.tree.leaves(params):
+            if _factored(p):
+                pairs.append((jnp.zeros(p.shape[:-1], p.dtype),
+                              jnp.zeros(p.shape[:-2] + p.shape[-1:], p.dtype)))
+            else:
+                pairs.append((jnp.zeros_like(p), jnp.zeros((0,), p.dtype)))
+        return tuple(pairs)  # flat, aligned with tree.leaves(params)
+
+    def update(grads, state, params, step, lr, mask):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t**-decay_rate
+        p_leaves, tdef = jax.tree.flatten(params)
+        g_leaves = jax.tree.leaves(grads)
+        m_leaves = jax.tree.leaves(mask)
+
+        new_p, new_s = [], []
+        for p, g, (vr, vc), mk in zip(p_leaves, g_leaves, state, m_leaves):
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = g * jax.lax.rsqrt(r)[..., None] * jax.lax.rsqrt(vc)[..., None, :]
+            else:
+                vr = beta2 * vr + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(vr)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * mk * p
+            new_p.append(p - lr * u)
+            new_s.append((vr, vc))
+        return jax.tree.unflatten(tdef, new_p), tuple(new_s)
+
+    return Optimizer(init, update)
+
+
+def adafactor_flat(
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    decay_rate: float = 0.8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adafactor with a non-factored second moment (the FSDP flat-chunk
+    variant -- factored row/col stats need the logical matrix shape; see
+    module docstring).  State: one chunk-mirroring tree."""
+
+    def init(params):
+        return (_tmap(jnp.zeros_like, params),)
+
+    def update(grads, state, params, step, lr, mask):
+        (v,) = state
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t**-decay_rate
+        v = _tmap(lambda v_, g: beta2 * v_ + (1 - beta2) * (g * g + eps), v, grads)
+
+        def upd(p, g, v_, mk):
+            u = g * jax.lax.rsqrt(v_)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * mk * p
+            return p - lr * u
+
+        new_params = _tmap(upd, params, grads, v, mask)
+        return new_params, (v,)
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS: dict[str, Callable[..., Optimizer]] = {
+    "sgd": sgd,
+    "adam": adam,
+    "adamw": adamw,
+    "lamb": lamb,
+    "adafactor": adafactor,        # reference / simulation path (factored)
+    "adafactor_flat": adafactor_flat,  # FSDP runtime path
+}
+
+
+def global_grad_norm(grads) -> jax.Array:
+    leaves = jax.tree.leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float, norm: jax.Array | None = None):
+    n = global_grad_norm(grads) if norm is None else norm
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), n

@@ -1,0 +1,58 @@
+"""Learning-rate schedules: linear warmup + {constant, cosine, WSD}.
+
+WSD (warmup-stable-decay) is included because the assigned minicpm-2b
+config trains with it [arXiv:2404.06395].
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def _warmup(step, warmup_steps):
+    return jnp.minimum(1.0, (step + 1.0) / jnp.maximum(warmup_steps, 1))
+
+
+def constant(lr: float, warmup_steps: int = 0) -> Schedule:
+    def f(step):
+        return lr * _warmup(step.astype(jnp.float32), warmup_steps)
+
+    return f
+
+
+def cosine(lr: float, total_steps: int, warmup_steps: int = 0, min_ratio: float = 0.1) -> Schedule:
+    def f(step):
+        s = step.astype(jnp.float32)
+        w = _warmup(s, warmup_steps)
+        prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * w * cos
+
+    return f
+
+
+def wsd(lr: float, total_steps: int, warmup_steps: int = 0, decay_frac: float = 0.1,
+        min_ratio: float = 0.01) -> Schedule:
+    """Warmup -> Stable (constant lr) -> Decay (exponential tail), per minicpm."""
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        w = _warmup(s, warmup_steps)
+        decay_start = total_steps * (1.0 - decay_frac)
+        prog = jnp.clip((s - decay_start) / jnp.maximum(total_steps - decay_start, 1), 0.0, 1.0)
+        decay = jnp.exp(jnp.log(jnp.maximum(min_ratio, 1e-6)) * prog)
+        return lr * w * decay
+
+    return f
+
+
+SCHEDULES = {"constant": constant, "cosine": cosine, "wsd": wsd}
+
+
+def make_schedule(name: str, lr: float, total_steps: int, warmup_steps: int) -> Schedule:
+    if name == "constant":
+        return constant(lr, warmup_steps)
+    return SCHEDULES[name](lr, total_steps, warmup_steps)

@@ -1,0 +1,26 @@
+"""Test harness: 8 CPU host devices so distributed behavior is exercised.
+
+(This is deliberately 8, not the dry-run's 512 -- see launch/dryrun.py for
+the production-mesh device count, which stays local to that entrypoint.)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)
+
+import pytest  # noqa: E402
+
+from repro.launch.mesh import make_local_mesh  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh22():
+    return make_local_mesh(dp=2, tp=2)
+
+
+@pytest.fixture(scope="session")
+def mesh_pod():
+    return make_local_mesh(dp=2, tp=2, pods=2)

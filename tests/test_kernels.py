@@ -1,0 +1,82 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import hypothesis
+import hypothesis.strategies as hst
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import loco_quant as LQ
+from repro.kernels import ref as R
+
+
+@hypothesis.given(
+    seed=hst.integers(0, 2**31 - 1),
+    n_blocks=hst.sampled_from([2, 3, 8, 64, 130]),
+    scale=hst.sampled_from([1e-5, 1e-3, 1.0]),
+    beta=hst.sampled_from([0.1, 0.5, 1.0]),
+    gdtype=hst.sampled_from(["float32", "bfloat16"]),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_loco_compress_matches_ref(seed, n_blocks, scale, beta, gdtype):
+    n = n_blocks * 512
+    key = jax.random.PRNGKey(seed)
+    g = (jax.random.normal(key, (n,)) * scale).astype(gdtype)
+    e8 = (jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 40).astype(
+        jnp.float8_e4m3fn)
+    q, s, enew = LQ.loco_compress(g, e8, beta=beta, escale=2.0**14, interpret=True)
+    qr, sr, enr = R.loco_compress_ref(g, e8, beta=beta, escale=2.0**14)
+    assert (q == qr).all()
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # f8 encode may differ by one quantum on exact rounding ties (a 1-ulp f32
+    # ordering difference upstream flips round-to-even); the f8e4m3 quantum
+    # is <= |x|/8 (3 mantissa bits) with a 2^-9 subnormal floor.
+    a = np.asarray(enew.astype(jnp.float32))
+    b = np.asarray(enr.astype(jnp.float32))
+    de = np.abs(a - b)
+    quantum = np.maximum(np.maximum(np.abs(a), np.abs(b)) / 8.0, 2.0**-9)
+    assert (de <= quantum + 1e-12).all()
+    assert (de != 0).mean() < 5e-3
+
+
+@hypothesis.given(
+    seed=hst.integers(0, 2**31 - 1),
+    d=hst.sampled_from([2, 4, 8]),
+    n_blocks=hst.sampled_from([2, 16, 66]),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_dequant_mean_matches_ref(seed, d, n_blocks):
+    n = n_blocks * 512
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (d * n,)) * 1e-3
+    e8 = jnp.zeros((d * n,), jnp.float8_e4m3fn)
+    q, s, _ = LQ.loco_compress(g, e8, beta=0.5, escale=2.0**14, interpret=True)
+    pay, sc = q.reshape(d, -1), s.reshape(d, -1)
+    out = LQ.dequant_mean(pay, sc, interpret=True)
+    ref = R.dequant_mean_ref(pay, sc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-9)
+
+
+def test_kernel_roundtrip_accuracy():
+    """compress -> dequant_mean over identical rows == block roundtrip."""
+    n = 64 * 512
+    g = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 1e-3
+    e8 = jnp.zeros((n,), jnp.float8_e4m3fn)
+    q, s, _ = LQ.loco_compress(g, e8, beta=0.5, escale=2.0**14, interpret=True)
+    out = LQ.dequant_mean(q[None], s[None], interpret=True)
+    rel = float(jnp.abs(out - g).max() / jnp.abs(g).max())
+    assert rel < 1.0 / 14 + 0.02  # block-int4 bound
+
+
+def test_kernel_error_update_semantics():
+    """e_new ~ (1-b)e + b(h - deq(q)) with h = g + deq(e)."""
+    n = 2 * 512
+    g = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 1e-3
+    e0 = (jnp.ones((n,)) * 8.0).astype(jnp.float8_e4m3fn)  # deq = 8/2^14
+    q, s, enew = LQ.loco_compress(g, e0, beta=1.0, escale=2.0**14, interpret=True)
+    h = g + 8.0 / 2**14
+    d = LQ.dequant_mean(q[None], s[None], interpret=True)
+    expect = (h - d) * 2**14
+    got = enew.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(
+        jnp.clip(expect, -448, 448).astype(jnp.float8_e4m3fn).astype(jnp.float32)))

@@ -1,0 +1,105 @@
+"""Algorithm-level tests for LoCo and the baseline compressors.
+
+The centerpiece is the Lemma-2 property test: LoCo's *accumulated*
+deviation  ||sum_k (g_hat_k - g_k)||  stays bounded (error feedback cancels
+past mistakes), while naive quantization's deviation grows ~linearly in k.
+"""
+import hypothesis
+import hypothesis.strategies as hst
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.loco import SyncConfig, deviation_bound, init_state, sim_init, sim_sync
+from repro.core.quantizer import QuantConfig
+
+
+def _run_stream(cfg, key, n_nodes=4, d=1024, steps=60, scale=1e-3):
+    st = sim_init(cfg, n_nodes, d)
+    dev = jnp.zeros(d)
+    devs = []
+    for k in range(steps):
+        key, sub = jax.random.split(key)
+        g = jax.random.normal(sub, (n_nodes, d)) * scale
+        ghat, st = sim_sync(g, st, jnp.int32(k + 1), cfg)
+        dev = dev + (ghat - jnp.mean(g, axis=0))
+        devs.append(float(jnp.linalg.norm(dev)))
+    return np.array(devs)
+
+
+@hypothesis.given(hst.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=5, deadline=None)
+def test_lemma2_loco_bounded_naive_grows(seed):
+    key = jax.random.PRNGKey(seed)
+    qfix = QuantConfig(mode="fixed", scale=2.0**13)  # coarse -> visible error
+    loco = SyncConfig(strategy="loco", quant=qfix, beta=0.5, reset_every=16)
+    naive = SyncConfig(strategy="naive4", quant=qfix)
+    d_loco = _run_stream(loco, key)
+    d_naive = _run_stream(naive, key)
+    # naive accumulates; loco stays flat: compare growth over the 2nd half
+    assert d_loco[-1] < 0.5 * d_naive[-1], (d_loco[-1], d_naive[-1])
+    growth_loco = d_loco[-1] - d_loco[len(d_loco) // 2]
+    growth_naive = d_naive[-1] - d_naive[len(d_naive) // 2]
+    assert growth_loco < 0.5 * max(growth_naive, 1e-12)
+
+
+def test_lemma2_quantitative_bound():
+    """The deviation respects the Lemma-2 style bound with alpha ~ one-step
+    relative error of the 4-bit codec."""
+    key = jax.random.PRNGKey(0)
+    cfg = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"), beta=0.5,
+                     reset_every=16)
+    d = 1024
+    devs = _run_stream(cfg, key, d=d, steps=64, scale=1e-3)
+    # block-int4 one-step relative error <= 1/(2*7); c_inf ~ 4 sigma
+    bound = deviation_bound(cfg, d, 64, c_inf=4e-3, alpha=1 / 14)
+    assert devs[-1] < bound
+
+
+def test_error_reset_zeroes_state():
+    cfg = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"), reset_every=4)
+    st = sim_init(cfg, 2, 512)
+    key = jax.random.PRNGKey(1)
+    for k in range(1, 5):
+        g = jax.random.normal(jax.random.fold_in(key, k), (2, 512)) * 1e-3
+        _, st = sim_sync(g, st, jnp.int32(k), cfg)
+        if k % 4 == 0:
+            assert float(jnp.abs(st.astype(jnp.float32)).max()) == 0.0
+        else:
+            assert float(jnp.abs(st.astype(jnp.float32)).max()) > 0.0
+
+
+def test_fp_strategy_is_exact_mean():
+    cfg = SyncConfig(strategy="fp")
+    g = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
+    ghat, _ = sim_sync(g, sim_init(cfg, 4, 256), jnp.int32(1), cfg)
+    np.testing.assert_allclose(np.asarray(ghat), np.asarray(jnp.mean(g, axis=0)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("strategy", ["loco", "ef", "ef21", "naive4", "onebit"])
+def test_strategies_reduce_vs_truth(strategy):
+    """Every compressor's synced gradient correlates strongly with the truth."""
+    cfg = SyncConfig(strategy=strategy, quant=QuantConfig(mode="block"))
+    key = jax.random.PRNGKey(2)
+    st = sim_init(cfg, 4, 2048)
+    for k in range(1, 6):
+        g = jax.random.normal(jax.random.fold_in(key, k), (4, 2048)) * 1e-3
+        ghat, st = sim_sync(g, st, jnp.int32(k), cfg)
+    gm = jnp.mean(g, axis=0)
+    cos = jnp.dot(ghat, gm) / (jnp.linalg.norm(ghat) * jnp.linalg.norm(gm))
+    assert float(cos) > (0.5 if strategy == "onebit" else 0.95), float(cos)
+
+
+def test_loco_beta_one_equals_ef_with_fp_error():
+    """With beta=1 and uncompressed error storage, LoCo == classic EF."""
+    q_ef = QuantConfig(mode="block", error_codec="bf16")
+    loco = SyncConfig(strategy="loco", quant=q_ef, beta=1.0, reset_every=0)
+    ef = SyncConfig(strategy="ef", quant=q_ef)
+    key = jax.random.PRNGKey(3)
+    st_l, st_e = sim_init(loco, 2, 512), sim_init(ef, 2, 512)
+    for k in range(1, 8):
+        g = jax.random.normal(jax.random.fold_in(key, k), (2, 512)) * 1e-3
+        gl, st_l = sim_sync(g, st_l, jnp.int32(k), loco)
+        ge, st_e = sim_sync(g, st_e, jnp.int32(k), ef)
+        np.testing.assert_allclose(np.asarray(gl), np.asarray(ge), atol=2e-5)

@@ -1,0 +1,100 @@
+"""Optimizers, schedules, data pipeline determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import DataConfig, make_batch_fn
+from repro.optim.optimizers import OPTIMIZERS, adam, clip_by_global_norm
+from repro.optim.schedules import make_schedule
+
+
+def _setup():
+    params = {"w": jnp.ones((64,)), "b": jnp.zeros((8,))}
+    grads = {"w": jnp.full((64,), 0.5), "b": jnp.full((8,), -0.25)}
+    mask = {"w": jnp.float32(1.0), "b": jnp.float32(0.0)}
+    return params, grads, mask
+
+
+@pytest.mark.parametrize("name", sorted(OPTIMIZERS))
+def test_optimizers_step_finite_and_descend(name):
+    params, grads, mask = _setup()
+    opt = OPTIMIZERS[name]()
+    st = opt.init(params)
+    p2, st2 = opt.update(grads, st, params, jnp.int32(0), 1e-2, mask)
+    for k in params:
+        assert jnp.isfinite(p2[k]).all()
+    # moves against the gradient sign
+    assert float(p2["w"][0]) < float(params["w"][0])
+    assert float(p2["b"][0]) > float(params["b"][0])
+
+
+def test_adam_matches_reference_math():
+    params = {"w": jnp.array([1.0])}
+    grads = {"w": jnp.array([0.5])}
+    mask = {"w": jnp.float32(0.0)}
+    opt = adam(b1=0.9, b2=0.99, eps=1e-8)
+    st = opt.init(params)
+    p, st = opt.update(grads, st, params, jnp.int32(0), 0.1, mask)
+    m = 0.1 * 0.5 / (1 - 0.9)
+    v = 0.01 * 0.25 / (1 - 0.99)
+    expect = 1.0 - 0.1 * m / (np.sqrt(v) + 1e-8)
+    np.testing.assert_allclose(float(p["w"][0]), expect, rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.ones((4,)) * 3.0}
+    clipped, n = clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(float(n), 6.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("sched", ["constant", "cosine", "wsd"])
+def test_schedules_warmup_and_positive(sched):
+    f = make_schedule(sched, 1e-3, 100, 10)
+    vals = [float(f(jnp.int32(s))) for s in range(0, 100, 7)]
+    assert all(v > 0 for v in vals)
+    assert vals[0] < 1e-3 * 0.2  # warmup starts low
+    assert max(vals) <= 1e-3 * 1.0001
+
+
+def test_wsd_shape():
+    f = make_schedule("wsd", 1e-3, 1000, 10)
+    stable = float(f(jnp.int32(500)))
+    end = float(f(jnp.int32(999)))
+    np.testing.assert_allclose(stable, 1e-3, rtol=1e-5)
+    assert end < 0.05 * stable
+
+
+def test_data_deterministic_and_in_range():
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=4, seed=3)
+    bf = make_batch_fn(cfg)
+    b1 = bf(jnp.int32(7))["tokens"]
+    b2 = bf(jnp.int32(7))["tokens"]
+    b3 = bf(jnp.int32(8))["tokens"]
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    assert not np.array_equal(np.asarray(b1), np.asarray(b3))
+    assert b1.shape == (4, 17)
+    assert int(b1.min()) >= 0 and int(b1.max()) < 128
+
+
+def test_data_learnable_structure():
+    """Cluster-conditional stream: unigram entropy > conditional entropy."""
+    cfg = DataConfig(vocab=64, seq_len=256, global_batch=8, seed=0)
+    toks = np.asarray(make_batch_fn(cfg)(jnp.int32(0))["tokens"])
+    # crude: distribution within cluster windows (8 tokens) is peakier
+    from collections import Counter
+    global_c = Counter(toks.reshape(-1).tolist())
+    import math
+    pg = np.array([global_c[i] for i in range(64)], float) + 1e-9
+    pg /= pg.sum()
+    h_global = -np.sum(pg * np.log(pg))
+    h_win = []
+    for b in range(toks.shape[0]):
+        for w in range(0, toks.shape[1] - 8, 8):
+            cw = Counter(toks[b, w:w + 8].tolist())
+            pw = np.array([cw[i] for i in range(64)], float) + 1e-9
+            pw /= pw.sum()
+            # cross entropy of window under global minus window entropy > 0
+            h_win.append(-np.sum(pw * np.log(pg)) + np.sum(pw * np.log(pw)))
+    assert np.mean(h_win) > 0.1  # KL(window || global) visibly positive

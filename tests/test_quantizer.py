@@ -1,0 +1,76 @@
+"""Unit + property tests for the quantization codecs (paper Eqn. 1/7)."""
+import hypothesis
+import hypothesis.strategies as hst
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantizer as Q
+from repro.core.quantizer import QuantConfig
+
+
+def test_pack_unpack_bijective():
+    q = jnp.arange(-8, 8, dtype=jnp.int8)
+    assert (Q.unpack_int4(Q.pack_int4(q)) == q).all()
+
+
+@hypothesis.given(hst.integers(0, 2**31 - 1), hst.integers(1, 16))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_pack_unpack_random(seed, blocks):
+    q = jax.random.randint(jax.random.PRNGKey(seed), (blocks * 512,), -8, 8).astype(jnp.int8)
+    assert (Q.unpack_int4(Q.pack_int4(q)) == q).all()
+
+
+def test_fixed_roundtrip_bound_within_range():
+    cfg = QuantConfig(mode="fixed", scale=2.0**17)
+    # values within representable range |x| <= 7 / s
+    x = jnp.linspace(-7 / cfg.scale, 7 / cfg.scale, 4096)
+    rt = Q.roundtrip(x, cfg)
+    assert float(jnp.abs(rt - x).max()) <= 0.5 / cfg.scale + 1e-12
+
+
+def test_fixed_clips_out_of_range():
+    cfg = QuantConfig(mode="fixed", scale=2.0**17)
+    x = jnp.array([1.0, -1.0])  # far out of range
+    rt = Q.roundtrip(x, cfg)
+    np.testing.assert_allclose(rt, [7 / cfg.scale, -8 / cfg.scale])
+
+
+@hypothesis.given(hst.integers(0, 2**31 - 1),
+                  hst.sampled_from([512, 1024, 4096]),
+                  hst.sampled_from([1e-6, 1e-3, 1.0, 100.0]))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_block_roundtrip_relative_bound(seed, n, scale):
+    """Block absmax int4: per-block error <= absmax/(2*qmax)."""
+    cfg = QuantConfig(mode="block")
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+    rt = Q.roundtrip(x, cfg)
+    xb = x.reshape(-1, cfg.block)
+    eb = jnp.abs((rt - x).reshape(-1, cfg.block))
+    bound = jnp.max(jnp.abs(xb), axis=1) / (2 * cfg.qmax) + 1e-9 * scale
+    assert bool((eb.max(axis=1) <= bound * 1.001).all())
+
+
+@pytest.mark.parametrize("codec", ["int8", "f8", "bf16", "none"])
+def test_error_codec_roundtrip(codec):
+    cfg = QuantConfig(error_codec=codec, error_scale=2.0**14)
+    e = jax.random.normal(jax.random.PRNGKey(0), (1024,)) * 1e-3
+    enc = Q.error_encode(e, cfg)
+    assert enc.dtype == Q.error_dtype(cfg)
+    dec = Q.error_decode(enc, cfg)
+    # 8-bit codecs: relative-ish fidelity at the configured scale
+    tol = {"int8": 1.0 / 2**14, "f8": 2e-4, "bf16": 2e-5, "none": 0.0}[codec]
+    assert float(jnp.abs(dec - e).max()) <= tol + 1e-12
+
+
+@hypothesis.given(hst.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_compress_decompress_wire_shapes(seed):
+    cfg = QuantConfig(mode="block")
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2048,))
+    payload, scales = Q.compress(x, cfg)
+    assert payload.shape == (1024,) and payload.dtype == jnp.int8
+    assert scales.shape == (2048 // cfg.block,)
+    y = Q.decompress(payload, scales, cfg)
+    assert y.shape == x.shape

@@ -1,0 +1,76 @@
+"""Per-architecture smoke tests (deliverable (f)).
+
+Each assigned architecture instantiates its REDUCED variant (2 layers,
+d_model <= 256, <= 4 experts) and runs, on the 2x2 CPU mesh:
+  * one LoCo train step (forward + backward + quantized sync + Adam),
+  * a short prefill + one decode step,
+asserting output shapes and finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.all_archs import ASSIGNED
+from repro.configs.base import ShapeConfig, get_arch, reduced
+from repro.core.flatparam import MeshTopo, init_serve_params_local, serve_param_specs
+from repro.core.loco import SyncConfig
+from repro.core.quantizer import QuantConfig
+from repro.data.synthetic import DataConfig, make_batch_fn, make_whisper_batch_fn
+from repro.launch.steps import (RunConfig, build_model, make_decode_step,
+                                make_init, make_prefill_step, make_train_step)
+
+RUN = RunConfig(sync=SyncConfig(strategy="loco", quant=QuantConfig(mode="block")),
+                optimizer="adam", microbatch=1, total_steps=10, warmup_steps=1,
+                lr=1e-3)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step(mesh22, arch):
+    cfg = reduced(get_arch(arch))
+    assert cfg.n_layers == 2 and cfg.d_model <= 256
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    init_fn, _ = make_init(cfg, RUN, mesh22)
+    chunks, states, opt = init_fn(jax.random.PRNGKey(0))
+    bundle = make_train_step(cfg, RUN, mesh22, shape)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=shape.seq_len,
+                    global_batch=shape.global_batch)
+    bf = (make_whisper_batch_fn(dc, cfg.d_model, cfg.dec_len)
+          if cfg.enc_dec else make_batch_fn(dc))
+    m = None
+    for i in range(2):
+        chunks, states, opt, m = bundle.fn(chunks, states, opt, jnp.int32(i), bf(jnp.int32(i)))
+    assert jnp.isfinite(m["loss"]), m
+    assert jnp.isfinite(m["gnorm"])
+    assert all(jnp.isfinite(c).all() for c in jax.tree.leaves(chunks))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_prefill_and_decode(mesh22, arch):
+    cfg = reduced(get_arch(arch))
+    topo = MeshTopo.from_mesh(mesh22)
+    model = build_model(cfg, topo.tp)
+    groups = model.groups()
+    pspecs = serve_param_specs(groups, topo)
+    init_sm = jax.jit(jax.shard_map(
+        lambda k: init_serve_params_local(groups, k, topo),
+        mesh=mesh22, in_specs=(P(),), out_specs=pspecs, check_vma=False))
+    params = init_sm(jax.random.PRNGKey(1))
+
+    B, S = 4, 64
+    pb = make_prefill_step(cfg, mesh22, ShapeConfig("p", S, B, "prefill"))
+    if cfg.enc_dec:
+        batch = {"frames": jnp.zeros((B, S, cfg.d_model), jnp.bfloat16)}
+    else:
+        batch = {"tokens": jnp.ones((B, S), jnp.int32)}
+    logits, cache = pb.fn(params, batch)
+    assert jnp.isfinite(jnp.asarray(logits, jnp.float32)).all()
+
+    db = make_decode_step(cfg, mesh22, ShapeConfig("d", S, B, "decode"))
+    tok = jnp.ones((B, 1), jnp.int32)
+    for _ in range(2):
+        tok, cache = db.fn(params, cache, tok)
+    assert tok.shape == (B, 1)
+    assert (tok >= 0).all() and (tok < cfg.vocab + topo.tp).all()
