@@ -1,0 +1,130 @@
+"""Bucketed-sync sweep: step time + wire traffic over bucket sizes/policies.
+
+Runs the real distributed train step (mesh dp=2 x tp=2 on CPU host devices)
+under the bucketed scheduler at several bucket targets and per-class wire
+policies, and reports measured step latency next to the static wire-byte
+accounting from repro.telemetry.wire.  On CPU the latency numbers tell you
+about scheduling overhead (many small collectives vs one big one), not
+interconnect wins — the wire/ratio columns are the hardware-independent
+signal.
+
+  PYTHONPATH=src python benchmarks/bench_buckets.py --quick
+  -> BENCH_buckets.json  (+ name,us_per_call,derived CSV rows)
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from benchmarks.common import csv_row
+except ModuleNotFoundError:  # invoked as `python benchmarks/bench_buckets.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.common import csv_row
+from repro.configs.base import ShapeConfig, get_arch, reduced
+from repro.core import policy as POL
+from repro.core.loco import SyncConfig
+from repro.core.quantizer import QuantConfig
+from repro.data.synthetic import DataConfig, make_batch_fn
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import RunConfig, make_init, make_train_step
+from repro.telemetry import wire as WIRE
+
+CFG = reduced(get_arch("llama2-400m"))
+SHAPE = ShapeConfig("bench", seq_len=32, global_batch=8, kind="train")
+SYNC = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+
+
+def sweep_configs(quick: bool) -> dict[str, RunConfig]:
+    base = RunConfig(sync=SYNC, optimizer="adam", microbatch=2,
+                     total_steps=1000, warmup_steps=10, lr=1e-3)
+    mixed = POL.parse_policy("embed=loco8,norm=fp,min=16384", SYNC)
+    out = {
+        "monolithic": base,
+        "bucket_64k": dataclasses.replace(base, bucket_bytes=64 << 10),
+        "mixed_64k": dataclasses.replace(base, bucket_bytes=64 << 10,
+                                         policy=mixed),
+    }
+    if not quick:
+        out.update({
+            "bucket_256k": dataclasses.replace(base, bucket_bytes=256 << 10),
+            "bucket_1m": dataclasses.replace(base, bucket_bytes=1 << 20),
+            # min sits between the reduced model's bucket sizes (attention
+            # projections: 32768 global elems -> fp; embed/head/ffn: 65536
+            # -> loco), so the row actually measures skipping small buckets.
+            "skip_small": dataclasses.replace(
+                base, bucket_bytes=1 << 20,
+                policy=POL.parse_policy("min=65536", SYNC)),
+            "uniform_fp": dataclasses.replace(
+                base, bucket_bytes=64 << 10,
+                policy=POL.uniform(SyncConfig(strategy="fp"))),
+        })
+    return out
+
+
+def bench_one(name: str, run: RunConfig, mesh, steps: int) -> dict:
+    init_fn, _ = make_init(CFG, run, mesh)
+    chunks, states, opt = init_fn(jax.random.PRNGKey(0))
+    bundle = make_train_step(CFG, run, mesh, SHAPE)
+    bf = make_batch_fn(DataConfig(vocab=CFG.vocab, seq_len=SHAPE.seq_len,
+                                  global_batch=SHAPE.global_batch, seed=0))
+    # compile + warm
+    chunks, states, opt, m = bundle.fn(chunks, states, opt, jnp.int32(0),
+                                       bf(jnp.int32(0)))
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for i in range(1, steps + 1):
+        chunks, states, opt, m = bundle.fn(chunks, states, opt, jnp.int32(i),
+                                           bf(jnp.int32(i)))
+    jax.block_until_ready(m["loss"])
+    step_ms = (time.perf_counter() - t0) / steps * 1e3
+
+    plan = bundle.helpers["plan"]
+    row = {"step_ms": step_ms, "final_loss": float(m["loss"]),
+           "n_buckets": 0, "wire_bytes": None, "ratio_vs_bf16": None}
+    if plan is not None:
+        rep = WIRE.plan_report(plan)
+        row.update(n_buckets=plan.n_buckets, wire_bytes=rep.total_wire,
+                   ratio_vs_bf16=rep.ratio_vs_bf16,
+                   state_bytes=rep.state_bytes,
+                   by_class={k: v for k, v in rep.by_class().items()})
+    csv_row(f"buckets/{name}", step_ms * 1e3,
+            f"wire={row['wire_bytes']} ratio={row['ratio_vs_bf16']}")
+    return row
+
+
+def run(quick: bool = False, steps: int | None = None,
+        out: str = "BENCH_buckets.json") -> dict:
+    steps = steps or (3 if quick else 12)
+    mesh = make_local_mesh(dp=2, tp=2)
+    results = {}
+    for name, rc in sweep_configs(quick).items():
+        results[name] = bench_one(name, rc, mesh, steps)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="3 configs x 3 steps (CI smoke)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_buckets.json")
+    args = ap.parse_args()
+    run(quick=args.quick, steps=args.steps, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Version compatibility shims for the host JAX installation.
+
+The codebase targets the modern public API (``jax.shard_map`` with the
+``check_vma`` kwarg).  Older installs (< 0.6) only ship
+``jax.experimental.shard_map.shard_map`` whose kwarg is ``check_rep``.
+``install()`` bridges the gap once, at import of :mod:`repro`, so every
+module and test can keep writing against the modern surface.
+
+No behavior changes on new JAX: if ``jax.shard_map`` already exists the
+shim is a no-op.
+"""
+from __future__ import annotations
+
+import jax
+
+_INSTALLED = False
+
+
+def _has_public_shard_map() -> bool:
+    try:
+        return callable(object.__getattribute__(jax, "shard_map"))
+    except AttributeError:
+        return False
+
+
+def _make_shard_map_shim():
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                  check_rep=None, **kwargs):
+        check = True
+        if check_vma is not None:
+            check = check_vma
+        elif check_rep is not None:
+            check = check_rep
+        return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_rep=check, **kwargs)
+
+    return shard_map
+
+
+def install() -> None:
+    """Idempotently install the shims onto the ``jax`` module."""
+    global _INSTALLED
+    if _INSTALLED:
+        return
+    _INSTALLED = True
+    if not _has_public_shard_map():
+        jax.shard_map = _make_shard_map_shim()
+    if not hasattr(jax.lax, "axis_size"):
+        # psum of the literal 1 const-folds to the bound axis size (a Python
+        # int) inside shard_map, which is exactly lax.axis_size's contract.
+        def _axis_size(axis_name):
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = _axis_size

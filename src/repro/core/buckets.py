@@ -1,0 +1,157 @@
+"""Bucketed gradient-sync scheduling (the layer between compressor and wire).
+
+The monolithic path compresses each parameter's whole flat gradient as one
+tensor under one global :class:`~repro.core.loco.SyncConfig`.  This module
+partitions every flat-param chunk into **size-targeted buckets**, resolves
+each bucket to its own SyncConfig through :mod:`repro.core.policy`, and
+gives each bucket its own compressor state — so embeddings can sync at
+8-bit, norms in full precision, the transformer body at 4-bit LoCo, and
+tiny buckets can skip compression, while per-bucket ``all_to_all`` dispatch
+lets XLA overlap the exchanges with backward compute.
+
+Geometry (why bucketing is bit-exact when every bucket resolves to the
+same config): a parameter's padded flat tensor is split FSDP-style into
+``D`` contiguous per-rank chunks of ``C = padlen / D`` elements.  Buckets
+are defined in **chunk space**: bucket *b* covers chunk columns
+``[offset, offset + chunk_elems)`` on every rank, i.e. flat positions
+``r*C + offset + j``.  Viewing the local full gradient as ``(D, C)`` and
+slicing columns yields a ``(D * chunk_elems,)`` segment that is already in
+``dist_sync``'s wire layout (row *i* = peer *i*'s piece), and the returned
+shard is exactly this rank's contiguous slice of its chunk — so the
+concatenation over buckets reproduces the monolithic shard.  With
+``ALIGN = 512`` (= int4 pack factor x quant block), every bucket edge
+falls on a quantizer-block boundary, so block scales, codes and error
+states match the monolithic path bit for bit (tests/test_buckets.py).
+
+Everything here is static python (frozen dataclasses, plain ints): plans
+are built once at step-build time, are hashable (they key the custom_vjp
+cache in :mod:`repro.core.hijack`), and contain no arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.loco import SyncConfig
+from repro.core.policy import SyncPolicy, classify
+
+# Bucket edges must stay multiples of the int4 pack factor (2) times the
+# quantizer block (256); equals flatparam.GRAIN so chunk ends always align.
+ALIGN = 512
+
+DEFAULT_TARGET_BYTES = 4 << 20  # 4 MiB of fp32 gradient per bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketConfig:
+    """Static knobs of the bucketing scheduler.
+
+    ``target_bytes`` is the fp32 byte size of the *global* gradient segment
+    (``D * chunk_elems * 4``) each full bucket covers; the last bucket of a
+    parameter takes the remainder.  Values below ``ALIGN`` elements per
+    chunk are rounded up.
+    """
+
+    target_bytes: int = DEFAULT_TARGET_BYTES
+    align: int = ALIGN
+
+
+def partition(chunklen: int, dp: int, cfg: BucketConfig) -> tuple[int, ...]:
+    """Split a per-rank chunk of ``chunklen`` elems into bucket lengths.
+
+    Returns per-bucket chunk lengths: each a multiple of ``cfg.align``,
+    summing to ``chunklen``.  ``chunklen`` itself must be align-multiple
+    (flatparam pads to GRAIN).
+    """
+    assert chunklen % cfg.align == 0, (chunklen, cfg.align)
+    target_c = (cfg.target_bytes // 4 // max(dp, 1)) // cfg.align * cfg.align
+    target_c = max(cfg.align, target_c)
+    if chunklen <= target_c:
+        return (chunklen,)
+    sizes = [target_c] * (chunklen // target_c)
+    rem = chunklen - sum(sizes)
+    if rem:
+        sizes.append(rem)
+    return tuple(sizes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One schedulable sync unit of a parameter's gradient."""
+
+    index: int
+    offset: int       # chunk-space start (elements)
+    chunk_elems: int  # per-rank length c_b
+    seg_elems: int    # global segment length D * c_b (= local grad slice)
+    sync: SyncConfig  # policy-resolved wire config for this bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamPlan:
+    """Bucket layout + resolved configs for one (loco) parameter."""
+
+    group: str
+    name: str
+    tensor_class: str
+    chunklen: int
+    layers: int                 # stacked-group multiplier (1 if not stacked)
+    buckets: tuple[Bucket, ...]
+
+    @property
+    def qualname(self) -> str:
+        return f"{self.group}/{self.name}"
+
+    def needs_state(self) -> bool:
+        return any(b.sync.needs_state() for b in self.buckets)
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncPlan:
+    """Full model schedule: one ParamPlan per loco parameter."""
+
+    params: tuple[ParamPlan, ...]
+
+    def lookup(self, group: str, name: str) -> ParamPlan:
+        for p in self.params:
+            if p.group == group and p.name == name:
+                return p
+        raise KeyError(f"{group}/{name} not in sync plan")
+
+    def needs_state(self) -> bool:
+        return any(p.needs_state() for p in self.params)
+
+    @property
+    def n_buckets(self) -> int:
+        return sum(len(p.buckets) for p in self.params)
+
+
+def make_param_plan(group_name: str, info, topo, bucket_cfg: BucketConfig,
+                    policy: SyncPolicy, layers: int = 1) -> ParamPlan:
+    """Bucket one ParamInfo's chunk and resolve each bucket's config."""
+    chunklen = info.chunklen(topo.tp, topo.dp)
+    tclass = classify(info)
+    qual = f"{group_name}/{info.name}"
+    buckets = []
+    off = 0
+    for i, c in enumerate(partition(chunklen, topo.dp, bucket_cfg)):
+        seg = topo.dp * c
+        buckets.append(Bucket(index=i, offset=off, chunk_elems=c,
+                              seg_elems=seg,
+                              sync=policy.resolve(qual, tclass, seg)))
+        off += c
+    assert off == chunklen
+    return ParamPlan(group=group_name, name=info.name, tensor_class=tclass,
+                     chunklen=chunklen, layers=layers, buckets=tuple(buckets))
+
+
+def make_sync_plan(groups, topo, bucket_cfg: BucketConfig,
+                   policy: SyncPolicy) -> SyncPlan:
+    """Build the whole-model schedule.  Non-loco params keep gather_fp."""
+    plans = []
+    for g in groups:
+        layers = g.n_layers if g.stacked else 1
+        for info in g.infos:
+            if not info.loco:
+                continue
+            plans.append(make_param_plan(g.name, info, topo, bucket_cfg,
+                                         policy, layers=layers))
+    return SyncPlan(params=tuple(plans))

@@ -9,7 +9,10 @@ ordering follows rank ``r = pod * DATA + data`` so that sequential
 ``dist_sync`` is the distributed form of the strategies in
 :mod:`repro.core.loco`: quantize locally, exchange the low-bit payload with
 all-to-all over the dp axes, decompress and average **locally in fp32**
-(paper §3.3's all2all-instead-of-reduce-scatter argument).
+(paper §3.3's all2all-instead-of-reduce-scatter argument).  It synchronizes
+one *segment* — ``dist_sync_buckets`` schedules many segments (the buckets
+of :mod:`repro.core.buckets`) as independent exchanges, each under its own
+config and state, which XLA is free to overlap with backward compute.
 """
 from __future__ import annotations
 
@@ -17,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantizer as Q
+from repro.core.buckets import ParamPlan
 from repro.core.loco import SyncConfig, local_compress
 
 
@@ -61,7 +65,7 @@ def all_to_all_chunks(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# distributed gradient synchronization (one flat tensor)
+# distributed gradient synchronization (one segment)
 # ---------------------------------------------------------------------------
 
 def dist_sync(
@@ -70,11 +74,12 @@ def dist_sync(
     cfg: SyncConfig,
     dp_axes: tuple[str, ...],
 ) -> tuple[jax.Array, jax.Array]:
-    """Synchronize a flat local gradient across the dp group.
+    """Synchronize one flat gradient segment across the dp group.
 
-    g:     (n,) local full gradient, n divisible by D * 2 * block
+    g:     (n,) local gradient segment, n divisible by D * 2 * block; row
+           layout: element i belongs to peer ``i // (n/D)``'s shard.
     state: per-node compressor state (see loco.state_dtype)
-    returns (g_shard (n/D,), new_state): the *averaged* gradient chunk this
+    returns (g_shard (n/D,), new_state): the *averaged* gradient piece this
     rank owns, and the updated local compressor state.
     """
     n = g.shape[0]
@@ -166,6 +171,45 @@ def dist_sync(
         return jnp.mean(contrib, axis=0), new_state
 
     raise ValueError(cfg.strategy)
+
+
+# ---------------------------------------------------------------------------
+# bucketed dispatch: many segments, each with its own config + state
+# ---------------------------------------------------------------------------
+
+def dist_sync_buckets(
+    g: jax.Array,
+    states: tuple[jax.Array, ...],
+    plan: ParamPlan,
+    dp_axes: tuple[str, ...],
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Synchronize a full local gradient bucket by bucket.
+
+    g:      (padlen,) local full gradient of one parameter
+    states: one compressor state per bucket of ``plan`` (dummy (1,) arrays
+            for stateless buckets)
+    returns (g_shard (padlen/D,), new_states): this rank's chunk of the
+    averaged gradient (concatenation of the per-bucket shards, which by the
+    chunk-space bucket geometry is the rank's contiguous chunk slice), and
+    the per-bucket updated states.
+
+    Each bucket issues its own collective, so XLA can overlap the
+    exchanges; when every bucket resolves to the same config the result is
+    bit-exact with the monolithic :func:`dist_sync` (see buckets.py).
+    """
+    assert len(states) == len(plan.buckets), (len(states), len(plan.buckets))
+    D = axis_size(dp_axes)
+    C = plan.chunklen
+    assert g.shape[0] == D * C, (g.shape, D, C)
+    gm = g.astype(jnp.float32).reshape(D, C)
+    shards, new_states = [], []
+    for b, st in zip(plan.buckets, states):
+        seg = jax.lax.slice_in_dim(gm, b.offset, b.offset + b.chunk_elems,
+                                   axis=1).reshape(-1)
+        sh, ns = dist_sync(seg, st, b.sync, dp_axes)
+        shards.append(sh)
+        new_states.append(ns)
+    return jnp.concatenate(shards), tuple(new_states)
 
 
 # ---------------------------------------------------------------------------

@@ -36,10 +36,12 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import loco as loco_lib
-from repro.core.hijack import gather_fp, gather_with_sync, replicated_grad_psum
+from repro.core.buckets import ALIGN, ParamPlan, SyncPlan
+from repro.core.hijack import (gather_fp, gather_with_sync,
+                               gather_with_sync_buckets, replicated_grad_psum)
 from repro.core.loco import SyncConfig
 
-GRAIN = 512  # dp chunks stay divisible by 2 (int4 pack) * 256 (quant block)
+GRAIN = ALIGN  # dp chunks stay divisible by 2 (int4 pack) * 256 (quant block)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +167,14 @@ def init_sync_state(info: ParamInfo, cfg: SyncConfig, topo: MeshTopo) -> jax.Arr
     return jnp.zeros((1,), jnp.float32)
 
 
+def init_sync_state_buckets(pplan: ParamPlan) -> tuple[jax.Array, ...]:
+    """Per-bucket compressor states for one param under a sync plan."""
+    return tuple(
+        jnp.zeros((b.seg_elems,), loco_lib.state_dtype(b.sync))
+        if b.sync.needs_state() else jnp.zeros((1,), jnp.float32)
+        for b in pplan.buckets)
+
+
 def materialize(
     chunk: jax.Array,
     state: jax.Array,
@@ -172,10 +182,17 @@ def materialize(
     cfg: SyncConfig,
     topo: MeshTopo,
     compute_dtype=jnp.bfloat16,
+    pplan: ParamPlan | None = None,
 ) -> jax.Array:
-    """fp32 chunk -> logical bf16 TP-local tensor (FSDP gather w/ LoCo bwd)."""
+    """fp32 chunk -> logical bf16 TP-local tensor (FSDP gather w/ LoCo bwd).
+
+    With a ``pplan``, ``state`` is the tuple of per-bucket states and the
+    backward runs the bucketed schedule instead of the monolithic sync.
+    """
     w = chunk.astype(compute_dtype)
-    if info.loco:
+    if info.loco and pplan is not None:
+        flat = gather_with_sync_buckets(w, state, pplan, topo.dp_axes)
+    elif info.loco:
         flat = gather_with_sync(w, state, cfg, topo.dp_axes)
     else:
         flat = gather_fp(w, topo.dp_axes)
@@ -215,13 +232,20 @@ class TrainStore:
     are the traced arguments of jax.grad.
     """
 
-    def __init__(self, groups, chunks, states, cfg: SyncConfig, topo: MeshTopo, compute_dtype=jnp.bfloat16):
+    def __init__(self, groups, chunks, states, cfg: SyncConfig, topo: MeshTopo,
+                 compute_dtype=jnp.bfloat16, plan: SyncPlan | None = None):
         self.groups = {g.name: g for g in groups}
         self.chunks = chunks  # {group: {name: (L?, 1, chunk)}} local views
-        self.states = states  # {group: {name: (L?, 1, 1.., padlen)}} local views
+        self.states = states  # {group: {name: (L?, 1, 1.., padlen) | tuple}} local
         self.cfg = cfg
         self.topo = topo
         self.compute_dtype = compute_dtype
+        self.plan = plan      # None = monolithic sync per param
+
+    def _pplan(self, gname: str, info: ParamInfo) -> ParamPlan | None:
+        if self.plan is None or not info.loco:
+            return None
+        return self.plan.lookup(gname, info.name)
 
     # ---- non-stacked groups ------------------------------------------------
     def group(self, gname: str) -> dict[str, jax.Array]:
@@ -231,7 +255,9 @@ class TrainStore:
         for info in g.infos:
             c = self.chunks[gname][info.name].reshape(-1)
             s = _squeeze_state(self.states[gname][info.name])
-            out[info.name] = materialize(c, s, info, self.cfg, self.topo, self.compute_dtype)
+            out[info.name] = materialize(c, s, info, self.cfg, self.topo,
+                                         self.compute_dtype,
+                                         pplan=self._pplan(gname, info))
         return out
 
     # ---- stacked groups: xs for lax.scan ------------------------------------
@@ -247,7 +273,9 @@ class TrainStore:
         for info in g.infos:
             c = cs[info.name].reshape(-1)
             s = _squeeze_state(ss[info.name])
-            out[info.name] = materialize(c, s, info, self.cfg, self.topo, self.compute_dtype)
+            out[info.name] = materialize(c, s, info, self.cfg, self.topo,
+                                         self.compute_dtype,
+                                         pplan=self._pplan(gname, info))
         return out
 
 
@@ -282,32 +310,44 @@ class ServeStore:
         return out
 
 
-def _squeeze_state(s: jax.Array) -> jax.Array:
-    """Drop the leading singleton mesh dims of a local state view."""
-    return s.reshape(s.shape[-1])
+def _squeeze_state(s):
+    """Drop the leading singleton mesh dims of a local state view.
+
+    Works on a single array or a per-bucket tuple of arrays (sync plans).
+    """
+    return jax.tree.map(lambda a: a.reshape(a.shape[-1]), s)
 
 
 # ---------------------------------------------------------------------------
 # whole-model init (runs inside shard_map)
 # ---------------------------------------------------------------------------
 
-def init_train_state_local(groups: Sequence[ParamGroup], key: jax.Array, cfg: SyncConfig, topo: MeshTopo):
-    """Returns (chunks, states) local pytrees, to be used with the specs below."""
+def init_train_state_local(groups: Sequence[ParamGroup], key: jax.Array, cfg: SyncConfig,
+                           topo: MeshTopo, plan: SyncPlan | None = None):
+    """Returns (chunks, states) local pytrees, to be used with the specs below.
+
+    With a ``plan``, each loco param's state leaf is the tuple of per-bucket
+    states (bucket b: (seg_elems,) in its resolved dtype, or a (1,) dummy).
+    """
     chunks, states = {}, {}
     for g in groups:
         cg, sg = {}, {}
         for info in g.infos:
+            if plan is not None and info.loco:
+                s = init_sync_state_buckets(plan.lookup(g.name, info.name))
+            else:
+                s = init_sync_state(info, cfg, topo)
             if g.stacked:
                 keys = jax.random.split(_named_key(key, g.name + "/" + info.name), g.n_layers)
                 c = jax.vmap(lambda k: init_chunk(info, k, topo))(keys)
-                s = jnp.stack([init_sync_state(info, cfg, topo)] * g.n_layers)
                 cg[info.name] = c[:, None, :]              # (L, 1, chunk) local
-                sg[info.name] = s[:, None, None, :]        # (L, 1, 1, padlen) local
+                # (L, 1, 1, n) local, per bucket when planned
+                sg[info.name] = jax.tree.map(
+                    lambda sb: jnp.stack([sb] * g.n_layers)[:, None, None, :], s)
             else:
                 c = init_chunk(info, _named_key(key, g.name + "/" + info.name), topo)
-                s = init_sync_state(info, cfg, topo)
                 cg[info.name] = c[None, :]                 # (1, chunk) local
-                sg[info.name] = s[None, None, :]           # (1, 1, padlen) local
+                sg[info.name] = jax.tree.map(lambda sb: sb[None, None, :], s)
         chunks[g.name], states[g.name] = cg, sg
     return chunks, states
 
@@ -334,18 +374,25 @@ def init_serve_params_local(groups: Sequence[ParamGroup], key: jax.Array, topo: 
 # global specs / shapes (outside shard_map; for jit in_shardings + dryrun)
 # ---------------------------------------------------------------------------
 
-def train_state_specs(groups: Sequence[ParamGroup], topo: MeshTopo):
+def train_state_specs(groups: Sequence[ParamGroup], topo: MeshTopo,
+                      plan: SyncPlan | None = None):
     chunks, states = {}, {}
     for g in groups:
         cg, sg = {}, {}
         for info in g.infos:
             cg[info.name] = topo.chunk_spec(g.stacked)
-            sg[info.name] = topo.state_spec(g.stacked)
+            if plan is not None and info.loco:
+                pp = plan.lookup(g.name, info.name)
+                sg[info.name] = tuple(topo.state_spec(g.stacked)
+                                      for _ in pp.buckets)
+            else:
+                sg[info.name] = topo.state_spec(g.stacked)
         chunks[g.name], states[g.name] = cg, sg
     return chunks, states
 
 
-def train_state_shapes(groups: Sequence[ParamGroup], cfg: SyncConfig, topo: MeshTopo):
+def train_state_shapes(groups: Sequence[ParamGroup], cfg: SyncConfig, topo: MeshTopo,
+                       plan: SyncPlan | None = None):
     """Global ShapeDtypeStructs for dry-run lowering (no allocation)."""
     chunks, states = {}, {}
     for g in groups:
@@ -353,15 +400,26 @@ def train_state_shapes(groups: Sequence[ParamGroup], cfg: SyncConfig, topo: Mesh
         for info in g.infos:
             pad = info.padlen(topo.tp, topo.dp)
             cshape = (topo.tp, pad)
-            sshape = (topo.tp, topo.dp, pad)
-            sdt = loco_lib.state_dtype(cfg) if (info.loco and cfg.needs_state()) else jnp.float32
-            if not (info.loco and cfg.needs_state()):
-                sshape = sshape[:-1] + (1,)
             if g.stacked:
                 cshape = (g.n_layers,) + cshape
-                sshape = (g.n_layers,) + sshape
             cg[info.name] = jax.ShapeDtypeStruct(cshape, jnp.float32)
-            sg[info.name] = jax.ShapeDtypeStruct(sshape, sdt)
+
+            def state_struct(n, sdt):
+                sshape = (topo.tp, topo.dp, n)
+                if g.stacked:
+                    sshape = (g.n_layers,) + sshape
+                return jax.ShapeDtypeStruct(sshape, sdt)
+
+            if plan is not None and info.loco:
+                pp = plan.lookup(g.name, info.name)
+                sg[info.name] = tuple(
+                    state_struct(b.seg_elems, loco_lib.state_dtype(b.sync))
+                    if b.sync.needs_state() else state_struct(1, jnp.float32)
+                    for b in pp.buckets)
+            elif info.loco and cfg.needs_state():
+                sg[info.name] = state_struct(pad, loco_lib.state_dtype(cfg))
+            else:
+                sg[info.name] = state_struct(1, jnp.float32)
         chunks[g.name], states[g.name] = cg, sg
     return chunks, states
 

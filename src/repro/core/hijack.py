@@ -20,7 +20,9 @@ from functools import lru_cache, partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.comm import all_gather_flat, axis_size, dist_sync, psum_scatter_flat
+from repro.core.buckets import ParamPlan
+from repro.core.comm import (all_gather_flat, axis_size, dist_sync,
+                             dist_sync_buckets, psum_scatter_flat)
 from repro.core.loco import SyncConfig
 
 
@@ -63,6 +65,52 @@ def gather_with_sync(
         "in the post-grad reference path"
     )
     return _make_gather(cfg, tuple(dp_axes))(w_chunk, state)
+
+
+@lru_cache(maxsize=None)
+def _make_bucketed_gather(plan: ParamPlan, dp_axes: tuple[str, ...]):
+    """custom_vjp gather whose backward runs the per-bucket schedule.
+
+    The compressor state is a *tuple* of per-bucket buffers; the tuple rides
+    through the custom_vjp as one pytree argument, and the backward returns
+    the per-bucket updated states as its cotangent (same float-dtype
+    legality argument as the monolithic path — see module docstring).
+    """
+
+    @jax.custom_vjp
+    def gather(w_chunk: jax.Array, states: tuple) -> jax.Array:
+        return all_gather_flat(w_chunk, dp_axes)
+
+    def fwd(w_chunk, states):
+        return all_gather_flat(w_chunk, dp_axes), states
+
+    def bwd(states, g_full):
+        g_shard, new_states = dist_sync_buckets(g_full, states, plan, dp_axes)
+        new_states = tuple(ns.astype(s.dtype)
+                           for ns, s in zip(new_states, states))
+        return g_shard.astype(g_full.dtype), new_states
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def gather_with_sync_buckets(
+    w_chunk: jax.Array,
+    states: tuple[jax.Array, ...],
+    plan: ParamPlan,
+    dp_axes: tuple[str, ...],
+) -> jax.Array:
+    """FSDP all-gather whose backward runs the bucketed sync schedule.
+
+    w_chunk: (C,) local flat parameter chunk (C = plan.chunklen)
+    states:  per-bucket compressor states, bucket b's shaped (seg_elems,)
+             in its resolved state dtype (or a (1,) dummy when stateless).
+    """
+    for st, b in zip(states, plan.buckets):
+        assert jnp.issubdtype(st.dtype, jnp.floating), (
+            f"bucket {b.index} state must be a float dtype for the "
+            "cotangent to carry the updated state (see gather_with_sync)")
+    return _make_bucketed_gather(plan, tuple(dp_axes))(w_chunk, tuple(states))
 
 
 def gather_fp(w_chunk: jax.Array, dp_axes: tuple[str, ...]) -> jax.Array:

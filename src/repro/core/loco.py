@@ -142,10 +142,14 @@ def maybe_reset(state: jax.Array, step: jax.Array, cfg: SyncConfig) -> jax.Array
     """Error reset (Eqn. 7): zero the error every T_c steps.
 
     Applied to LoCo-style error states only; EF21's g_est must persist.
+    The schedule fires at steps T_c, 2*T_c, ... — never at step 0, which
+    would discard the very first compression error before it compensated
+    anything (regression-pinned in tests/test_buckets.py).
     """
     if cfg.strategy not in ("loco", "ef", "onebit") or cfg.reset_every <= 0:
         return state
-    do_reset = (step % cfg.reset_every) == 0
+    step = jnp.asarray(step)
+    do_reset = ((step % cfg.reset_every) == 0) & (step > 0)
     return jnp.where(do_reset, jnp.zeros_like(state), state)
 
 

@@ -1,0 +1,141 @@
+"""Per-bucket compression policy engine (the "which/when/at-what-bits" layer).
+
+1-bit Adam and 0/1 Adam demonstrate that the *selection* of what gets
+compressed matters as much as the codec: embeddings and norms are tiny but
+precision-critical, the transformer body is where the volume lives, and
+very small buckets cost more in scale/overhead bytes than they save.  This
+module turns that judgement into data: an ordered rule list matched against
+(group name, parameter name, tensor class, global element count) that
+resolves every bucket produced by :mod:`repro.core.buckets` to its own
+:class:`~repro.core.loco.SyncConfig`.
+
+Everything here is static (frozen dataclasses, resolved at step-build
+time), so resolved configs are hashable and can key the ``custom_vjp``
+cache in :mod:`repro.core.hijack`.
+
+See DESIGN.md §7 for the subsystem overview.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+
+from repro.core.loco import SyncConfig
+from repro.core.quantizer import QuantConfig
+
+# tensor classes derivable from a ParamInfo (see classify())
+TENSOR_CLASSES = ("embed", "norm", "body")
+
+
+def classify(info) -> str:
+    """Map a flatparam.ParamInfo to its tensor class."""
+    if info.init == "embed":
+        return "embed"
+    if len(info.shape) == 1:
+        return "norm"
+    return "body"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One match clause.  All present conditions must hold (AND)."""
+
+    sync: SyncConfig
+    name_glob: str = "*"            # fnmatch over "group/param"
+    tensor_class: str | None = None  # embed | norm | body
+    min_elems: int = 0               # global elements of the bucket
+    max_elems: int | None = None
+
+    def matches(self, qualname: str, tclass: str, n_elems: int) -> bool:
+        if self.tensor_class is not None and tclass != self.tensor_class:
+            return False
+        if n_elems < self.min_elems:
+            return False
+        if self.max_elems is not None and n_elems > self.max_elems:
+            return False
+        return fnmatch.fnmatchcase(qualname, self.name_glob)
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncPolicy:
+    """Ordered rules + fallback.  First matching rule wins.
+
+    ``min_compress_elems`` is a final override: buckets smaller than this
+    (global elements) fall back to the uncompressed ``fp`` wire — for tiny
+    tensors the scale/metadata overhead of a 4-bit payload exceeds the
+    saving, and skipping keeps their gradients exact.
+    """
+
+    default: SyncConfig = dataclasses.field(default_factory=SyncConfig)
+    rules: tuple[Rule, ...] = ()
+    min_compress_elems: int = 0
+
+    def resolve(self, qualname: str, tclass: str, n_elems: int) -> SyncConfig:
+        cfg = self.default
+        for r in self.rules:
+            if r.matches(qualname, tclass, n_elems):
+                cfg = r.sync
+                break
+        if self.min_compress_elems and n_elems < self.min_compress_elems:
+            if cfg.strategy != "fp":
+                cfg = dataclasses.replace(cfg, strategy="fp")
+        return cfg
+
+
+def uniform(cfg: SyncConfig) -> SyncPolicy:
+    """Policy that resolves every bucket to the same config (legacy behavior)."""
+    return SyncPolicy(default=cfg)
+
+
+# ---------------------------------------------------------------------------
+# named presets + CLI spec parsing
+# ---------------------------------------------------------------------------
+
+def _preset(name: str, base: SyncConfig) -> SyncConfig:
+    """Named wire presets; unlisted fields inherit from the run default."""
+    if name == "fp":
+        return dataclasses.replace(base, strategy="fp")
+    if name in ("loco", "loco4"):
+        return dataclasses.replace(
+            base, strategy="loco", quant=dataclasses.replace(base.quant, bits=4))
+    if name == "loco8":
+        return dataclasses.replace(
+            base, strategy="loco", quant=dataclasses.replace(base.quant, bits=8))
+    if name in ("naive4", "ef", "onebit"):
+        return dataclasses.replace(base, strategy=name)
+    if name == "naive8":
+        return dataclasses.replace(
+            base, strategy="naive4", quant=dataclasses.replace(base.quant, bits=8))
+    raise ValueError(f"unknown sync preset {name!r}; "
+                     "known: fp loco loco4 loco8 naive4 naive8 ef onebit")
+
+
+def parse_policy(spec: str, default: SyncConfig) -> SyncPolicy:
+    """Parse a CLI policy spec like ``embed=loco8,norm=fp,min=65536``.
+
+    Clause keys: a tensor class (``embed``/``norm``/``body``), a name glob
+    (must contain ``/``, ``*``, ``?`` or ``[`` — a bare word that is not a
+    tensor class is rejected so a typoed class fails at launch instead of
+    silently never matching), or ``min`` (min_compress_elems).  Clause
+    values are preset names (see ``_preset``).  Unmatched buckets use
+    ``default``.
+    """
+    rules: list[Rule] = []
+    min_elems = 0
+    for clause in filter(None, (c.strip() for c in spec.split(","))):
+        key, _, val = clause.partition("=")
+        if not val:
+            raise ValueError(f"bad policy clause {clause!r} (want key=value)")
+        if key == "min":
+            min_elems = int(val)
+        elif key in TENSOR_CLASSES:
+            rules.append(Rule(sync=_preset(val, default), tensor_class=key))
+        elif any(ch in key for ch in "/*?["):
+            rules.append(Rule(sync=_preset(val, default), name_glob=key))
+        else:
+            raise ValueError(
+                f"bad policy key {key!r}: not a tensor class "
+                f"{TENSOR_CLASSES}, not 'min', and not a name glob "
+                "(globs must contain one of / * ? [)")
+    return SyncPolicy(default=default, rules=tuple(rules),
+                      min_compress_elems=min_elems)

@@ -22,9 +22,12 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import buckets as BK
 from repro.core import flatparam as FP
+from repro.core import policy as POL
 from repro.core.flatparam import MeshTopo, ParamGroup
 from repro.core.loco import SyncConfig, maybe_reset
+from repro.telemetry import wire as WIRE
 from repro.models import transformer as TF
 from repro.models.common import KVCache
 from repro.models.transformer import DecoderLM, DecodeState, head_layout, vocab_padded
@@ -56,6 +59,27 @@ class RunConfig:
     # the CE-side buffers by TP, replacing each TP all-reduce with an
     # all-gather + reduce-scatter of the same total volume.
     sequence_parallel: bool = True
+    # Bucketed sync scheduler (core/buckets + core/policy).  bucket_bytes > 0
+    # partitions every loco param's gradient into size-targeted buckets,
+    # each dispatched as its own all_to_all; `policy` resolves per-bucket
+    # wire configs (None = every bucket uses `sync`).  Both unset =
+    # monolithic legacy path, bit-identical to the pre-bucket runtime.
+    bucket_bytes: int = 0
+    policy: "POL.SyncPolicy | None" = None
+    # Log decoded error-feedback norms each step (adds a small reduction).
+    telemetry: bool = False
+
+    def wants_buckets(self) -> bool:
+        return self.bucket_bytes > 0 or self.policy is not None
+
+
+def build_sync_plan(run: RunConfig, groups, topo: MeshTopo) -> "BK.SyncPlan | None":
+    """Resolve RunConfig's bucketing knobs into a static SyncPlan."""
+    if not run.wants_buckets():
+        return None
+    pol = run.policy if run.policy is not None else POL.uniform(run.sync)
+    bcfg = BK.BucketConfig(target_bytes=run.bucket_bytes or BK.DEFAULT_TARGET_BYTES)
+    return BK.make_sync_plan(groups, topo, bcfg, pol)
 
 
 def build_model(cfg: ArchConfig, tp: int, sp: bool = False):
@@ -83,13 +107,17 @@ def _make_opt(run: RunConfig):
 # ---------------------------------------------------------------------------
 
 def squeeze_chunks(tree, groups):
-    """local (L,1,chunk)->(L,chunk); (1,chunk)->(chunk,)."""
+    """local (L,1,chunk)->(L,chunk); (1,chunk)->(chunk,).
+
+    Leaves may be arrays or per-bucket tuples of arrays (sync plans);
+    tree.map applies the reshape to each bucket.
+    """
     out = {}
     for g in groups:
-        out[g.name] = {
-            n: (a.reshape(a.shape[0], a.shape[-1]) if g.stacked else a.reshape(a.shape[-1]))
-            for n, a in tree[g.name].items()
-        }
+        sq = ((lambda a: a.reshape(a.shape[0], a.shape[-1])) if g.stacked
+              else (lambda a: a.reshape(a.shape[-1])))
+        out[g.name] = {n: jax.tree.map(sq, sub)
+                       for n, sub in tree[g.name].items()}
     return out
 
 
@@ -120,6 +148,8 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
     opt = _make_opt(run)
     sched = make_schedule(run.schedule, run.lr, run.total_steps, run.warmup_steps)
     sync = run.sync
+    plan = build_sync_plan(run, groups, topo)
+    needs_state = plan.needs_state() if plan is not None else sync.needs_state()
     assert shape.global_batch % topo.dp == 0, (shape.global_batch, topo.dp)
     local_batch = shape.global_batch // topo.dp
     micro = min(run.microbatch, local_batch)
@@ -127,13 +157,30 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
     mask = {g.name: {i.name: jnp.float32(1.0 if i.decay else 0.0) for i in g.infos}
             for g in groups}
 
+    def reset_states(states_l, step):
+        """Per-bucket error reset: every bucket follows its own schedule."""
+        out = {}
+        for g in groups:
+            og = {}
+            for info in g.infos:
+                s = states_l[g.name][info.name]
+                if plan is not None and info.loco:
+                    pp = plan.lookup(g.name, info.name)
+                    og[info.name] = tuple(
+                        maybe_reset(sb, step, b.sync)
+                        for sb, b in zip(s, pp.buckets))
+                else:
+                    og[info.name] = maybe_reset(s, step, sync)
+            out[g.name] = og
+        return out
+
     def body(chunks, states, opt_state, step, batch):
         chunks_l = squeeze_chunks(chunks, groups)
         states_l = squeeze_states(states, groups)
         opt_l = tuple(squeeze_chunks(t, groups) for t in opt_state)
 
         def loss_fn(c, s, mb):
-            store = FP.TrainStore(groups, c, s, sync, topo)
+            store = FP.TrainStore(groups, c, s, sync, topo, plan=plan)
             return model.loss_fn(store, mb, remat=run.remat)
 
         def micro_body(carry, mb):
@@ -141,7 +188,7 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
             (loss, metrics), (g, new_s) = jax.value_and_grad(
                 loss_fn, argnums=(0, 1), has_aux=True)(chunks_l, s, mb)
             gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
-            s = new_s if sync.needs_state() else s
+            s = new_s if needs_state else s
             return (s, gacc), loss
 
         gacc0 = jax.tree.map(lambda c: jnp.zeros(c.shape, jnp.float32), chunks_l)
@@ -172,15 +219,21 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
 
         lr = sched(step)
         new_chunks_l, new_opt_l = opt.update(grads, opt_l, chunks_l, step, lr, mask)
-        new_states_l = jax.tree.map(lambda s: maybe_reset(s, step + 1, sync), states_l)
+        new_states_l = reset_states(states_l, step + 1)
 
         loss = jax.lax.pmean(jnp.mean(losses), topo.dp_axes)
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        if run.telemetry:
+            esq = WIRE.error_sq_norm_local(new_states_l, groups, sync, plan,
+                                           tp=topo.tp)
+            metrics["err_norm"] = jnp.sqrt(
+                jax.lax.psum(esq, topo.dp_axes + (topo.tp_axis,)))
         new_chunks = unsqueeze_like(new_chunks_l, chunks)
         new_states = unsqueeze_like(new_states_l, states)
         new_opt = tuple(unsqueeze_like(t, chunks) for t in new_opt_l)
-        return new_chunks, new_states, new_opt, {"loss": loss, "gnorm": gnorm, "lr": lr}
+        return new_chunks, new_states, new_opt, metrics
 
-    cspec, sspec = FP.train_state_specs(groups, topo)
+    cspec, sspec = FP.train_state_specs(groups, topo, plan=plan)
     n_opt = len(opt.init(_chunk_shapes_local(groups, topo)))
     opt_spec = tuple(cspec for _ in range(n_opt))
     dp = _dp_entry(topo)
@@ -188,13 +241,15 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
         batch_spec = {"frames": P(dp, None, None), "tokens": P(dp, None)}
     else:
         batch_spec = {"tokens": P(dp, None)}
+    metric_specs = {"loss": P(), "gnorm": P(), "lr": P()}
+    if run.telemetry:
+        metric_specs["err_norm"] = P()
     in_specs = (cspec, sspec, opt_spec, P(), batch_spec)
-    out_specs = (cspec, sspec, opt_spec,
-                 {"loss": P(), "gnorm": P(), "lr": P()})
+    out_specs = (cspec, sspec, opt_spec, metric_specs)
     sm = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                        check_vma=False)
 
-    cshapes, sshapes = FP.train_state_shapes(groups, sync, topo)
+    cshapes, sshapes = FP.train_state_shapes(groups, sync, topo, plan=plan)
     cshapes = _with_sharding(cshapes, cspec, mesh)
     sshapes = _with_sharding(sshapes, sspec, mesh)
     opt_shapes = tuple(cshapes for _ in range(n_opt))
@@ -209,7 +264,7 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
         helpers=dict(model=model, groups=groups, topo=topo, opt=opt,
                      cspec=cspec, sspec=sspec, opt_spec=opt_spec,
                      batch_spec=batch_spec, local_batch=local_batch,
-                     micro=micro, accum=accum),
+                     micro=micro, accum=accum, plan=plan),
     )
 
 
@@ -253,12 +308,14 @@ def make_init(cfg: ArchConfig, run: RunConfig, mesh):
     model = build_model(cfg, topo.tp)
     groups = model.groups()
     opt = _make_opt(run)
-    cspec, sspec = FP.train_state_specs(groups, topo)
+    plan = build_sync_plan(run, groups, topo)
+    cspec, sspec = FP.train_state_specs(groups, topo, plan=plan)
     n_opt = len(opt.init(_chunk_shapes_local(groups, topo)))
     opt_spec = tuple(cspec for _ in range(n_opt))
 
     def body(key):
-        chunks, states = FP.init_train_state_local(groups, key, run.sync, topo)
+        chunks, states = FP.init_train_state_local(groups, key, run.sync, topo,
+                                                   plan=plan)
         chunks_l = squeeze_chunks(chunks, groups)
         opt_l = opt.init(chunks_l)
         opt_state = tuple(unsqueeze_like(t, chunks) for t in opt_l)
@@ -266,7 +323,8 @@ def make_init(cfg: ArchConfig, run: RunConfig, mesh):
 
     sm = jax.shard_map(body, mesh=mesh, in_specs=(P(),),
                        out_specs=(cspec, sspec, opt_spec), check_vma=False)
-    return jax.jit(sm), dict(model=model, groups=groups, topo=topo, opt=opt)
+    return jax.jit(sm), dict(model=model, groups=groups, topo=topo, opt=opt,
+                             plan=plan)
 
 
 # ---------------------------------------------------------------------------

@@ -20,11 +20,13 @@ import jax.numpy as jnp
 
 from repro.checkpoint import checkpoint as CKPT
 from repro.configs.base import ShapeConfig, get_arch, reduced
+from repro.core import policy as POL
 from repro.core.loco import SyncConfig
 from repro.core.quantizer import QuantConfig
 from repro.data.synthetic import DataConfig, make_batch_fn, make_whisper_batch_fn
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.launch.steps import RunConfig, make_init, make_train_step
+from repro.telemetry import wire as WIRE
 
 
 def build_args(argv=None):
@@ -46,6 +48,15 @@ def build_args(argv=None):
     ap.add_argument("--beta", type=float, default=0.5)
     ap.add_argument("--reset-every", type=int, default=512)
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--bucket-mb", type=float, default=0.0,
+                    help="bucketed sync: target MiB of fp32 gradient per "
+                         "bucket (0 = monolithic legacy path)")
+    ap.add_argument("--policy", default="",
+                    help="per-bucket wire policy, e.g. "
+                         "'embed=loco8,norm=fp,min=65536' "
+                         "(see repro.core.policy.parse_policy)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="log decoded error-feedback norms each step")
     ap.add_argument("--optimizer", default="adam")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--schedule", default="cosine")
@@ -67,9 +78,12 @@ def make_run(args) -> RunConfig:
         reset_every=args.reset_every,
         use_kernels=args.use_kernels,
     )
+    policy = POL.parse_policy(args.policy, sync) if args.policy else None
     return RunConfig(sync=sync, optimizer=args.optimizer, lr=args.lr,
                      schedule=args.schedule, warmup_steps=args.warmup,
-                     total_steps=args.steps, microbatch=args.microbatch)
+                     total_steps=args.steps, microbatch=args.microbatch,
+                     bucket_bytes=int(args.bucket_mb * (1 << 20)),
+                     policy=policy, telemetry=args.telemetry)
 
 
 def main(argv=None):
@@ -88,6 +102,9 @@ def main(argv=None):
     init_fn, _ = make_init(cfg, run, mesh)
     chunks, states, opt = init_fn(jax.random.PRNGKey(args.seed))
     bundle = make_train_step(cfg, run, mesh, shape)
+    plan = bundle.helpers["plan"]
+    if plan is not None:
+        print(WIRE.format_report(WIRE.plan_report(plan)), flush=True)
     dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
                     global_batch=args.global_batch, seed=args.seed)
     batch_fn = (make_whisper_batch_fn(dc, cfg.d_model, cfg.dec_len)
@@ -110,9 +127,11 @@ def main(argv=None):
         if step % args.log_every == 0 or step == args.steps - 1:
             dt = time.time() - t0
             tok_s = (step - start + 1) * args.global_batch * args.seq_len / max(dt, 1e-9)
+            extra = (f" err_norm={float(m['err_norm']):.3e}"
+                     if "err_norm" in m else "")
             print(f"step {step:5d} loss={float(m['loss']):.4f} "
                   f"gnorm={float(m['gnorm']):.3f} lr={float(m['lr']):.2e} "
-                  f"tok/s={tok_s:,.0f}", flush=True)
+                  f"tok/s={tok_s:,.0f}{extra}", flush=True)
         if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
             CKPT.save(args.ckpt_dir, step + 1,
                       {"chunks": chunks, "states": states, "opt": opt})

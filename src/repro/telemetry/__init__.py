@@ -1,0 +1,1 @@
+# Wire-traffic accounting for the bucketed sync scheduler.

@@ -1,0 +1,206 @@
+"""Wire-traffic accounting for the bucketed sync scheduler.
+
+Predicts, from a static :class:`~repro.core.buckets.SyncPlan`, exactly what
+each device puts on the wire per optimizer step: the quantized payload
+bytes and the scale metadata bytes of every bucket, mirroring the codecs in
+:mod:`repro.core.quantizer` byte for byte (property-tested against the
+actual ``Q.compress`` output arrays in tests/test_buckets.py).  Also
+provides the runtime side: decoded error-feedback norms per bucket and the
+aggregated error norm the train step logs.
+
+Conventions
+-----------
+* All byte counts are **per device per sync** of one parameter instance
+  (stacked groups multiply by ``layers``); ``all_to_all`` sends and
+  receives the same volume, so this is also the receive size.
+* ``fp`` buckets count the bf16 reduce-scatter wire (2 bytes/elem).
+* The hierarchical two-stage exchange is reported as the flat path (its
+  stage-1 volume); the DCN-side saving is modeled in
+  benchmarks/bench_comm_model.py, not here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+
+from repro.core import quantizer as Q
+from repro.core.buckets import Bucket, ParamPlan, SyncPlan
+from repro.core.loco import SyncConfig
+
+
+def payload_bytes(n_elems: int, cfg: SyncConfig) -> int:
+    """Bytes of the quantized payload array for an ``(n_elems,)`` segment."""
+    if cfg.strategy == "fp":
+        return 2 * n_elems                      # bf16 reduce-scatter wire
+    if cfg.strategy == "onebit":
+        return n_elems                          # int8-held sign bits
+    bits = cfg.quant.bits
+    assert bits in (4, 8), bits
+    return n_elems // 2 if bits == 4 else n_elems
+
+
+def scale_bytes(n_elems: int, cfg: SyncConfig, dp: int = 1) -> int:
+    """Bytes of the scale metadata exchanged alongside the payload.
+
+    ``dp`` matters only for ``onebit``, whose scalar L1 scale is
+    all-gathered across the dp group (each device receives one per peer).
+    """
+    if cfg.strategy == "fp":
+        return 0
+    if cfg.strategy == "onebit":
+        return 4 * dp                           # f32 L1 scale per peer
+    if cfg.quant.mode == "fixed":
+        return 4                                # static scale, size-1 array
+    return 4 * (n_elems // cfg.quant.block)     # f32 per quantizer block
+
+
+def state_bytes(n_elems: int, cfg: SyncConfig) -> int:
+    """Resident bytes of the per-device compressor state (not wire)."""
+    if not cfg.needs_state():
+        return 0
+    from repro.core.loco import state_dtype
+    return n_elems * jnp.dtype(state_dtype(cfg)).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketWire:
+    param: str
+    bucket: int
+    tensor_class: str
+    strategy: str
+    n_elems: int         # global segment elements (= local grad slice)
+    payload: int         # bytes, per device per sync, x layers
+    scales: int
+    state: int
+
+    @property
+    def wire(self) -> int:
+        return self.payload + self.scales
+
+
+@dataclasses.dataclass(frozen=True)
+class WireReport:
+    """Per-step wire accounting for a whole sync plan."""
+
+    buckets: tuple[BucketWire, ...]
+    total_wire: int      # bytes per device per step (payload + scales)
+    fp32_bytes: int      # what an uncompressed fp32 exchange would move
+    bf16_bytes: int      # the 16-bit Adam baseline wire
+    state_bytes: int     # resident error-state footprint per device
+
+    @property
+    def ratio_vs_bf16(self) -> float:
+        return self.total_wire / max(self.bf16_bytes, 1)
+
+    @property
+    def ratio_vs_fp32(self) -> float:
+        return self.total_wire / max(self.fp32_bytes, 1)
+
+    def by_class(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for b in self.buckets:
+            out[b.tensor_class] = out.get(b.tensor_class, 0) + b.wire
+        return out
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "total_wire_bytes": self.total_wire,
+            "fp32_bytes": self.fp32_bytes,
+            "bf16_bytes": self.bf16_bytes,
+            "state_bytes": self.state_bytes,
+            "ratio_vs_bf16": self.ratio_vs_bf16,
+            "by_class": self.by_class(),
+            "n_buckets": len(self.buckets),
+        }, indent=2)
+
+
+def bucket_wire(param: str, tclass: str, b: Bucket, layers: int) -> BucketWire:
+    dp = b.seg_elems // b.chunk_elems
+    return BucketWire(
+        param=param, bucket=b.index, tensor_class=tclass,
+        strategy=b.sync.strategy, n_elems=b.seg_elems,
+        payload=layers * payload_bytes(b.seg_elems, b.sync),
+        scales=layers * scale_bytes(b.seg_elems, b.sync, dp=dp),
+        state=layers * state_bytes(b.seg_elems, b.sync))
+
+
+def plan_report(plan: SyncPlan) -> WireReport:
+    """Static wire accounting for every bucket in the plan."""
+    rows = []
+    fp32 = bf16 = 0
+    for pp in plan.params:
+        for b in pp.buckets:
+            rows.append(bucket_wire(pp.qualname, pp.tensor_class, b, pp.layers))
+            fp32 += pp.layers * 4 * b.seg_elems
+            bf16 += pp.layers * 2 * b.seg_elems
+    return WireReport(
+        buckets=tuple(rows),
+        total_wire=sum(r.wire for r in rows),
+        fp32_bytes=fp32, bf16_bytes=bf16,
+        state_bytes=sum(r.state for r in rows))
+
+
+def format_report(rep: WireReport, max_rows: int = 12) -> str:
+    """Human-readable summary for the training log."""
+    lines = [
+        f"wire/step/device: {rep.total_wire / 2**20:.2f} MiB "
+        f"({rep.ratio_vs_bf16:.3f}x of bf16 baseline, "
+        f"{rep.ratio_vs_fp32:.3f}x of fp32); "
+        f"error-state: {rep.state_bytes / 2**20:.2f} MiB; "
+        f"buckets: {len(rep.buckets)}",
+    ]
+    for cls, byt in sorted(rep.by_class().items()):
+        lines.append(f"  class {cls:<6} {byt / 2**20:8.2f} MiB")
+    rows = sorted(rep.buckets, key=lambda r: -r.wire)[:max_rows]
+    for r in rows:
+        lines.append(f"  {r.param}[{r.bucket}] {r.strategy:<7}"
+                     f" n={r.n_elems:>10,} wire={(r.wire) / 2**10:10.1f} KiB")
+    if len(rep.buckets) > max_rows:
+        lines.append(f"  ... {len(rep.buckets) - max_rows} more buckets")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# runtime telemetry: decoded error-feedback norms
+# ---------------------------------------------------------------------------
+
+def decoded_error(state, cfg: SyncConfig):
+    """Per-device error-feedback buffer in fp32 (what compensates next step)."""
+    if not cfg.needs_state():
+        return jnp.zeros((1,), jnp.float32)
+    if cfg.strategy == "loco":
+        return Q.error_decode(state, cfg.quant)
+    return state.astype(jnp.float32)
+
+
+def bucket_error_sq_norms(states, pplan: ParamPlan):
+    """Squared L2 norm of each bucket's decoded error (local, per device)."""
+    return tuple(jnp.sum(decoded_error(s, b.sync) ** 2)
+                 for s, b in zip(states, pplan.buckets))
+
+
+def error_sq_norm_local(states_l, groups, cfg: SyncConfig,
+                        plan: SyncPlan | None, tp: int = 1):
+    """Sum of squared decoded-error norms over every param (one device).
+
+    ``states_l`` is the squeezed local state tree of launch/steps.py; the
+    caller psums over the mesh axes and takes the sqrt.  TP-replicated
+    params carry identical states on every TP rank, so their contribution
+    is divided by ``tp`` (same convention as the grad-norm clip).
+    """
+    total = jnp.float32(0)
+    for g in groups:
+        for info in g.infos:
+            s = states_l[g.name][info.name]
+            rep = 1.0 / tp if (info.tp_dim is None and tp > 1) else 1.0
+            if plan is not None and info.loco:
+                pp = plan.lookup(g.name, info.name)
+                for sb, b in zip(s, pp.buckets):
+                    e = decoded_error(sb, b.sync)
+                    total = total + rep * jnp.sum(e.astype(jnp.float32) ** 2)
+            elif info.loco and cfg.needs_state():
+                e = decoded_error(s, cfg)
+                total = total + rep * jnp.sum(e.astype(jnp.float32) ** 2)
+    return total

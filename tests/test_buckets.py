@@ -1,0 +1,327 @@
+"""Bucketed sync scheduler: layout, policy, bit-exactness, telemetry.
+
+The load-bearing property (ISSUE 1 acceptance): when every bucket resolves
+to the same SyncConfig, the bucketed path is **bit-exact** with the
+monolithic path — same shards, same compressor states, same training loss —
+for the loco / ef / naive4 strategies; and the static wire-byte prediction
+in repro.telemetry.wire matches the actual payload+scales arrays the
+quantizer produces.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ShapeConfig, get_arch, reduced
+from repro.core import buckets as BK
+from repro.core import policy as POL
+from repro.core import quantizer as Q
+from repro.core.comm import dist_sync, dist_sync_buckets
+from repro.core.hijack import gather_with_sync, gather_with_sync_buckets
+from repro.core.loco import SyncConfig, init_state, maybe_reset, state_dtype
+from repro.core.quantizer import QuantConfig
+from repro.data.synthetic import DataConfig, make_batch_fn
+from repro.launch.steps import RunConfig, make_init, make_train_step
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+
+def test_partition_alignment_and_cover():
+    for chunklen in (512, 1024, 7 * 512, 64 * 512):
+        for target in (1 << 12, 1 << 20, 4 << 20):
+            sizes = BK.partition(chunklen, 2, BK.BucketConfig(target_bytes=target))
+            assert sum(sizes) == chunklen
+            assert all(c % BK.ALIGN == 0 for c in sizes)
+            # every bucket except a possible remainder hits the target
+            target_c = max(BK.ALIGN, (target // 4 // 2) // BK.ALIGN * BK.ALIGN)
+            assert all(c == target_c for c in sizes[:-1])
+            assert sizes[-1] <= target_c
+
+
+def test_partition_rejects_misaligned():
+    with pytest.raises(AssertionError):
+        BK.partition(513, 2, BK.BucketConfig())
+
+
+def _uniform_pplan(C, D, sizes, cfg, group="g", name="p"):
+    buckets, off = [], 0
+    for i, c in enumerate(sizes):
+        buckets.append(BK.Bucket(index=i, offset=off, chunk_elems=c,
+                                 seg_elems=D * c, sync=cfg))
+        off += c
+    return BK.ParamPlan(group=group, name=name, tensor_class="body",
+                        chunklen=C, layers=1, buckets=tuple(buckets))
+
+
+# ---------------------------------------------------------------------------
+# policy engine
+# ---------------------------------------------------------------------------
+
+
+def test_policy_rule_precedence_and_min_override():
+    loco = SyncConfig(strategy="loco")
+    fp = SyncConfig(strategy="fp")
+    loco8 = dataclasses.replace(loco, quant=QuantConfig(bits=8))
+    pol = POL.SyncPolicy(
+        default=loco,
+        rules=(POL.Rule(sync=fp, tensor_class="norm"),
+               POL.Rule(sync=loco8, name_glob="blocks/wq*"),
+               POL.Rule(sync=fp, name_glob="blocks/*")),  # shadowed for wq
+        min_compress_elems=4096)
+    assert pol.resolve("blocks/norm1", "norm", 1 << 20) == fp
+    assert pol.resolve("blocks/wq", "body", 1 << 20) == loco8
+    assert pol.resolve("blocks/wo", "body", 1 << 20) == fp
+    assert pol.resolve("embed/tok", "embed", 1 << 20) == loco
+    # tiny buckets drop to fp regardless of the matched rule
+    assert pol.resolve("embed/tok", "embed", 1024).strategy == "fp"
+    assert pol.resolve("blocks/wq", "body", 1024).strategy == "fp"
+
+
+def test_policy_parse_roundtrip():
+    base = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+    pol = POL.parse_policy("embed=loco8,norm=fp,min=65536", base)
+    assert pol.min_compress_elems == 65536
+    assert pol.resolve("e/tok", "embed", 1 << 20).quant.bits == 8
+    assert pol.resolve("b/n1", "norm", 1 << 20).strategy == "fp"
+    assert pol.resolve("b/wq", "body", 1 << 20) == base
+    with pytest.raises(ValueError):
+        POL.parse_policy("body=float13", base)
+    with pytest.raises(ValueError, match="not a tensor class"):
+        POL.parse_policy("embd=loco8", base)  # typoed class must not be a glob
+    # real globs still accepted
+    assert POL.parse_policy("block/w*=fp", base).rules[0].name_glob == "block/w*"
+
+
+def test_classify():
+    from repro.core.flatparam import ParamInfo
+    assert POL.classify(ParamInfo("tok", (512, 64), init="embed")) == "embed"
+    assert POL.classify(ParamInfo("n1", (64,), init="ones")) == "norm"
+    assert POL.classify(ParamInfo("wq", (64, 64))) == "body"
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the monolithic path (acceptance property)
+# ---------------------------------------------------------------------------
+
+
+def _compare_once(mesh, cfg, sizes, n_nodes=2):
+    """Run monolithic dist_sync and bucketed dist_sync_buckets on the same
+    gradients; return (shard_mono, shard_buck, state_mono, state_buck_flat)
+    with bucket states scattered back into monolithic flat order."""
+    D = n_nodes
+    C = sum(sizes)
+    n = D * C
+    pplan = _uniform_pplan(C, D, sizes, cfg)
+
+    def body(g):
+        g_local = g.reshape(-1)
+        sh_m, ns_m = dist_sync(g_local, init_state(cfg, n), cfg, ("data",))
+        states = tuple(
+            jnp.zeros((b.seg_elems,), state_dtype(cfg)) if cfg.needs_state()
+            else jnp.zeros((1,), jnp.float32) for b in pplan.buckets)
+        sh_b, ns_b = dist_sync_buckets(g_local, states, pplan, ("data",))
+        # scatter bucket states back to flat (D, C) order for comparison
+        if cfg.needs_state():
+            flat = jnp.zeros((D, C), jnp.float32)
+            for b, ns in zip(pplan.buckets, ns_b):
+                flat = flat.at[:, b.offset:b.offset + b.chunk_elems].set(
+                    ns.astype(jnp.float32).reshape(D, b.chunk_elems))
+            ns_flat = flat.reshape(-1)
+        else:
+            ns_flat = jnp.zeros((n,), jnp.float32)
+        return sh_m[None], sh_b[None], ns_m.astype(jnp.float32)[None], ns_flat[None]
+
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P("data"),),
+        out_specs=(P("data"), P("data"), P("data"), P("data")),
+        check_vma=False))
+    g = jax.random.normal(jax.random.PRNGKey(0), (D, n)) * 1e-3
+    return fn(g)
+
+
+@pytest.mark.parametrize("strategy", ["loco", "ef", "naive4", "fp"])
+@pytest.mark.parametrize("mode", ["block", "fixed"])
+def test_bucketed_bitexact_monolithic(mesh22, strategy, mode):
+    qc = QuantConfig(mode=mode, scale=2.0**10)
+    cfg = SyncConfig(strategy=strategy, quant=qc)
+    sh_m, sh_b, ns_m, ns_b = _compare_once(mesh22, cfg, sizes=(512, 1024, 512))
+    np.testing.assert_array_equal(np.asarray(sh_m), np.asarray(sh_b))
+    if cfg.needs_state():
+        np.testing.assert_array_equal(np.asarray(ns_m), np.asarray(ns_b))
+
+
+def test_bucketed_gather_grad_matches_monolithic(mesh22):
+    """gather_with_sync_buckets' custom_vjp carries the per-bucket state
+    tuple and produces the same grads + states as the monolithic hijack."""
+    cfg = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+    D, sizes = 2, (512, 512)
+    C = sum(sizes)
+    n = D * C
+    pplan = _uniform_pplan(C, D, sizes, cfg)
+
+    def step(w, e_mono, e_b0, e_b1, xx):
+        def loss_m(w, e):
+            return jnp.sum(gather_with_sync(w, e, cfg, ("data",))
+                           .astype(jnp.float32) * xx)
+
+        def loss_b(w, es):
+            return jnp.sum(gather_with_sync_buckets(w, es, pplan, ("data",))
+                           .astype(jnp.float32) * xx)
+
+        gm, em = jax.grad(loss_m, argnums=(0, 1))(w, e_mono)
+        gb, eb = jax.grad(loss_b, argnums=(0, 1))(w, (e_b0, e_b1))
+        return gm, gb, em[None], eb[0][None], eb[1][None]
+
+    fn = jax.jit(jax.shard_map(
+        step, mesh=mesh22,
+        in_specs=(P("data"), P(None), P(None), P(None), P(None)),
+        out_specs=(P("data"), P("data"), P(None), P(None), P(None)),
+        check_vma=False))
+    w = jnp.zeros((n,), jnp.bfloat16)
+    x = (jax.random.normal(jax.random.PRNGKey(3), (n,)) * 1e-3)
+    e = jnp.zeros((n,), jnp.float8_e4m3fn)
+    ebs = [jnp.zeros((D * c,), jnp.float8_e4m3fn) for c in sizes]
+    gm, gb, em, eb0, eb1 = fn(w, e, ebs[0], ebs[1], x)
+    np.testing.assert_array_equal(np.asarray(gm, np.float32),
+                                  np.asarray(gb, np.float32))
+    # bucket states == the matching flat slices of the monolithic state
+    em = np.asarray(em[0], np.float32).reshape(D, C)
+    np.testing.assert_array_equal(
+        np.asarray(eb0[0], np.float32).reshape(D, -1), em[:, :sizes[0]])
+    np.testing.assert_array_equal(
+        np.asarray(eb1[0], np.float32).reshape(D, -1), em[:, sizes[0]:])
+    assert np.abs(em).max() > 0  # the hijack actually produced feedback
+
+
+# ---------------------------------------------------------------------------
+# wire telemetry (acceptance: prediction == actual array bytes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [
+    SyncConfig(strategy="loco", quant=QuantConfig(bits=4, mode="block")),
+    SyncConfig(strategy="loco", quant=QuantConfig(bits=8, mode="block")),
+    SyncConfig(strategy="naive4", quant=QuantConfig(bits=4, mode="fixed")),
+    SyncConfig(strategy="ef", quant=QuantConfig(bits=8, mode="fixed")),
+])
+def test_wire_prediction_matches_actual_arrays(cfg):
+    from repro.telemetry import wire as W
+    n = 2048
+    h = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 1e-3
+    payload, scales = Q.compress(h, cfg.quant)
+    assert W.payload_bytes(n, cfg) == payload.size * payload.dtype.itemsize
+    assert W.scale_bytes(n, cfg) == scales.size * scales.dtype.itemsize
+
+
+def test_plan_report_totals():
+    from repro.telemetry import wire as W
+    cfg = SyncConfig(strategy="loco", quant=QuantConfig(bits=4, mode="block"))
+    fp = SyncConfig(strategy="fp")
+    pplan = BK.ParamPlan(
+        group="g", name="p", tensor_class="body", chunklen=1024, layers=3,
+        buckets=(BK.Bucket(0, 0, 512, 1024, cfg),
+                 BK.Bucket(1, 512, 512, 1024, fp)))
+    rep = W.plan_report(BK.SyncPlan(params=(pplan,)))
+    # loco bucket: 1024/2 payload + 1024/256*4 scales; fp bucket: 2*1024
+    per_layer = (512 + 16) + 2048
+    assert rep.total_wire == 3 * per_layer
+    assert rep.bf16_bytes == 3 * 2 * 2048
+    assert rep.by_class() == {"body": 3 * per_layer}
+    assert "wire/step/device" in W.format_report(rep)
+
+
+# ---------------------------------------------------------------------------
+# reset schedule (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_reset_skips_step0():
+    cfg = SyncConfig(strategy="loco", reset_every=4)
+    st = jnp.ones((8,), jnp.float32)
+    # step 0 must NOT fire (the old `step % T == 0` zeroed fresh state)
+    np.testing.assert_array_equal(maybe_reset(st, jnp.int32(0), cfg), st)
+    np.testing.assert_array_equal(maybe_reset(st, jnp.int32(1), cfg), st)
+    np.testing.assert_array_equal(maybe_reset(st, jnp.int32(3), cfg), st)
+    # steps T, 2T fire
+    assert float(jnp.abs(maybe_reset(st, jnp.int32(4), cfg)).max()) == 0.0
+    assert float(jnp.abs(maybe_reset(st, jnp.int32(8), cfg)).max()) == 0.0
+    # disabled reset never fires
+    cfg0 = SyncConfig(strategy="loco", reset_every=0)
+    np.testing.assert_array_equal(maybe_reset(st, jnp.int32(0), cfg0), st)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end train step
+# ---------------------------------------------------------------------------
+
+CFG = reduced(get_arch("llama2-400m"))
+SHAPE = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+
+
+def _train(mesh, run: RunConfig, steps=4, seed=0):
+    init_fn, _ = make_init(CFG, run, mesh)
+    chunks, states, opt = init_fn(jax.random.PRNGKey(seed))
+    bundle = make_train_step(CFG, run, mesh, SHAPE)
+    bf = make_batch_fn(DataConfig(vocab=CFG.vocab, seq_len=SHAPE.seq_len,
+                                  global_batch=SHAPE.global_batch, seed=seed))
+    metrics = []
+    for i in range(steps):
+        chunks, states, opt, m = bundle.fn(chunks, states, opt, jnp.int32(i),
+                                           bf(jnp.int32(i)))
+        metrics.append(m)
+    return np.array([float(m["loss"]) for m in metrics]), states, metrics
+
+
+def test_train_step_bucketed_uniform_matches_monolithic(mesh22):
+    sync = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+    base = RunConfig(sync=sync, optimizer="adam", microbatch=2,
+                     total_steps=4, warmup_steps=1, lr=2e-3)
+    l_mono, _, _ = _train(mesh22, base)
+    # small buckets => every sizable param splits into several
+    l_buck, states, _ = _train(
+        mesh22, dataclasses.replace(base, bucket_bytes=64 << 10))
+    np.testing.assert_array_equal(l_mono, l_buck)
+    # state leaves became per-bucket tuples
+    tuples = [s for g in states.values() for s in g.values()
+              if isinstance(s, tuple)]
+    assert tuples and any(len(t) > 1 for t in tuples)
+
+
+def test_train_step_mixed_policy_and_telemetry(mesh22):
+    sync = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+    pol = POL.parse_policy("embed=loco8,norm=fp,min=16384", sync)
+    run = RunConfig(sync=sync, optimizer="adam", microbatch=2,
+                    total_steps=4, warmup_steps=1, lr=2e-3,
+                    bucket_bytes=64 << 10, policy=pol, telemetry=True)
+    losses, _, metrics = _train(mesh22, run)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] + 0.05  # mixed-precision sync still trains
+    errs = [float(m["err_norm"]) for m in metrics]
+    assert np.isfinite(errs).all()
+    assert errs[-1] > 0  # loco buckets accumulated feedback
+
+
+def test_plan_shapes_match_runtime(mesh22):
+    """Static plan/spec/shape plumbing agrees with what init produces."""
+    from repro.core import flatparam as FP
+    from repro.core.flatparam import MeshTopo
+    from repro.launch.steps import build_sync_plan
+    sync = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+    run = RunConfig(sync=sync, bucket_bytes=64 << 10)
+    topo = MeshTopo.from_mesh(mesh22)
+    from repro.launch.steps import build_model
+    groups = build_model(CFG, topo.tp).groups()
+    plan = build_sync_plan(run, groups, topo)
+    assert plan is not None and plan.n_buckets > len(plan.params)
+    _, sshapes = FP.train_state_shapes(groups, sync, topo, plan=plan)
+    init_fn, _ = make_init(CFG, run, mesh22)
+    _, states, _ = init_fn(jax.random.PRNGKey(0))
+    jax.tree.map(lambda sh, st: (sh.shape, sh.dtype) == (st.shape, st.dtype)
+                 or pytest.fail(f"{sh} vs {st.shape}{st.dtype}"),
+                 sshapes, states,
+                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

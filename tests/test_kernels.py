@@ -1,10 +1,11 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as hst
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.kernels import loco_quant as LQ
 from repro.kernels import ref as R

@@ -4,12 +4,13 @@ The centerpiece is the Lemma-2 property test: LoCo's *accumulated*
 deviation  ||sum_k (g_hat_k - g_k)||  stays bounded (error feedback cancels
 past mistakes), while naive quantization's deviation grows ~linearly in k.
 """
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as hst
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.loco import SyncConfig, deviation_bound, init_state, sim_init, sim_sync
 from repro.core.quantizer import QuantConfig

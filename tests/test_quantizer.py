@@ -1,10 +1,11 @@
 """Unit + property tests for the quantization codecs (paper Eqn. 1/7)."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as hst
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import quantizer as Q
 from repro.core.quantizer import QuantConfig
