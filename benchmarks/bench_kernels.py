@@ -1,26 +1,42 @@
-"""Kernel microbenchmarks: fused Pallas path vs unfused jnp reference.
+"""Kernel microbenchmarks: fused Pallas path vs unfused jnp codec oracle,
+swept across the fast-path registry's (strategy, bits) cells.
 
 On this CPU container the Pallas kernels run in interpret mode (Python), so
 wall-clock favors the jnp path; the meaningful CPU-side numbers are the
 jnp-path timings and the *byte-traffic* model (the fused kernel reads the
-gradient once and writes payload+scales+error once: ~2.6 bytes/element vs
-~14 for the unfused chain).  The derived column reports both.
+gradient once and writes payload+scales+error once vs ~6 f32-wide passes
+for the unfused chain).  Each sweep cell reports both, plus which side is
+fused (mirrors the coverage table in EXPERIMENTS.md §Kernels).
+
+  PYTHONPATH=src python benchmarks/bench_kernels.py [--quick]
+  -> BENCH_kernels.json  (+ name,us_per_call,derived CSV rows)
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import quantizer as Q
+try:
+    from benchmarks.common import csv_row
+except ModuleNotFoundError:  # invoked as `python benchmarks/bench_kernels.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.common import csv_row
+from repro.core import codec as codec_lib
+from repro.core.loco import SyncConfig
 from repro.core.quantizer import QuantConfig
-from repro.kernels import loco_quant as LQ
-from benchmarks.common import csv_row
+
+D = 8  # simulated peers for the decode side
 
 
 def _time(fn, *args, iters=20):
-    fn(*args)  # compile
+    out = fn(*args)  # compile
+    jax.block_until_ready(out)
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)
@@ -28,48 +44,90 @@ def _time(fn, *args, iters=20):
     return (time.time() - t0) / iters * 1e6
 
 
-def run():
-    n = 1 << 20
-    g = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 1e-3
-    e8 = jnp.zeros((n,), jnp.float8_e4m3fn)
-    qc = QuantConfig(mode="block", error_codec="f8")
+def _cfg(strategy: str, bits: int, use_kernels: bool) -> SyncConfig:
+    return SyncConfig(strategy=strategy, use_kernels=use_kernels,
+                      quant=QuantConfig(bits=bits, mode="block"))
 
-    @jax.jit
-    def jnp_path(g, e8):
-        e = Q.error_decode(e8, qc)
-        h = g + e
-        payload, scales = Q.compress(h, qc)
-        d = Q.decompress(payload, scales, qc)
-        e_new = Q.error_encode(0.5 * e + 0.5 * (h - d), qc)
-        return payload, scales, e_new
 
-    us_jnp = _time(jnp_path, g, e8)
-    csv_row("kernels/compress_jnp_1M", us_jnp, "unfused reference path")
+def _traffic_model(strategy: str, bits: int) -> tuple[float, float]:
+    """(unfused, fused) HBM bytes per element for the encode side."""
+    state = {"loco": 1.0, "ef": 2.0, "onebit": 2.0}.get(strategy, 0.0)
+    pay = 1.0 / 8 if strategy == "onebit" else bits / 8.0
+    sc = 0.0 if strategy == "onebit" else 4.0 / 256
+    # unfused: read g + state, materialize h, q, d, e_tilde as f32 passes
+    unfused = 4 + state + 4 + 4 + pay + sc + 4 + 4 + state
+    fused = 4 + state + pay + sc + state
+    return unfused, fused
 
-    us_pl = _time(lambda a, b: LQ.loco_compress(a, b, beta=0.5, escale=2.0**14,
-                                                interpret=True), g, e8, iters=2)
-    csv_row("kernels/compress_pallas_interpret_1M", us_pl,
-            "interpret-mode (correctness harness, not perf)")
 
-    # byte-traffic model for the fused kernel on TPU
-    unfused = 4 + 1 + 4 + 4 + 0.5 + 4 + 0.5 + 4 + 4 + 1  # rough rw chain
-    fused = 4 + 1 + 0.5 + 4 / 256 + 1
-    csv_row("kernels/traffic_model", 0.0,
-            f"bytes_per_elem unfused~{unfused:.1f} fused~{fused:.2f} "
-            f"(x{unfused/fused:.1f} HBM reduction)")
+def sweep_cells(quick: bool):
+    cells = [("loco", 4), ("loco", 8), ("ef", 4), ("onebit", 1)]
+    if not quick:
+        cells += [("ef", 8), ("naive4", 4), ("naive4", 8)]
+    return cells
 
-    D = 8
-    pay = jnp.zeros((D, n // 2), jnp.int8)
-    sc = jnp.ones((D, n // 256), jnp.float32)
 
-    @jax.jit
-    def jnp_mean(pay, sc):
-        deq = jax.vmap(lambda p, s: Q.decompress(p, s, qc))(pay, sc)
-        return jnp.mean(deq, axis=0)
+def run(quick: bool = False):
+    n = (1 << 17) if quick else (1 << 20)
+    iters = 3 if quick else 20
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (n,)) * 1e-3
+    results = []
+    for strategy, bits in sweep_cells(quick):
+        jcfg = _cfg(strategy, bits, use_kernels=False)
+        kcfg = _cfg(strategy, bits, use_kernels=True)
+        codec = codec_lib.get_codec(jcfg)
+        kodec = codec_lib.get_codec(kcfg)
+        fp = codec_lib.fastpath_for(kcfg)
+        state = codec.init_state(n)
 
-    us_mean = _time(jnp_mean, pay, sc)
-    csv_row("kernels/dequant_mean_jnp_8x1M", us_mean, "unfused reference path")
+        enc_jnp = jax.jit(lambda g, s, c=codec: c.encode(g, s))
+        us_enc_jnp = _time(enc_jnp, g, state, iters=iters)
+        us_enc_fused = None
+        if fp is not None and fp.encode is not None:
+            enc_k = jax.jit(lambda g, s, c=kodec: c.encode(g, s))
+            us_enc_fused = _time(enc_k, g, state, iters=max(2, iters // 4))
+
+        wire, _ = codec.encode(g, state)
+        recv = jax.tree.map(
+            lambda a: jnp.stack([a] * D) if a.size > 1
+            else jnp.broadcast_to(a, (D,) + a.shape), wire)
+        dec_jnp = jax.jit(lambda r, c=codec: c.decode_mean(r))
+        us_dec_jnp = _time(dec_jnp, recv, iters=iters)
+        us_dec_fused = None
+        if fp is not None and fp.decode_mean is not None:
+            dec_k = jax.jit(lambda r, c=kodec: c.decode_mean(r))
+            us_dec_fused = _time(dec_k, recv, iters=max(2, iters // 4))
+
+        unfused_b, fused_b = _traffic_model(strategy, bits)
+        name = f"{strategy}{bits}"
+        csv_row(f"kernels/encode_jnp_{name}", us_enc_jnp, "unfused codec oracle")
+        if us_enc_fused is not None:
+            csv_row(f"kernels/encode_fused_{name}", us_enc_fused,
+                    "interpret-mode (correctness harness, not perf)")
+        csv_row(f"kernels/traffic_{name}", 0.0,
+                f"bytes_per_elem unfused~{unfused_b:.2f} fused~{fused_b:.2f} "
+                f"(x{unfused_b / fused_b:.1f} HBM reduction)")
+        results.append({
+            "strategy": strategy, "bits": bits, "n": n,
+            "encode_fused_registered": bool(fp is not None and fp.encode),
+            "decode_fused_registered": bool(fp is not None and fp.decode_mean),
+            "us_encode_jnp": us_enc_jnp,
+            "us_encode_fused_interpret": us_enc_fused,
+            "us_decode_mean_jnp": us_dec_jnp,
+            "us_decode_mean_fused_interpret": us_dec_fused,
+            "traffic_bytes_per_elem": {"unfused": unfused_b, "fused": fused_b},
+        })
+    out = {"n_elems": n, "peers": D, "backend": jax.default_backend(),
+           "interpret": True, "cells": results}
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote BENCH_kernels.json ({len(results)} cells)")
+    return out
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small arrays, few iters, core cells only (CI smoke)")
+    run(**vars(ap.parse_args()))

@@ -1,0 +1,352 @@
+"""Wire-codec registry: one implementation per sync strategy, three callers.
+
+Before this module the per-strategy math lived three times — in
+``core/loco`` (simulation), in ``core/comm.dist_sync``'s if/elif chain
+(distributed), and in ``kernels/ref`` (kernel oracles) — and every new wire
+format cost three hand-synchronized implementations.  Now each strategy is
+a registered :class:`Codec` and all three callers derive from it, so
+simulation == distributed == oracle *by construction*:
+
+* ``encode(g, state, key) -> (wire, new_state)``: the per-node compressor.
+  ``wire`` is a dict of arrays (the pytree that crosses the all-to-all);
+  ``new_state`` the updated compressor state.
+* ``decode_mean(recv) -> shard``: what the receiver reconstructs from the
+  ``D`` peer rows of each wire leaf (leading axis ``D``), averaged.
+* ``wire_shapes(n) -> {name: WireLeaf}``: static shapes/dtypes of the wire
+  arrays for an ``(n,)`` segment plus *how* each leaf crosses the wire
+  (``split`` = all-to-all rows, ``gather`` = per-peer metadata all-gather,
+  ``none`` = static, known to every peer already).  ``telemetry/wire``
+  computes its byte accounting from this instead of hand-mirroring the
+  quantizer.
+
+Pallas fast paths register against ``(strategy, bits, mode, error_codec)``
+via :func:`register_fastpath`; ``encode``/``decode_mean`` dispatch through
+the registry automatically when ``SyncConfig.use_kernels`` is set (a
+per-bucket attribute — ``core/policy`` rules can turn kernels on for one
+tensor class only).  An unregistered combination silently falls back to the
+jnp oracle (``encode_ref``/``decode_mean_ref``), so ``use_kernels=True`` is
+always safe to request.
+
+``fp`` (reduce-scatter, not an all-to-all wire) and ``ef21`` (needs a
+receiver-side state shard) stay outside the registry; ``dist_sync`` keeps
+their dedicated paths.  See DESIGN.md §10.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer as Q
+from repro.core.loco import SyncConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class WireLeaf:
+    """Static description of one wire array for an ``(n,)`` segment.
+
+    ``comm`` says how the leaf crosses the dp group:
+
+    * ``split``  -- row ``i`` of ``reshape(D, -1)`` is peer ``i``'s piece
+      (all-to-all); each device sends and receives ``nbytes``.
+    * ``gather`` -- per-node metadata every peer needs (all-gather); each
+      device sends ``nbytes`` and receives ``D * nbytes``.
+    * ``none``   -- static metadata (e.g. the fixed-mode scale): carried in
+      the wire pytree for decode but never exchanged.
+    """
+
+    shape: tuple[int, ...]
+    dtype: Any
+    comm: Literal["split", "gather", "none"] = "split"
+
+    @property
+    def nbytes(self) -> int:
+        return math.prod(self.shape) * jnp.dtype(self.dtype).itemsize
+
+
+class Codec:
+    """One sync strategy's wire format.  Subclasses implement the ``_ref``
+    oracles; ``encode``/``decode_mean`` add the fast-path dispatch."""
+
+    strategy: str
+
+    def __init__(self, cfg: SyncConfig):
+        assert cfg.strategy == self.strategy, (cfg.strategy, self.strategy)
+        self.cfg = cfg
+
+    # ---- static facts ------------------------------------------------------
+    def state_dtype(self):
+        raise NotImplementedError
+
+    def needs_state(self) -> bool:
+        return self.cfg.needs_state()
+
+    def init_state(self, n: int) -> jax.Array:
+        if self.needs_state():
+            return jnp.zeros((n,), self.state_dtype())
+        return jnp.zeros((1,), jnp.float32)
+
+    def wire_shapes(self, n: int) -> dict[str, WireLeaf]:
+        raise NotImplementedError
+
+    # ---- jnp oracles (the correctness contract) ----------------------------
+    def encode_ref(self, g: jax.Array, state: jax.Array,
+                   key: jax.Array | None = None):
+        raise NotImplementedError
+
+    def decode_mean_ref(self, recv: dict[str, jax.Array]) -> jax.Array:
+        raise NotImplementedError
+
+    # ---- dispatching entry points ------------------------------------------
+    def encode(self, g: jax.Array, state: jax.Array,
+               key: jax.Array | None = None):
+        """Compress one local segment -> (wire pytree, new_state).
+
+        A threaded ``key`` does not disable the fast path: with
+        ``stochastic_rounding`` off the oracle ignores the key too, and
+        with it on ``_fastpath()`` already returns None.
+        """
+        fp = self._fastpath()
+        if fp is not None and fp.encode is not None:
+            return fp.encode(self.cfg, g, state)
+        return self.encode_ref(g, state, key)
+
+    def decode_mean(self, recv: dict[str, jax.Array]) -> jax.Array:
+        """Received per-peer wire rows (leading axis D) -> averaged shard."""
+        fp = self._fastpath()
+        if fp is not None and fp.decode_mean is not None:
+            return fp.decode_mean(self.cfg, recv)
+        return self.decode_mean_ref(recv)
+
+    def _fastpath(self) -> "FastPath | None":
+        if not self.cfg.use_kernels or self.cfg.quant.stochastic_rounding:
+            return None
+        return fastpath_for(self.cfg)
+
+    def roundtrip(self, g: jax.Array, state: jax.Array,
+                  key: jax.Array | None = None):
+        """One-node encode -> decode: (dequantized contribution, new_state).
+
+        This is the simulation form (``loco.local_compress``): running the
+        *wire* round trip, not a shortcut, keeps sim == distributed.
+        """
+        wire, new_state = self.encode(g, state, key)
+        d = self.decode_mean(jax.tree.map(lambda a: a[None], wire))
+        return d, new_state
+
+
+# ---------------------------------------------------------------------------
+# codec registry
+# ---------------------------------------------------------------------------
+
+CODECS: dict[str, type[Codec]] = {}
+
+
+def register_codec(cls: type[Codec]) -> type[Codec]:
+    CODECS[cls.strategy] = cls
+    return cls
+
+
+def get_codec(cfg: SyncConfig) -> Codec:
+    try:
+        cls = CODECS[cfg.strategy]
+    except KeyError:
+        raise ValueError(
+            f"no wire codec registered for strategy {cfg.strategy!r} "
+            f"(registered: {sorted(CODECS)}); 'fp' and 'ef21' have no "
+            "all-to-all wire format and are handled outside the registry"
+        ) from None
+    return cls(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Pallas fast-path registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FastPath:
+    """Fused kernel entry points for one ``(strategy, bits, mode, error)``
+    cell.  ``encode(cfg, g, state)`` / ``decode_mean(cfg, recv)`` mirror the
+    codec oracles; either side may be None (that side falls back to jnp)."""
+
+    encode: Callable | None = None
+    decode_mean: Callable | None = None
+
+
+FASTPATHS: dict[tuple, FastPath] = {}
+_FASTPATHS_LOADED = False
+
+
+def fastpath_key(cfg: SyncConfig) -> tuple:
+    """Normalize a SyncConfig to its fast-path registry key.
+
+    The key is ``(strategy, bits, mode, error_codec)`` where the last three
+    are the *effective* wire facts: ``ef``/``onebit`` store bf16 error
+    regardless of ``quant.error_codec``, ``onebit`` is 1-bit with a
+    per-segment L1 scale, stateless strategies have error codec ``none``.
+    """
+    qc = cfg.quant
+    if cfg.strategy == "onebit":
+        return ("onebit", 1, "l1", "bf16")
+    err = {"loco": qc.error_codec, "ef": "bf16"}.get(cfg.strategy, "none")
+    return (cfg.strategy, qc.bits, qc.mode, err)
+
+
+def register_fastpath(key: tuple, *, encode: Callable | None = None,
+                      decode_mean: Callable | None = None) -> None:
+    FASTPATHS[key] = FastPath(encode=encode, decode_mean=decode_mean)
+
+
+def fastpath_for(cfg: SyncConfig) -> FastPath | None:
+    # The fused kernels tile at QBLOCK = 256 scales per block; a
+    # non-default block size must fall back to the jnp oracle (the key
+    # deliberately omits `block`, so guard it here).
+    if (cfg.strategy != "onebit" and cfg.quant.mode == "block"
+            and cfg.quant.block != Q.DEFAULT_BLOCK):
+        return None
+    _load_default_fastpaths()
+    return FASTPATHS.get(fastpath_key(cfg))
+
+
+def _load_default_fastpaths() -> None:
+    """Import the kernel package once; it registers its fast paths."""
+    global _FASTPATHS_LOADED
+    if not _FASTPATHS_LOADED:
+        _FASTPATHS_LOADED = True
+        from repro.kernels import ops  # noqa: F401  (registers on import)
+
+
+# ---------------------------------------------------------------------------
+# quantized codecs (loco / ef / naive4): int4/int8 payload + scales
+# ---------------------------------------------------------------------------
+
+class _QuantizedCodec(Codec):
+    """Shared wire format of the payload+scales strategies."""
+
+    def wire_shapes(self, n: int) -> dict[str, WireLeaf]:
+        qc = self.cfg.quant
+        assert qc.bits in (4, 8), qc.bits
+        payload = WireLeaf((n // 2,) if qc.bits == 4 else (n,), jnp.int8)
+        if qc.mode == "block":
+            scales = WireLeaf((n // qc.block,), jnp.float32)
+        else:  # static scale: size-1 array, never exchanged
+            scales = WireLeaf((1,), jnp.float32, comm="none")
+        return {"payload": payload, "scales": scales}
+
+    def decode_mean_ref(self, recv):
+        qc = self.cfg.quant
+
+        def deq(p_row, s_row):
+            return Q.decompress(p_row, s_row, qc)
+
+        contrib = jax.vmap(deq)(recv["payload"], recv["scales"])
+        return jnp.mean(contrib, axis=0)
+
+    def _check_key(self, key):
+        if self.cfg.quant.stochastic_rounding and key is None:
+            raise ValueError(
+                f"{self.strategy}: QuantConfig.stochastic_rounding is set "
+                "but no PRNG key reached the encode path — rounding would "
+                "silently fall back to round-to-nearest. Thread a per-step "
+                "key through dist_sync/sim_sync, or disable "
+                "stochastic_rounding."
+            )
+
+
+@register_codec
+class LocoCodec(_QuantizedCodec):
+    """Paper Algorithm 1: error-feedback + moving average + 8-bit error."""
+
+    strategy = "loco"
+
+    def state_dtype(self):
+        return Q.error_dtype(self.cfg.quant)
+
+    def encode_ref(self, g, state, key=None):
+        self._check_key(key)
+        cfg, qc = self.cfg, self.cfg.quant
+        g = g.astype(jnp.float32)
+        e = Q.error_decode(state, qc)                    # decompressor(e; s_e)
+        h = g + e                                        # Eqn. (2)
+        payload, scales = Q.compress(h, qc, key)         # Eqn. (3)
+        d = Q.decompress(payload, scales, qc)
+        e_tilde = (1.0 - cfg.beta) * e + cfg.beta * (h - d)   # Eqn. (5)
+        return ({"payload": payload, "scales": scales},
+                Q.error_encode(e_tilde, qc))             # Eqn. (7)
+
+
+@register_codec
+class EFCodec(_QuantizedCodec):
+    """Seide et al. error feedback: full last-step error, no moving average."""
+
+    strategy = "ef"
+
+    def state_dtype(self):
+        return jnp.bfloat16
+
+    def encode_ref(self, g, state, key=None):
+        self._check_key(key)
+        qc = self.cfg.quant
+        h = g.astype(jnp.float32) + state.astype(jnp.float32)
+        payload, scales = Q.compress(h, qc, key)
+        d = Q.decompress(payload, scales, qc)
+        return ({"payload": payload, "scales": scales},
+                (h - d).astype(state.dtype))
+
+
+@register_codec
+class Naive4Codec(_QuantizedCodec):
+    """Zero++-style direct quantization, no error feedback (4- or 8-bit)."""
+
+    strategy = "naive4"
+
+    def state_dtype(self):
+        return jnp.float32  # dummy
+
+    def encode_ref(self, g, state, key=None):
+        self._check_key(key)
+        payload, scales = Q.compress(g.astype(jnp.float32), self.cfg.quant, key)
+        return {"payload": payload, "scales": scales}, state
+
+
+# ---------------------------------------------------------------------------
+# onebit: sign compression, 8 signs per wire byte + per-segment L1 scale
+# ---------------------------------------------------------------------------
+
+@register_codec
+class OnebitCodec(Codec):
+    """1-bit Adam-style sign compression with error feedback.
+
+    Wire: ``n/8`` packed sign bytes (bit j of byte k = sign of element
+    ``8k+j``) plus one f32 L1 scale, all-gathered so every peer can
+    reconstruct ``sign(h) * scale_peer``.  Receivers decode ``bit -> ±1``;
+    an exact zero encodes as ``-1`` (measure-zero, same convention in the
+    fused kernel and both sync forms).
+    """
+
+    strategy = "onebit"
+
+    def state_dtype(self):
+        return jnp.bfloat16
+
+    def wire_shapes(self, n: int) -> dict[str, WireLeaf]:
+        assert n % Q.SIGN_PACK == 0, n
+        return {"payload": WireLeaf((n // Q.SIGN_PACK,), jnp.uint8),
+                "scales": WireLeaf((1,), jnp.float32, comm="gather")}
+
+    def encode_ref(self, g, state, key=None):
+        h = g.astype(jnp.float32) + state.astype(jnp.float32)
+        scale = jnp.mean(jnp.abs(h))
+        bits = (h > 0).astype(jnp.uint8)
+        d = (2.0 * bits.astype(jnp.float32) - 1.0) * scale
+        return ({"payload": Q.pack_signs(bits), "scales": scale.reshape(1)},
+                (h - d).astype(state.dtype))
+
+    def decode_mean_ref(self, recv):
+        D = recv["payload"].shape[0]
+        bits = Q.unpack_signs(recv["payload"]).astype(jnp.float32)
+        contrib = (2.0 * bits - 1.0) * recv["scales"].reshape(D, 1)
+        return jnp.mean(contrib, axis=0)

@@ -19,9 +19,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import codec as codec_lib
 from repro.core import quantizer as Q
 from repro.core.buckets import ParamPlan
-from repro.core.loco import SyncConfig, local_compress
+from repro.core.loco import SyncConfig
 
 
 def axis_size(axes: tuple[str, ...]) -> int:
@@ -68,19 +69,52 @@ def all_to_all_chunks(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
 # distributed gradient synchronization (one segment)
 # ---------------------------------------------------------------------------
 
+def exchange_wire(
+    wire: dict[str, jax.Array],
+    shapes: dict[str, "codec_lib.WireLeaf"],
+    D: int,
+    dp_axes: tuple[str, ...],
+) -> dict[str, jax.Array]:
+    """Move every wire leaf across the dp group per its ``comm`` kind.
+
+    Returns the received pytree: each leaf with a leading peer axis ``D``
+    (``split`` -> all-to-all rows, ``gather`` -> per-peer metadata,
+    ``none`` -> the local copy broadcast — every peer already has it).
+    """
+    recv = {}
+    for name, leaf in shapes.items():
+        arr = wire[name]
+        if leaf.comm == "split":
+            recv[name] = all_to_all_chunks(arr.reshape(D, -1), dp_axes)
+        elif leaf.comm == "gather":
+            recv[name] = all_gather_flat(arr, dp_axes).reshape(D, *arr.shape)
+        else:  # static metadata, known to every peer
+            recv[name] = jnp.broadcast_to(arr, (D, *arr.shape))
+    return recv
+
+
 def dist_sync(
     g: jax.Array,
     state: jax.Array,
     cfg: SyncConfig,
     dp_axes: tuple[str, ...],
+    key: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Synchronize one flat gradient segment across the dp group.
 
     g:     (n,) local gradient segment, n divisible by D * 2 * block; row
            layout: element i belongs to peer ``i // (n/D)``'s shard.
     state: per-node compressor state (see loco.state_dtype)
+    key:   optional PRNG key for stochastic rounding (required when
+           ``cfg.quant.stochastic_rounding`` is set; the codec fails loudly
+           instead of silently rounding to nearest)
     returns (g_shard (n/D,), new_state): the *averaged* gradient piece this
     rank owns, and the updated local compressor state.
+
+    Every wire strategy runs the same three steps — ``codec.encode`` ->
+    exchange of the wire pytree -> ``codec.decode_mean`` — with Pallas fast
+    paths dispatched inside the codec when ``cfg.use_kernels`` is set (a
+    per-bucket attribute under the sync-plan policy engine).
     """
     n = g.shape[0]
     D = axis_size(dp_axes)
@@ -98,79 +132,18 @@ def dist_sync(
             "strategy='ef'/'loco' here."
         )
 
-    if cfg.strategy in ("loco", "ef", "naive4"):
-        qc = cfg.quant
-        use_kernels = (
-            cfg.use_kernels
-            and cfg.strategy == "loco"
-            and qc.mode == "block"
-            and qc.bits == 4
-            and qc.error_codec == "f8"
-        )
-        # --- local compensate + quantize (steps 1-2 of Algorithm 1) -------
-        if use_kernels:
-            from repro.kernels import ops as K
+    codec = codec_lib.get_codec(cfg)
+    # --- local compensate + quantize (steps 1-2 of Algorithm 1) -----------
+    wire, new_state = codec.encode(g, state, key)
 
-            payload, scales, new_state = K.loco_compress(
-                g, state, beta=cfg.beta, escale=qc.error_scale
-            )
-        else:
-            if cfg.strategy == "loco":
-                e = Q.error_decode(state, qc)
-                h = g + e
-            elif cfg.strategy == "ef":
-                h = g + state.astype(jnp.float32)
-            else:  # naive4
-                h = g
-            payload, scales = Q.compress(h, qc)
-            d = Q.decompress(payload, scales, qc)
-            # --- state update ----------------------------------------------
-            if cfg.strategy == "loco":
-                e_tilde = (1.0 - cfg.beta) * Q.error_decode(state, qc) + cfg.beta * (h - d)
-                new_state = Q.error_encode(e_tilde, qc)
-            elif cfg.strategy == "ef":
-                new_state = (h - d).astype(state.dtype)
-            else:
-                new_state = state
+    # --- exchange of the low-bit wire pytree (step 3 / §3.3) --------------
+    if cfg.hierarchical and len(dp_axes) == 2 and cfg.strategy == "loco":
+        return _hierarchical_exchange(wire["payload"], wire["scales"],
+                                      new_state, n, cfg.quant, dp_axes)
+    recv = exchange_wire(wire, codec.wire_shapes(n), D, dp_axes)
 
-        # --- all2all of the low-bit payload (step 3 / §3.3) ---------------
-        if cfg.hierarchical and len(dp_axes) == 2 and cfg.strategy == "loco":
-            return _hierarchical_exchange(payload, scales, new_state, n, qc, dp_axes)
-        pay_rows = payload.reshape(D, -1)
-        recv_pay = all_to_all_chunks(pay_rows, dp_axes)
-        if qc.mode == "block":
-            sc_rows = scales.reshape(D, -1)
-            recv_sc = all_to_all_chunks(sc_rows, dp_axes)
-        else:
-            recv_sc = jnp.broadcast_to(scales, (D, 1))
-
-        if use_kernels:
-            from repro.kernels import ops as K
-
-            g_shard = K.dequant_mean(recv_pay, recv_sc)
-        else:
-
-            def deq_row(p_row, s_row):
-                return Q.decompress(p_row, s_row, qc)
-
-            contrib = jax.vmap(deq_row)(recv_pay, recv_sc)  # (D, n/D) fp32
-            g_shard = jnp.mean(contrib, axis=0)
-        return g_shard, new_state
-
-    if cfg.strategy == "onebit":
-        h = g + state.astype(jnp.float32)
-        scale = jnp.mean(jnp.abs(h))
-        bits = (h > 0).astype(jnp.int8)  # 0/1 wire, 1 bit semantically
-        d = (2.0 * bits.astype(jnp.float32) - 1.0) * scale
-        new_state = (h - d).astype(state.dtype)
-        recv = all_to_all_chunks(bits.reshape(D, -1), dp_axes)
-        recv_scale = jax.lax.all_gather(scale, dp_axes[-1])  # per-peer scales
-        for a in reversed(dp_axes[:-1]):
-            recv_scale = jax.lax.all_gather(recv_scale, a, tiled=True)
-        contrib = (2.0 * recv.astype(jnp.float32) - 1.0) * recv_scale.reshape(D, 1)
-        return jnp.mean(contrib, axis=0), new_state
-
-    raise ValueError(cfg.strategy)
+    # --- receiver-side dequant + mean --------------------------------------
+    return codec.decode_mean(recv), new_state
 
 
 # ---------------------------------------------------------------------------
@@ -182,6 +155,7 @@ def dist_sync_buckets(
     states: tuple[jax.Array, ...],
     plan: ParamPlan,
     dp_axes: tuple[str, ...],
+    key: jax.Array | None = None,
 ) -> tuple[jax.Array, tuple[jax.Array, ...]]:
     """Synchronize a full local gradient bucket by bucket.
 
@@ -206,7 +180,8 @@ def dist_sync_buckets(
     for b, st in zip(plan.buckets, states):
         seg = jax.lax.slice_in_dim(gm, b.offset, b.offset + b.chunk_elems,
                                    axis=1).reshape(-1)
-        sh, ns = dist_sync(seg, st, b.sync, dp_axes)
+        kb = jax.random.fold_in(key, b.index) if key is not None else None
+        sh, ns = dist_sync(seg, st, b.sync, dp_axes, key=kb)
         shards.append(sh)
         new_states.append(ns)
     return jnp.concatenate(shards), tuple(new_states)

@@ -26,9 +26,23 @@ from repro.core.comm import (all_gather_flat, axis_size, dist_sync,
 from repro.core.loco import SyncConfig
 
 
+def _reject_stochastic_rounding(cfg: SyncConfig) -> None:
+    """The hijack backward has no PRNG-key input, so stochastic rounding
+    cannot run here — fail loudly at build time instead of silently
+    rounding to nearest (regression: tests/test_codec.py)."""
+    if cfg.strategy != "fp" and cfg.quant.stochastic_rounding:
+        raise ValueError(
+            "QuantConfig.stochastic_rounding is not supported on the "
+            "in-backward hijack path (the custom_vjp backward has no PRNG "
+            "key to thread); use the post-grad dist_sync/sim_sync with an "
+            "explicit key, or disable stochastic_rounding."
+        )
+
+
 @lru_cache(maxsize=None)
 def _make_gather(cfg: SyncConfig, dp_axes: tuple[str, ...]):
     """Build (and cache) the custom_vjp gather for a given static config."""
+    _reject_stochastic_rounding(cfg)
 
     @jax.custom_vjp
     def gather(w_chunk: jax.Array, state: jax.Array) -> jax.Array:
@@ -76,6 +90,8 @@ def _make_bucketed_gather(plan: ParamPlan, dp_axes: tuple[str, ...]):
     the per-bucket updated states as its cotangent (same float-dtype
     legality argument as the monolithic path — see module docstring).
     """
+    for b in plan.buckets:
+        _reject_stochastic_rounding(b.sync)
 
     @jax.custom_vjp
     def gather(w_chunk: jax.Array, states: tuple) -> jax.Array:

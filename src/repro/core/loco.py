@@ -13,7 +13,11 @@ Two execution forms of the same math:
   (paper §3.3), wired into the backward pass through
   ``repro.core.hijack.gather_with_sync``.
 
-Strategy registry (paper §5.2 baselines):
+Both forms share one implementation per strategy — the codec registry of
+:mod:`repro.core.codec` (DESIGN.md §10); the simulation runs each codec's
+encode -> decode wire round trip, so sim == distributed by construction.
+
+Strategies (paper §5.2 baselines):
 
 =========  =================================================================
 fp         full-precision reduce-scatter (the 16-bit Adam baseline)
@@ -28,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Literal
+from typing import Literal
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +49,12 @@ class SyncConfig:
     quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
     beta: float = 0.5            # moving-average weight on the *current* error (Eqn. 5)
     reset_every: int = 512       # T_c (Eqn. 7); 0 disables reset
-    use_kernels: bool = False    # route quant math through the Pallas kernels
+    # Dispatch encode/decode through the registered Pallas fast paths
+    # (codec.FASTPATHS).  Per-bucket under a sync plan: policy rules can
+    # set it per tensor class ("body=loco4+kernels").  Combinations with
+    # no registered kernel fall back to the jnp oracle, so this is always
+    # safe to enable.
+    use_kernels: bool = False
     # Beyond-paper: two-stage multi-pod exchange -- 4-bit all2all + fp32 mean
     # inside each pod (ICI), then an 8-bit all2all of the pod-means across
     # pods (DCN).  Cuts inter-pod traffic ~8x vs the flat dp-group all2all;
@@ -60,15 +69,18 @@ class SyncConfig:
 # ---------------------------------------------------------------------------
 # per-node compressor cores (pure: no collectives). Each returns
 #   (dequantized_contribution, new_state)
-# where `dequantized_contribution` is what the *receiver* reconstructs --
-# running the wire codec round-trip keeps simulation == distributed.
+# where `dequantized_contribution` is what the *receiver* reconstructs.
+# The wire strategies (loco/ef/naive4/onebit) are the registered codecs of
+# :mod:`repro.core.codec` run through their own encode -> decode round trip,
+# so simulation == distributed *by construction*; only `fp` (identity) and
+# `ef21` (receiver-side state, no all-to-all wire form) live here.
 # ---------------------------------------------------------------------------
 
 def state_dtype(cfg: SyncConfig):
-    if cfg.strategy == "loco":
-        return Q.error_dtype(cfg.quant)
-    if cfg.strategy in ("ef", "onebit"):
-        return jnp.bfloat16
+    from repro.core import codec as codec_lib
+
+    if cfg.strategy in codec_lib.CODECS:
+        return codec_lib.get_codec(cfg).state_dtype()
     if cfg.strategy == "ef21":
         return jnp.bfloat16
     return jnp.float32  # dummy
@@ -81,61 +93,33 @@ def init_state(cfg: SyncConfig, n: int) -> jax.Array:
     return jnp.zeros((1,), jnp.float32)
 
 
-def _loco_local(g: jax.Array, e8: jax.Array, cfg: SyncConfig):
-    """Paper Algorithm 1 steps 1-2 on one node.
-
-    g:  float32 local gradient (flat)
-    e8: 8-bit compensation error storage
-    returns (d = deq(compress(h)), e8_new)
-    """
-    qc = cfg.quant
-    e = Q.error_decode(e8, qc)                       # decompressor(e; s_e)
-    h = g + e                                        # Eqn. (2)
-    d = Q.roundtrip(h, qc)                           # Eqn. (3) then deq, = d_{k+1}
-    e_tilde = (1.0 - cfg.beta) * e + cfg.beta * (h - d)   # Eqn. (5)
-    e8_new = Q.error_encode(e_tilde, qc)             # Eqn. (7), reset applied by caller
-    return d, e8_new
-
-
-def _ef_local(g: jax.Array, e: jax.Array, cfg: SyncConfig):
-    """Seide et al. EF: compensate with last step's full compression error."""
-    h = g + e.astype(jnp.float32)
-    d = Q.roundtrip(h, cfg.quant)
-    return d, (h - d).astype(e.dtype)
-
-
-def _ef21_local(g: jax.Array, gest: jax.Array, cfg: SyncConfig):
+def _ef21_local(g: jax.Array, gest: jax.Array, cfg: SyncConfig,
+                key: jax.Array | None = None):
     """EF21: communicate the compressed innovation c = C(g - g_est)."""
-    c = Q.roundtrip(g - gest.astype(jnp.float32), cfg.quant)
+    if cfg.quant.stochastic_rounding and key is None:
+        raise ValueError(
+            "ef21: QuantConfig.stochastic_rounding is set but no PRNG key "
+            "reached the compressor (same loud-failure contract as the "
+            "codec registry)")
+    c = Q.roundtrip(g - gest.astype(jnp.float32), cfg.quant, key)
     gest_new = gest.astype(jnp.float32) + c
     return gest_new, gest_new.astype(gest.dtype)  # receiver reconstructs g_est + c
 
 
-def _naive4_local(g: jax.Array, _state: jax.Array, cfg: SyncConfig):
-    return Q.roundtrip(g, cfg.quant), _state
+def local_compress(g: jax.Array, state: jax.Array, cfg: SyncConfig,
+                   key: jax.Array | None = None):
+    """Dispatch to the strategy's per-node compressor. fp is identity.
 
-
-def _onebit_local(g: jax.Array, e: jax.Array, cfg: SyncConfig):
-    h = g + e.astype(jnp.float32)
-    scale = jnp.mean(jnp.abs(h))
-    d = jnp.sign(h) * scale
-    return d, (h - d).astype(e.dtype)
-
-
-LOCAL_COMPRESSORS: dict[str, Callable] = {
-    "loco": _loco_local,
-    "ef": _ef_local,
-    "ef21": _ef21_local,
-    "naive4": _naive4_local,
-    "onebit": _onebit_local,
-}
-
-
-def local_compress(g: jax.Array, state: jax.Array, cfg: SyncConfig):
-    """Dispatch to the strategy's per-node compressor. fp is identity."""
+    ``key`` (optional) seeds stochastic rounding in the quantized codecs;
+    required when ``cfg.quant.stochastic_rounding`` is set.
+    """
     if cfg.strategy == "fp":
         return g, state
-    return LOCAL_COMPRESSORS[cfg.strategy](g, state, cfg)
+    if cfg.strategy == "ef21":
+        return _ef21_local(g, state, cfg, key)
+    from repro.core import codec as codec_lib
+
+    return codec_lib.get_codec(cfg).roundtrip(g, state, key)
 
 
 def maybe_reset(state: jax.Array, step: jax.Array, cfg: SyncConfig) -> jax.Array:
@@ -164,16 +148,29 @@ def sim_init(cfg: SyncConfig, n_nodes: int, d: int) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def sim_sync(g_nodes: jax.Array, state: jax.Array, step: jax.Array, cfg: SyncConfig):
+def sim_sync(g_nodes: jax.Array, state: jax.Array, step: jax.Array,
+             cfg: SyncConfig, key: jax.Array | None = None):
     """One synchronization round over N simulated nodes.
 
     g_nodes: (N, d) per-node local gradients
     returns (g_hat (d,), new_state (N, d)) where g_hat is the gradient every
     node would reconstruct after the collective (paper Eqn. 8).
+
+    With ``stochastic_rounding`` configured, per-node rounding keys are
+    split from ``key`` (or, if none is given, derived from ``step`` so a
+    training loop gets fresh noise every round without extra plumbing).
     """
     if cfg.strategy == "fp":
         return jnp.mean(g_nodes, axis=0), state
-    d, new_state = jax.vmap(lambda g, s: local_compress(g, s, cfg))(g_nodes, state)
+    if cfg.quant.stochastic_rounding and cfg.strategy != "onebit":
+        if key is None:
+            key = jax.random.fold_in(jax.random.PRNGKey(0x10C0), step)
+        keys = jax.random.split(key, g_nodes.shape[0])
+        d, new_state = jax.vmap(
+            lambda g, s, k: local_compress(g, s, cfg, key=k)
+        )(g_nodes, state, keys)
+    else:
+        d, new_state = jax.vmap(lambda g, s: local_compress(g, s, cfg))(g_nodes, state)
     new_state = jax.vmap(lambda s: maybe_reset(s, step, cfg))(new_state)
     return jnp.mean(d, axis=0), new_state
 

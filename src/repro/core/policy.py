@@ -91,7 +91,7 @@ def uniform(cfg: SyncConfig) -> SyncPolicy:
 # named presets + CLI spec parsing
 # ---------------------------------------------------------------------------
 
-def _preset(name: str, base: SyncConfig) -> SyncConfig:
+def _base_preset(name: str, base: SyncConfig) -> SyncConfig:
     """Named wire presets; unlisted fields inherit from the run default."""
     if name == "fp":
         return dataclasses.replace(base, strategy="fp")
@@ -110,6 +110,27 @@ def _preset(name: str, base: SyncConfig) -> SyncConfig:
                      "known: fp loco loco4 loco8 naive4 naive8 ef onebit")
 
 
+def _preset(spec: str, base: SyncConfig) -> SyncConfig:
+    """Preset name plus optional ``+flag`` modifiers, e.g. ``loco8+kernels``.
+
+    ``+kernels`` / ``+nokernels`` toggle the Pallas fast paths for the
+    matched buckets only (`SyncConfig.use_kernels` is per-bucket; the codec
+    registry dispatches unsupported combinations back to jnp, so enabling
+    kernels for a cell with no fused path is safe).
+    """
+    name, *flags = spec.split("+")
+    cfg = _base_preset(name, base)
+    for f in flags:
+        if f == "kernels":
+            cfg = dataclasses.replace(cfg, use_kernels=True)
+        elif f == "nokernels":
+            cfg = dataclasses.replace(cfg, use_kernels=False)
+        else:
+            raise ValueError(f"unknown preset flag {f!r} in {spec!r}; "
+                             "known flags: kernels nokernels")
+    return cfg
+
+
 def parse_policy(spec: str, default: SyncConfig) -> SyncPolicy:
     """Parse a CLI policy spec like ``embed=loco8,norm=fp,min=65536``.
 
@@ -117,8 +138,9 @@ def parse_policy(spec: str, default: SyncConfig) -> SyncPolicy:
     (must contain ``/``, ``*``, ``?`` or ``[`` — a bare word that is not a
     tensor class is rejected so a typoed class fails at launch instead of
     silently never matching), or ``min`` (min_compress_elems).  Clause
-    values are preset names (see ``_preset``).  Unmatched buckets use
-    ``default``.
+    values are preset names with optional ``+kernels``/``+nokernels``
+    flags, e.g. ``body=loco4+kernels`` (see ``_preset``).  Unmatched
+    buckets use ``default``.
     """
     rules: list[Rule] = []
     min_elems = 0

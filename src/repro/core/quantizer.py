@@ -136,6 +136,36 @@ def unpack_int4(p: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# sign packing (onebit wire format: 8 signs per byte)
+# ---------------------------------------------------------------------------
+
+SIGN_PACK = 8  # signs per wire byte
+
+
+def pack_signs(bits: jax.Array) -> jax.Array:
+    """Pack 0/1 sign bits into uint8 bytes, 8 per byte.
+
+    Layout: bit j of byte k = element 8k + j (LSB first), mirroring
+    :func:`pack_int4`'s strided-lane layout so the Pallas sign-pack kernel
+    can produce identical bytes without an in-register transpose.
+    """
+    assert bits.shape[-1] % SIGN_PACK == 0, bits.shape
+    b = bits.astype(jnp.uint8)
+    out = b[..., 0::SIGN_PACK]
+    for j in range(1, SIGN_PACK):
+        out = out | (b[..., j::SIGN_PACK] << j)
+    return out
+
+
+def unpack_signs(p: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_signs`; returns uint8 values in {0, 1}."""
+    b = p.astype(jnp.uint8)
+    parts = [(b >> j) & 1 for j in range(SIGN_PACK)]
+    out = jnp.stack(parts, axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * SIGN_PACK)
+
+
+# ---------------------------------------------------------------------------
 # 8-bit error codecs (paper Eqn. (7) and the TPU f8 variant)
 # ---------------------------------------------------------------------------
 

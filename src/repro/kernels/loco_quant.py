@@ -1,21 +1,27 @@
-"""Pallas TPU kernels for LoCo's compression hot path.
+"""Pallas TPU kernels for the quantized-wire compression hot path.
 
-Two kernels cover the per-step elementwise work that LoCo adds on top of the
-optimizer (paper §3.1-§3.2).  On an A100 the reference does this with fused
-CUDA ops; on TPU we tile the flat gradient into VMEM-resident (ROWS, 256)
-blocks (256 = quantizer block = 2 VREG lanes of 128) and fuse:
+Two kernel families cover the per-step elementwise work that LoCo-style
+sync adds on top of the optimizer (paper §3.1-§3.2).  On an A100 the
+reference does this with fused CUDA ops; on TPU we tile the flat gradient
+into VMEM-resident (ROWS, 256) blocks (256 = quantizer block = 2 VREG
+lanes of 128) and fuse:
 
-* ``loco_compress``: error-decode + compensate + per-block absmax int4
-  quantize + nibble-pack + moving-average error update + f8 error encode
+* ``fused_compress``: error-decode + compensate + per-block absmax
+  quantize (4- or 8-bit) + nibble-pack + error update + error encode
   -- one pass over the gradient, one pass out for payload/scales/error.
-* ``dequant_mean``: nibble-unpack + dequant + mean over the D peer
+  Parameterized by ``bits`` (4: nibble-packed int4, 8: int8) and ``err``
+  (``"f8"``: LoCo's scaled f8_e4m3 storage with ±448 saturation;
+  ``"bf16"``: EF's unscaled bf16 storage).  ``loco_compress`` /
+  ``ef_compress`` are the named specializations the fast-path registry
+  mounts (see repro.core.codec).
+* ``dequant_mean``: (nibble-unpack +) dequant + mean over the D peer
   contributions received from the all-to-all -- one pass over the received
-  buffer.
+  buffer, shared by the loco/ef/naive4 decode side.
 
 Weak spots the MXU can't help with (this is pure VPU work); the win is
 fusion: the unfused jnp path reads/writes the f32 gradient ~6x.
 
-Both kernels run under ``interpret=True`` on CPU (how this repo validates
+All kernels run under ``interpret=True`` on CPU (how this repo validates
 them -- see tests/test_kernels.py) and compile for TPU via the same
 ``pl.pallas_call`` with explicit ``BlockSpec`` tiling.
 """
@@ -29,29 +35,41 @@ from jax.experimental import pallas as pl
 
 QBLOCK = 256          # quantizer block (elements per scale)
 ROWS = 64             # rows of QBLOCK per pallas block -> 16K elems in VMEM
-QMAX = 7.0
+F8_MAX = 448.0        # float8_e4m3fn saturation bound
 
 
 # ---------------------------------------------------------------------------
-# kernel 1: fused compensate + quantize(int4, block absmax) + pack + err update
+# kernel 1: fused compensate + quantize(block absmax) + pack + err update
 # ---------------------------------------------------------------------------
 
-def _compress_kernel(g_ref, e_ref, q_ref, s_ref, enew_ref, *, beta: float, escale: float):
+def _compress_kernel(g_ref, e_ref, q_ref, s_ref, enew_ref, *,
+                     bits: int, beta: float, escale: float, err: str):
     g = g_ref[...].astype(jnp.float32)                  # (ROWS, QBLOCK)
-    e = e_ref[...].astype(jnp.float32) / escale         # decompressor(e; s_e)
+    if err == "f8":
+        e = e_ref[...].astype(jnp.float32) / escale     # decompressor(e; s_e)
+    else:  # "bf16": unscaled float storage (EF)
+        e = e_ref[...].astype(jnp.float32)
     h = g + e                                           # Eqn. (2)
+    qmax = float(2 ** (bits - 1) - 1)
+    qmin = float(-(2 ** (bits - 1)))
     absmax = jnp.max(jnp.abs(h), axis=1, keepdims=True)
-    scale = QMAX / jnp.maximum(absmax, 1e-30)
-    q = jnp.clip(jnp.round(h * scale), -8.0, 7.0)       # Eqn. (3)
+    scale = qmax / jnp.maximum(absmax, 1e-30)
+    q = jnp.clip(jnp.round(h * scale), qmin, qmax)      # Eqn. (3)
     d = q / scale                                       # decompressor(q; s)
     e_tilde = (1.0 - beta) * e + beta * (h - d)         # Eqn. (5)
-    enew = jnp.clip(e_tilde * escale, -448.0, 448.0)
+    if err == "f8":
+        enew = jnp.clip(e_tilde * escale, -F8_MAX, F8_MAX)
+    else:
+        enew = e_tilde
     enew_ref[...] = enew.astype(enew_ref.dtype)
     s_ref[...] = scale[:, :1]
     qi = q.astype(jnp.int8)
-    lo = qi[:, 0::2].astype(jnp.uint8) & 0xF
-    hi = qi[:, 1::2].astype(jnp.uint8) & 0xF
-    q_ref[...] = ((hi << 4) | lo).astype(jnp.int8)
+    if bits == 4:
+        lo = qi[:, 0::2].astype(jnp.uint8) & 0xF
+        hi = qi[:, 1::2].astype(jnp.uint8) & 0xF
+        q_ref[...] = ((hi << 4) | lo).astype(jnp.int8)
+    else:
+        q_ref[...] = qi
 
 
 def _auto_rows(rows_total: int) -> int:
@@ -61,93 +79,123 @@ def _auto_rows(rows_total: int) -> int:
     return 1
 
 
-@functools.partial(jax.jit, static_argnames=("beta", "escale", "interpret", "rows"))
-def loco_compress(
+@functools.partial(jax.jit, static_argnames=("bits", "beta", "escale", "err",
+                                             "interpret", "rows"))
+def fused_compress(
     g: jax.Array,
-    e8: jax.Array,
+    e: jax.Array,
     *,
+    bits: int = 4,
     beta: float,
     escale: float,
+    err: str = "f8",
     interpret: bool = True,
     rows: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Flat (n,) gradient + (n,) f8 error -> (packed (n//2,), scales (n//QBLOCK,), e_new (n,)).
+    """Flat (n,) gradient + (n,) error -> (payload, scales (n//QBLOCK,), e_new (n,)).
 
-    n must be a multiple of 2*QBLOCK (the FSDP padding guarantees multiples
-    of 512); the row-block size adapts so the grid tiles exactly.
+    payload is (n//2,) nibble-packed int8 at 4 bits, (n,) int8 at 8 bits;
+    e_new keeps the input error dtype (f8_e4m3 for ``err="f8"``, bf16 for
+    ``err="bf16"``).  n must be a multiple of 2*QBLOCK (the FSDP padding
+    guarantees multiples of 512); the row-block size adapts so the grid
+    tiles exactly.
     """
     n = g.shape[0]
+    assert bits in (4, 8), bits
+    assert err in ("f8", "bf16"), err
     assert n % (2 * QBLOCK) == 0, n
     rows_total = n // QBLOCK
-    ROWS = rows or _auto_rows(rows_total)
-    grid = (rows_total // ROWS,)
+    R = rows or _auto_rows(rows_total)
+    grid = (rows_total // R,)
+    pay_cols = QBLOCK // 2 if bits == 4 else QBLOCK
     gm = g.reshape(rows_total, QBLOCK)
-    em = e8.reshape(rows_total, QBLOCK)
+    em = e.reshape(rows_total, QBLOCK)
     out_shapes = (
-        jax.ShapeDtypeStruct((rows_total, QBLOCK // 2), jnp.int8),
+        jax.ShapeDtypeStruct((rows_total, pay_cols), jnp.int8),
         jax.ShapeDtypeStruct((rows_total, 1), jnp.float32),
-        jax.ShapeDtypeStruct((rows_total, QBLOCK), e8.dtype),
+        jax.ShapeDtypeStruct((rows_total, QBLOCK), e.dtype),
     )
     q, s, enew = pl.pallas_call(
-        functools.partial(_compress_kernel, beta=beta, escale=escale),
+        functools.partial(_compress_kernel, bits=bits, beta=beta,
+                          escale=escale, err=err),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0)),
-            pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((R, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((R, QBLOCK), lambda i: (i, 0)),
         ],
         out_specs=(
-            pl.BlockSpec((ROWS, QBLOCK // 2), lambda i: (i, 0)),
-            pl.BlockSpec((ROWS, 1), lambda i: (i, 0)),
-            pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((R, pay_cols), lambda i: (i, 0)),
+            pl.BlockSpec((R, 1), lambda i: (i, 0)),
+            pl.BlockSpec((R, QBLOCK), lambda i: (i, 0)),
         ),
         out_shape=out_shapes,
         interpret=interpret,
     )(gm, em)
-    return q.reshape(n // 2), s.reshape(n // QBLOCK), enew.reshape(n)
+    return q.reshape(-1), s.reshape(n // QBLOCK), enew.reshape(n)
+
+
+def loco_compress(g, e8, *, beta: float, escale: float, bits: int = 4,
+                  interpret: bool = True, rows: int | None = None):
+    """LoCo specialization: f8 error storage, moving-average update."""
+    return fused_compress(g, e8, bits=bits, beta=beta, escale=escale,
+                          err="f8", interpret=interpret, rows=rows)
+
+
+def ef_compress(g, e, *, bits: int = 4, interpret: bool = True,
+                rows: int | None = None):
+    """EF specialization: beta=1 (full last-step error), bf16 storage."""
+    return fused_compress(g, e, bits=bits, beta=1.0, escale=1.0,
+                          err="bf16", interpret=interpret, rows=rows)
 
 
 # ---------------------------------------------------------------------------
 # kernel 2: unpack + dequant + mean over peers
 # ---------------------------------------------------------------------------
 
-def _dequant_mean_kernel(q_ref, s_ref, out_ref):
-    q = q_ref[...]                                      # (D, ROWS, QBLOCK//2) int8
+def _dequant_mean_kernel(q_ref, s_ref, out_ref, *, bits: int):
+    q = q_ref[...]                                      # (D, ROWS, pay_cols) int8
     s = s_ref[...]                                      # (D, ROWS, 1) f32
-    b = q.astype(jnp.uint8)
-    lo = (b & 0xF).astype(jnp.int8)
-    hi = ((b >> 4) & 0xF).astype(jnp.int8)
-    lo = jnp.where(lo >= 8, lo - 16, lo).astype(jnp.float32)
-    hi = jnp.where(hi >= 8, hi - 16, hi).astype(jnp.float32)
-    vals = jnp.stack([lo, hi], axis=-1).reshape(q.shape[0], q.shape[1], QBLOCK)
+    if bits == 4:
+        b = q.astype(jnp.uint8)
+        lo = (b & 0xF).astype(jnp.int8)
+        hi = ((b >> 4) & 0xF).astype(jnp.int8)
+        lo = jnp.where(lo >= 8, lo - 16, lo).astype(jnp.float32)
+        hi = jnp.where(hi >= 8, hi - 16, hi).astype(jnp.float32)
+        vals = jnp.stack([lo, hi], axis=-1).reshape(q.shape[0], q.shape[1], QBLOCK)
+    else:
+        vals = q.astype(jnp.float32)
     vals = vals / s
     out_ref[...] = jnp.mean(vals, axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "rows"))
+@functools.partial(jax.jit, static_argnames=("bits", "interpret", "rows"))
 def dequant_mean(
-    payload: jax.Array,  # (D, m) packed int8, m = n/D/2
+    payload: jax.Array,  # (D, m) int8, m = n/D/2 at 4 bits else n/D
     scales: jax.Array,   # (D, n/D/QBLOCK) f32
     *,
+    bits: int = 4,
     interpret: bool = True,
     rows: int | None = None,
 ) -> jax.Array:
     """Received all-to-all rows -> fp32 mean gradient chunk (n/D,)."""
+    assert bits in (4, 8), bits
     D, m = payload.shape
-    n_chunk = m * 2
+    n_chunk = m * 2 if bits == 4 else m
     assert n_chunk % (2 * QBLOCK) == 0, n_chunk
     rows_total = n_chunk // QBLOCK
-    ROWS = rows or _auto_rows(rows_total)
-    grid = (rows_total // ROWS,)
-    pm = payload.reshape(D, rows_total, QBLOCK // 2)
+    R = rows or _auto_rows(rows_total)
+    grid = (rows_total // R,)
+    pay_cols = QBLOCK // 2 if bits == 4 else QBLOCK
+    pm = payload.reshape(D, rows_total, pay_cols)
     sm = scales.reshape(D, rows_total, 1)
     out = pl.pallas_call(
-        _dequant_mean_kernel,
+        functools.partial(_dequant_mean_kernel, bits=bits),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((D, ROWS, QBLOCK // 2), lambda i: (0, i, 0)),
-            pl.BlockSpec((D, ROWS, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((D, R, pay_cols), lambda i: (0, i, 0)),
+            pl.BlockSpec((D, R, 1), lambda i: (0, i, 0)),
         ],
-        out_specs=pl.BlockSpec((ROWS, QBLOCK), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((R, QBLOCK), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows_total, QBLOCK), jnp.float32),
         interpret=interpret,
     )(pm, sm)

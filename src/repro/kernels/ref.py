@@ -1,37 +1,59 @@
 """Pure-jnp oracles for the Pallas kernels (the correctness contract).
 
-These delegate to :mod:`repro.core.quantizer`, which is the single source of
-truth for the codec math; tests assert kernel == oracle across shape/dtype
-sweeps (see tests/test_kernels.py).
+These are thin adapters over the codec registry's ``encode_ref`` /
+``decode_mean_ref`` oracles (:mod:`repro.core.codec` — the single source of
+truth for the wire math, itself built on :mod:`repro.core.quantizer`), so
+the kernels are tested against exactly what the simulation and distributed
+paths compute.  Tests assert kernel == oracle across shape/dtype sweeps
+(see tests/test_kernels.py).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import quantizer as Q
+from repro.core import codec as codec_lib
+from repro.core.loco import SyncConfig
 from repro.core.quantizer import QuantConfig
 
 
-def loco_compress_ref(g: jax.Array, e8: jax.Array, *, beta: float, escale: float):
+def _cfg(strategy: str, *, bits: int = 4, beta: float = 0.5,
+         escale: float = 2.0**14) -> SyncConfig:
+    return SyncConfig(
+        strategy=strategy, beta=beta,
+        quant=QuantConfig(bits=bits, mode="block", error_codec="f8",
+                          error_scale=escale))
+
+
+def loco_compress_ref(g: jax.Array, e8: jax.Array, *, beta: float,
+                      escale: float, bits: int = 4):
     """Oracle for kernels.loco_quant.loco_compress (block mode, f8 error)."""
-    qc = QuantConfig(mode="block", error_codec="f8", error_scale=escale)
-    g = g.astype(jnp.float32)
-    e = Q.error_decode(e8, qc)
-    h = g + e
-    payload, scales = Q.compress(h, qc)
-    d = Q.decompress(payload, scales, qc)
-    e_tilde = (1.0 - beta) * e + beta * (h - d)
-    e_new = Q.error_encode(e_tilde, qc)
-    return payload, scales, e_new
+    codec = codec_lib.get_codec(_cfg("loco", bits=bits, beta=beta,
+                                     escale=escale))
+    wire, e_new = codec.encode_ref(g.astype(jnp.float32), e8)
+    return wire["payload"], wire["scales"], e_new
 
 
-def dequant_mean_ref(payload: jax.Array, scales: jax.Array):
+def ef_compress_ref(g: jax.Array, e: jax.Array, *, bits: int = 4):
+    """Oracle for kernels.loco_quant.ef_compress (block mode, bf16 error)."""
+    codec = codec_lib.get_codec(_cfg("ef", bits=bits))
+    wire, e_new = codec.encode_ref(g.astype(jnp.float32), e)
+    return wire["payload"], wire["scales"], e_new
+
+
+def dequant_mean_ref(payload: jax.Array, scales: jax.Array, *, bits: int = 4):
     """Oracle for kernels.loco_quant.dequant_mean."""
-    qc = QuantConfig(mode="block")
+    codec = codec_lib.get_codec(_cfg("naive4", bits=bits))
+    return codec.decode_mean_ref({"payload": payload, "scales": scales})
 
-    def deq(p_row, s_row):
-        return Q.decompress(p_row, s_row, qc)
 
-    contrib = jax.vmap(deq)(payload, scales)
-    return jnp.mean(contrib, axis=0)
+def onebit_pack_ref(h: jax.Array):
+    """Oracle for kernels.sign_pack.onebit_pack.
+
+    ``h`` is the already-compensated gradient (the kernel's input); returns
+    (packed signs, scale (1,), e_new) exactly as the codec encode produces
+    them from a zero error state.
+    """
+    codec = codec_lib.get_codec(_cfg("onebit"))
+    wire, e_new = codec.encode_ref(h, jnp.zeros(h.shape, jnp.bfloat16))
+    return wire["payload"], wire["scales"], e_new

@@ -1,0 +1,82 @@
+"""Pallas kernel for the onebit wire: fused sign + 8-per-byte pack + error.
+
+The onebit strategy (1-bit Adam lineage) ships one sign per element with a
+per-segment L1 scale.  The unfused jnp path materializes the 0/1 mask, the
+±scale reconstruction and the error update as separate f32-wide passes;
+this kernel does sign-extract, LSB-first bit pack (bit j of byte k =
+element 8k+j, matching ``repro.core.quantizer.pack_signs``) and the
+error-feedback update ``e_new = h - (2b-1)*scale`` in one pass, writing
+1/8th byte per element of payload plus the bf16 error.
+
+The L1 scale is a *global* mean over the segment, so it is computed outside
+(one cheap reduction over ``h``) and enters the kernel as a (1, 1) scalar
+operand mapped to every grid step.
+
+Runs under ``interpret=True`` on CPU (the validation harness) and compiles
+for TPU via the same BlockSpec tiling (see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.loco_quant import QBLOCK, _auto_rows
+
+SIGN_PACK = 8  # signs per wire byte (= quantizer.SIGN_PACK)
+
+
+def _sign_pack_kernel(h_ref, scale_ref, q_ref, enew_ref):
+    h = h_ref[...].astype(jnp.float32)                  # (ROWS, QBLOCK)
+    scale = scale_ref[0, 0]
+    bits = (h > 0).astype(jnp.uint8)
+    d = (2.0 * bits.astype(jnp.float32) - 1.0) * scale
+    enew_ref[...] = (h - d).astype(enew_ref.dtype)
+    packed = bits[:, 0::SIGN_PACK]
+    for j in range(1, SIGN_PACK):
+        packed = packed | (bits[:, j::SIGN_PACK] << j)
+    q_ref[...] = packed
+
+
+@functools.partial(jax.jit, static_argnames=("state_dtype", "interpret", "rows"))
+def onebit_pack(
+    h: jax.Array,
+    scale: jax.Array,
+    *,
+    state_dtype=jnp.bfloat16,
+    interpret: bool = True,
+    rows: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Compensated flat (n,) gradient + scalar L1 scale ->
+    (packed signs (n//8,) uint8, e_new (n,) ``state_dtype``).
+
+    n must be a multiple of 2*QBLOCK (FSDP padding guarantees 512-multiples).
+    """
+    n = h.shape[0]
+    assert n % (2 * QBLOCK) == 0, n
+    rows_total = n // QBLOCK
+    R = rows or _auto_rows(rows_total)
+    grid = (rows_total // R,)
+    hm = h.astype(jnp.float32).reshape(rows_total, QBLOCK)
+    sm = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    out_shapes = (
+        jax.ShapeDtypeStruct((rows_total, QBLOCK // SIGN_PACK), jnp.uint8),
+        jax.ShapeDtypeStruct((rows_total, QBLOCK), state_dtype),
+    )
+    packed, enew = pl.pallas_call(
+        _sign_pack_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((R, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((R, QBLOCK // SIGN_PACK), lambda i: (i, 0)),
+            pl.BlockSpec((R, QBLOCK), lambda i: (i, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(hm, sm)
+    return packed.reshape(n // SIGN_PACK), enew.reshape(n)

@@ -82,6 +82,22 @@ def build_sync_plan(run: RunConfig, groups, topo: MeshTopo) -> "BK.SyncPlan | No
     return BK.make_sync_plan(groups, topo, bcfg, pol)
 
 
+def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None") -> None:
+    """Reject configs the in-backward hijack path cannot honor, at step-build
+    time (before any tracing), with the resolved per-bucket configs in view."""
+    cfgs = ([(f"{p.qualname}[{b.index}]", b.sync)
+             for p in plan.params for b in p.buckets]
+            if plan is not None else [("sync", run.sync)])
+    for where, c in cfgs:
+        if c.strategy != "fp" and c.quant.stochastic_rounding:
+            raise ValueError(
+                f"{where}: stochastic_rounding cannot run inside the "
+                "training step (the hijack backward has no PRNG key to "
+                "thread; it would silently round to nearest). Use the "
+                "post-grad dist_sync/sim_sync with an explicit key, or "
+                "disable stochastic_rounding.")
+
+
 def build_model(cfg: ArchConfig, tp: int, sp: bool = False):
     if cfg.enc_dec:
         return EncDecLM(cfg, tp)
@@ -149,6 +165,7 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
     sched = make_schedule(run.schedule, run.lr, run.total_steps, run.warmup_steps)
     sync = run.sync
     plan = build_sync_plan(run, groups, topo)
+    _validate_sync_configs(run, plan)
     needs_state = plan.needs_state() if plan is not None else sync.needs_state()
     assert shape.global_batch % topo.dp == 0, (shape.global_batch, topo.dp)
     local_batch = shape.global_batch // topo.dp

@@ -41,7 +41,7 @@ def build_args(argv=None):
     ap.add_argument("--pods", type=int, default=0)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--sync", default="loco",
-                    choices=["fp", "loco", "ef", "naive4"])
+                    choices=["fp", "loco", "ef", "naive4", "onebit"])
     ap.add_argument("--quant-mode", default="block", choices=["block", "fixed"])
     ap.add_argument("--quant-scale", type=float, default=2.0**17)
     ap.add_argument("--error-codec", default="f8", choices=["f8", "bf16", "none"])
@@ -53,7 +53,9 @@ def build_args(argv=None):
                          "bucket (0 = monolithic legacy path)")
     ap.add_argument("--policy", default="",
                     help="per-bucket wire policy, e.g. "
-                         "'embed=loco8,norm=fp,min=65536' "
+                         "'embed=loco8,norm=fp,min=65536' or "
+                         "'body=loco4+kernels' to enable the Pallas fast "
+                         "paths per tensor class "
                          "(see repro.core.policy.parse_policy)")
     ap.add_argument("--telemetry", action="store_true",
                     help="log decoded error-feedback norms each step")

@@ -2,11 +2,13 @@
 
 Predicts, from a static :class:`~repro.core.buckets.SyncPlan`, exactly what
 each device puts on the wire per optimizer step: the quantized payload
-bytes and the scale metadata bytes of every bucket, mirroring the codecs in
-:mod:`repro.core.quantizer` byte for byte (property-tested against the
-actual ``Q.compress`` output arrays in tests/test_buckets.py).  Also
-provides the runtime side: decoded error-feedback norms per bucket and the
-aggregated error norm the train step logs.
+bytes and the scale metadata bytes of every bucket, computed from each
+strategy's ``codec.wire_shapes`` (:mod:`repro.core.codec`) rather than a
+hand-mirrored copy of the quantizer math — so the prediction byte-matches
+the actual encode output arrays by construction (property-tested in
+tests/test_buckets.py and tests/test_codec.py).  Also provides the runtime
+side: decoded error-feedback norms per bucket and the aggregated error
+norm the train step logs.
 
 Conventions
 -----------
@@ -25,6 +27,7 @@ import json
 
 import jax.numpy as jnp
 
+from repro.core import codec as codec_lib
 from repro.core import quantizer as Q
 from repro.core.buckets import Bucket, ParamPlan, SyncPlan
 from repro.core.loco import SyncConfig
@@ -34,26 +37,22 @@ def payload_bytes(n_elems: int, cfg: SyncConfig) -> int:
     """Bytes of the quantized payload array for an ``(n_elems,)`` segment."""
     if cfg.strategy == "fp":
         return 2 * n_elems                      # bf16 reduce-scatter wire
-    if cfg.strategy == "onebit":
-        return n_elems                          # int8-held sign bits
-    bits = cfg.quant.bits
-    assert bits in (4, 8), bits
-    return n_elems // 2 if bits == 4 else n_elems
+    return codec_lib.get_codec(cfg).wire_shapes(n_elems)["payload"].nbytes
 
 
 def scale_bytes(n_elems: int, cfg: SyncConfig, dp: int = 1) -> int:
-    """Bytes of the scale metadata exchanged alongside the payload.
+    """Bytes of the metadata wire leaves exchanged alongside the payload.
 
-    ``dp`` matters only for ``onebit``, whose scalar L1 scale is
-    all-gathered across the dp group (each device receives one per peer).
+    ``dp`` matters only for ``gather`` leaves (onebit's scalar L1 scale is
+    all-gathered across the dp group: each device receives one per peer);
+    ``none`` leaves (the fixed-mode static scale) count their resident
+    array size, matching the size-1 array ``Q.compress`` materializes.
     """
     if cfg.strategy == "fp":
         return 0
-    if cfg.strategy == "onebit":
-        return 4 * dp                           # f32 L1 scale per peer
-    if cfg.quant.mode == "fixed":
-        return 4                                # static scale, size-1 array
-    return 4 * (n_elems // cfg.quant.block)     # f32 per quantizer block
+    shapes = codec_lib.get_codec(cfg).wire_shapes(n_elems)
+    return sum(leaf.nbytes * (dp if leaf.comm == "gather" else 1)
+               for name, leaf in shapes.items() if name != "payload")
 
 
 def state_bytes(n_elems: int, cfg: SyncConfig) -> int:

@@ -17,16 +17,18 @@ from repro.kernels import ref as R
     scale=hst.sampled_from([1e-5, 1e-3, 1.0]),
     beta=hst.sampled_from([0.1, 0.5, 1.0]),
     gdtype=hst.sampled_from(["float32", "bfloat16"]),
+    bits=hst.sampled_from([4, 8]),
 )
 @hypothesis.settings(max_examples=25, deadline=None)
-def test_loco_compress_matches_ref(seed, n_blocks, scale, beta, gdtype):
+def test_loco_compress_matches_ref(seed, n_blocks, scale, beta, gdtype, bits):
     n = n_blocks * 512
     key = jax.random.PRNGKey(seed)
     g = (jax.random.normal(key, (n,)) * scale).astype(gdtype)
     e8 = (jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 40).astype(
         jnp.float8_e4m3fn)
-    q, s, enew = LQ.loco_compress(g, e8, beta=beta, escale=2.0**14, interpret=True)
-    qr, sr, enr = R.loco_compress_ref(g, e8, beta=beta, escale=2.0**14)
+    q, s, enew = LQ.loco_compress(g, e8, beta=beta, escale=2.0**14, bits=bits,
+                                  interpret=True)
+    qr, sr, enr = R.loco_compress_ref(g, e8, beta=beta, escale=2.0**14, bits=bits)
     assert (q == qr).all()
     np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
     # f8 encode may differ by one quantum on exact rounding ties (a 1-ulp f32
@@ -44,18 +46,106 @@ def test_loco_compress_matches_ref(seed, n_blocks, scale, beta, gdtype):
     seed=hst.integers(0, 2**31 - 1),
     d=hst.sampled_from([2, 4, 8]),
     n_blocks=hst.sampled_from([2, 16, 66]),
+    bits=hst.sampled_from([4, 8]),
 )
 @hypothesis.settings(max_examples=20, deadline=None)
-def test_dequant_mean_matches_ref(seed, d, n_blocks):
+def test_dequant_mean_matches_ref(seed, d, n_blocks, bits):
     n = n_blocks * 512
     key = jax.random.PRNGKey(seed)
     g = jax.random.normal(key, (d * n,)) * 1e-3
     e8 = jnp.zeros((d * n,), jnp.float8_e4m3fn)
-    q, s, _ = LQ.loco_compress(g, e8, beta=0.5, escale=2.0**14, interpret=True)
+    q, s, _ = LQ.loco_compress(g, e8, beta=0.5, escale=2.0**14, bits=bits,
+                               interpret=True)
     pay, sc = q.reshape(d, -1), s.reshape(d, -1)
-    out = LQ.dequant_mean(pay, sc, interpret=True)
-    ref = R.dequant_mean_ref(pay, sc)
+    out = LQ.dequant_mean(pay, sc, bits=bits, interpret=True)
+    ref = R.dequant_mean_ref(pay, sc, bits=bits)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-9)
+
+
+@hypothesis.given(
+    seed=hst.integers(0, 2**31 - 1),
+    n_blocks=hst.sampled_from([1, 3, 5, 7, 13, 31]),  # _auto_rows < 64 paths
+    rows=hst.sampled_from([None, 1, 2]),              # explicit overrides
+    bits=hst.sampled_from([4, 8]),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_awkward_shapes_and_rows_overrides(seed, n_blocks, rows, bits):
+    """Sizes whose row count defeats the 64-row tile (the grid adapts via
+    _auto_rows) and explicit rows= overrides still match the oracle."""
+    n = n_blocks * 512
+    rows_total = n // LQ.QBLOCK
+    if rows is not None and rows_total % rows:
+        rows = None
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (n,)) * 1e-3
+    e8 = (jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 40).astype(
+        jnp.float8_e4m3fn)
+    assert rows_total < 64 or rows_total % 64  # sweep stays off the fast tile
+    q, s, enew = LQ.loco_compress(g, e8, beta=0.5, escale=2.0**14, bits=bits,
+                                  rows=rows, interpret=True)
+    qr, sr, enr = R.loco_compress_ref(g, e8, beta=0.5, escale=2.0**14, bits=bits)
+    assert (q == qr).all()
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    out = LQ.dequant_mean(q[None], s[None], bits=bits, rows=rows, interpret=True)
+    ref = R.dequant_mean_ref(q[None], s[None], bits=bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6,
+                               atol=1e-9)
+
+
+@hypothesis.given(
+    seed=hst.integers(0, 2**31 - 1),
+    n_blocks=hst.sampled_from([2, 3, 64]),
+    bits=hst.sampled_from([4, 8]),
+    gdtype=hst.sampled_from(["float32", "bfloat16"]),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_ef_compress_matches_ref(seed, n_blocks, bits, gdtype):
+    n = n_blocks * 512
+    key = jax.random.PRNGKey(seed)
+    g = (jax.random.normal(key, (n,)) * 1e-3).astype(gdtype)
+    e = (jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 1e-4).astype(
+        jnp.bfloat16)
+    q, s, enew = LQ.ef_compress(g, e, bits=bits, interpret=True)
+    qr, sr, enr = R.ef_compress_ref(g, e, bits=bits)
+    assert (q == qr).all()
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(enew.astype(jnp.float32)), np.asarray(enr.astype(jnp.float32)))
+
+
+@hypothesis.given(
+    seed=hst.integers(0, 2**31 - 1),
+    n_blocks=hst.sampled_from([2, 3, 13, 64]),
+    scale=hst.sampled_from([1e-4, 1.0]),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_onebit_pack_matches_ref(seed, n_blocks, scale):
+    from repro.kernels import sign_pack as SP
+    n = n_blocks * 512
+    h = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+    s = jnp.mean(jnp.abs(h))
+    packed, enew = SP.onebit_pack(h, s, interpret=True)
+    pr, sr, enr = R.onebit_pack_ref(h)
+    assert (packed == pr).all()
+    np.testing.assert_array_equal(
+        np.asarray(enew.astype(jnp.float32)), np.asarray(enr.astype(jnp.float32)))
+    assert packed.size == n // 8  # 8 signs per wire byte
+
+
+def test_f8_error_saturates_at_448():
+    """Error updates beyond the f8_e4m3 range clip to ±448 in kernel and
+    oracle alike (no inf/nan on outlier gradients)."""
+    n = 2 * 512
+    g = jnp.where(jnp.arange(n) % 2 == 0, 30.0, -30.0)  # huge quant error
+    e8 = jnp.full((n,), 448.0).astype(jnp.float8_e4m3fn)
+    q, s, enew = LQ.loco_compress(g, e8, beta=1.0, escale=2.0**14, interpret=True)
+    qr, sr, enr = R.loco_compress_ref(g, e8, beta=1.0, escale=2.0**14)
+    assert (q == qr).all()
+    ef = np.asarray(enew.astype(jnp.float32))
+    assert np.isfinite(ef).all()
+    assert np.abs(ef).max() <= 448.0
+    assert np.abs(ef).max() == 448.0  # saturation actually hit
+    np.testing.assert_array_equal(ef, np.asarray(enr.astype(jnp.float32)))
 
 
 def test_kernel_roundtrip_accuracy():
