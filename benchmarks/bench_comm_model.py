@@ -1,6 +1,6 @@
 """Paper Tables 1/7/10/11: communication volume & projected throughput.
 
-Two parts:
+Three parts:
 1. Table-1 reproduction -- per-method communication time and memory formulas
    evaluated symbolically at the paper's operating points (Psi = 7B/13B/70B,
    N_d = 32/64/128), verifying LoCo-Adam's 2.25/4 = 0.5625x comm-time vs Adam
@@ -13,14 +13,30 @@ Two parts:
    with T_compute from the dry-run compute/memory terms.  The paper's
    qualitative claims (speedup grows with lower bandwidth / more chips /
    smaller accumulation) fall out of the model and are printed as checks.
+3. Hierarchical ICI/DCN projection (-> BENCH_comm.json) -- builds the real
+   bucketed sync plan for llama2-400m on a modeled multi-pod (pod, data)
+   topology and compares, per wire policy, the intra-pod (ICI) vs inter-pod
+   (DCN) bytes of the flat exchange against the two-stage codec scheduler
+   (repro.core.comm.hierarchical_sync).  The byte accounting comes from
+   repro.telemetry.wire, which byte-matches the exchanged arrays, so the
+   predicted DCN saving is the hardware-independent signal; a modeled comm
+   time at ICI/DCN bandwidths turns it into a step-time projection.  The
+   --quick flag is the CI smoke leg: it asserts the hierarchical DCN bytes
+   actually undercut the flat path's and writes BENCH_comm.json.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
 
-from benchmarks.common import csv_row
+try:
+    from benchmarks.common import csv_row
+except ModuleNotFoundError:  # invoked as `python benchmarks/bench_comm_model.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.common import csv_row
 
 GB = 1e9
 
@@ -99,5 +115,107 @@ def run(dryrun_dir="experiments/dryrun_final"):
                 "run launch.dryrun with --sync loco and --sync fp first")
 
 
+# ---------------------------------------------------------------------------
+# part 3: hierarchical (two-stage) ICI/DCN projection -> BENCH_comm.json
+# ---------------------------------------------------------------------------
+
+# modeled multi-pod topology: 4 pods x 16 dp ranks x 4 TP = 256 chips
+HIER_PODS, HIER_DD, HIER_TP = 4, 16, 4
+# interconnect operating points (bytes/s): intra-pod ICI vs cross-pod DCN
+BW_ICI = 50 * GB
+BW_DCN = {"DCN-fast": 25 * GB, "DCN-slow": 6 * GB}
+
+
+def hier_projection(quick: bool = False, out: str = "BENCH_comm.json") -> dict:
+    """Flat vs two-stage wire volumes of the real bucketed sync plan."""
+    import dataclasses
+
+    from repro.configs.base import get_arch, reduced
+    from repro.core import buckets as BK
+    from repro.core import policy as POL
+    from repro.core.flatparam import MeshTopo
+    from repro.core.loco import SyncConfig
+    from repro.core.quantizer import QuantConfig
+    from repro.launch.steps import build_model
+    from repro.telemetry import wire as WIRE
+
+    arch = get_arch("llama2-400m")
+    if quick:
+        arch = reduced(arch)
+    topo = MeshTopo(dp_axes=("pod", "data"), tp_axis="model",
+                    dp=HIER_PODS * HIER_DD, tp=HIER_TP, pods=HIER_PODS)
+    groups = build_model(arch, topo.tp).groups()
+    loco4 = SyncConfig(strategy="loco", quant=QuantConfig(bits=4, mode="block"))
+    stage2_4bit = SyncConfig(strategy="naive4",
+                             quant=QuantConfig(bits=4, mode="block"))
+    policies = {
+        "flat_fp": SyncConfig(strategy="fp"),
+        "flat_loco4": loco4,
+        "hier_loco4": dataclasses.replace(loco4, hierarchical=True),
+        "hier4_loco4": dataclasses.replace(loco4, hierarchical=True,
+                                           stage2=stage2_4bit),
+    }
+    if not quick:
+        policies["hier_onebit"] = SyncConfig(strategy="onebit",
+                                             hierarchical=True)
+        policies["hier_loco8"] = dataclasses.replace(
+            loco4, quant=QuantConfig(bits=8, mode="block"),
+            hierarchical=True)
+
+    results = {"topology": {"pods": HIER_PODS, "dp_per_pod": HIER_DD,
+                            "tp": HIER_TP, "arch": arch.name}}
+    for name, sync in policies.items():
+        plan = BK.make_sync_plan(groups, topo, BK.BucketConfig(),
+                                 POL.uniform(sync))
+        rep = WIRE.plan_report(plan, pods=HIER_PODS)
+        row = {"wire_bytes": rep.total_wire, "ici_bytes": rep.ici_bytes,
+               "dcn_bytes": rep.dcn_bytes,
+               "dcn_ratio_vs_bf16": rep.dcn_ratio_vs_bf16,
+               "n_buckets": plan.n_buckets}
+        for net, bw in BW_DCN.items():
+            row[f"comm_s_{net}"] = rep.ici_bytes / BW_ICI + rep.dcn_bytes / bw
+        results[name] = row
+        csv_row(f"comm_hier/{name}", row["comm_s_DCN-slow"] * 1e6,
+                f"ici={rep.ici_bytes/2**20:.2f}MiB "
+                f"dcn={rep.dcn_bytes/2**20:.2f}MiB "
+                f"dcn_vs_bf16={rep.dcn_ratio_vs_bf16:.4f}x")
+
+    # the predicted saving the two-stage scheduler exists for: stage 2 moves
+    # ~bits2/32 of the fp32 pod mean instead of the full stage-1 wire.
+    flat, hier = results["flat_loco4"], results["hier_loco4"]
+    dcn_saving = flat["dcn_bytes"] / max(hier["dcn_bytes"], 1)
+    slow_speedup = flat["comm_s_DCN-slow"] / hier["comm_s_DCN-slow"]
+    results["checks"] = {
+        "dcn_saving_hier_vs_flat_loco4": dcn_saving,
+        "comm_speedup_DCN-slow": slow_speedup,
+        "hier_dcn_below_flat": hier["dcn_bytes"] < flat["dcn_bytes"],
+        "hier_ici_not_worse_than_2x": hier["ici_bytes"]
+        <= 2 * flat["wire_bytes"],
+    }
+    csv_row("comm_hier/dcn_saving", dcn_saving,
+            f"flat_dcn/hier_dcn at loco4; comm_speedup(DCN-slow)="
+            f"{slow_speedup:.3f}x")
+    assert results["checks"]["hier_dcn_below_flat"], (
+        "two-stage exchange must cut inter-pod bytes", flat, hier)
+    assert results["checks"]["hier_ici_not_worse_than_2x"], (
+        "stage-1 ICI volume blew past 2x the flat wire", flat, hier)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: reduced arch, core policies only")
+    ap.add_argument("--out", default="BENCH_comm.json")
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun_final")
+    args = ap.parse_args()
+    if not args.quick:
+        run(args.dryrun_dir)
+    hier_projection(quick=args.quick, out=args.out)
+
+
 if __name__ == "__main__":
-    run()
+    main()

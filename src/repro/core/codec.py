@@ -232,7 +232,12 @@ class _QuantizedCodec(Codec):
         payload = WireLeaf((n // 2,) if qc.bits == 4 else (n,), jnp.int8)
         if qc.mode == "block":
             scales = WireLeaf((n // qc.block,), jnp.float32)
-        else:  # static scale: size-1 array, never exchanged
+        elif qc.mode == "tensor":
+            # dynamic per-node absmax scale: every peer needs every node's
+            # value to dequantize that node's payload (all-gathered, like
+            # onebit's L1 scale) — decoding with the *local* scale is wrong.
+            scales = WireLeaf((1,), jnp.float32, comm="gather")
+        else:  # fixed: static config scale, known to every peer already
             scales = WireLeaf((1,), jnp.float32, comm="none")
         return {"payload": payload, "scales": scales}
 

@@ -13,6 +13,11 @@ all-to-all over the dp axes, decompress and average **locally in fp32**
 one *segment* — ``dist_sync_buckets`` schedules many segments (the buckets
 of :mod:`repro.core.buckets`) as independent exchanges, each under its own
 config and state, which XLA is free to overlap with backward compute.
+
+Buckets whose config sets ``hierarchical`` route through
+:func:`hierarchical_sync` instead: the same codec contract run twice — the
+bucket's own codec intra-pod (ICI), then a stateless second codec on the
+pod means inter-pod (DCN) — cutting cross-pod traffic to the stage-2 wire.
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import codec as codec_lib
-from repro.core import quantizer as Q
+from repro.core import loco as loco_lib
 from repro.core.buckets import ParamPlan
 from repro.core.loco import SyncConfig
 
@@ -120,6 +125,13 @@ def dist_sync(
     D = axis_size(dp_axes)
     g = g.astype(jnp.float32)
 
+    if cfg.hierarchical:
+        # routed before the fp/ef21 special cases (never silently
+        # flattened): unsupported combos raise inside hierarchical_sync and
+        # are caught earlier, with the bucket in view, by
+        # launch.steps._validate_sync_configs.
+        return hierarchical_sync(g, state, cfg, dp_axes, key=key)
+
     if cfg.strategy == "fp":
         # 16-bit-style baseline: reduce-scatter mean (bf16 wire).
         g_shard = psum_scatter_flat(g.astype(jnp.bfloat16), dp_axes)
@@ -137,9 +149,6 @@ def dist_sync(
     wire, new_state = codec.encode(g, state, key)
 
     # --- exchange of the low-bit wire pytree (step 3 / §3.3) --------------
-    if cfg.hierarchical and len(dp_axes) == 2 and cfg.strategy == "loco":
-        return _hierarchical_exchange(wire["payload"], wire["scales"],
-                                      new_state, n, cfg.quant, dp_axes)
     recv = exchange_wire(wire, codec.wire_shapes(n), D, dp_axes)
 
     # --- receiver-side dequant + mean --------------------------------------
@@ -191,43 +200,83 @@ def dist_sync_buckets(
 # hierarchical (two-stage) multi-pod exchange -- beyond-paper optimization
 # ---------------------------------------------------------------------------
 
-def _hierarchical_exchange(payload, scales, new_state, n, qc, dp_axes):
-    """4-bit intra-pod all2all + fp32 mean, then 8-bit inter-pod all2all.
+def _regroup_chunks(arr: jax.Array, Pp: int, Dd: int) -> jax.Array:
+    """Flat chunk-major wire leaf -> stage-1 rows for the intra-pod a2a.
+
+    The segment's flat chunk order is r = p*Dd + d; data-peer d's stage-1
+    row must carry the ``Pp`` chunks ``{p*Dd + d : p}``, so reshape
+    (Pp, Dd, k) and transpose the pod axis inward.  ``k`` is the per-chunk
+    leaf length (payload bytes, block scales, packed signs, ...), integral
+    because bucket edges are 512-aligned.
+    """
+    k, rem = divmod(arr.shape[0], Pp * Dd)
+    assert rem == 0, (arr.shape, Pp, Dd)
+    return arr.reshape(Pp, Dd, k).transpose(1, 0, 2).reshape(Dd, Pp * k)
+
+
+def hierarchical_sync(
+    g: jax.Array,
+    state: jax.Array,
+    cfg: SyncConfig,
+    dp_axes: tuple[str, ...],
+    key: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Codec-level two-stage exchange over a ``(pod, data)`` mesh.
+
+    Stage 1 (ICI): the bucket's own codec — any registered strategy, with
+    its Pallas fast paths when ``cfg.use_kernels`` is set — encodes the
+    local segment exactly as the flat path would; its wire pytree then
+    crosses only the intra-pod ``data`` axis (``split`` leaves regrouped so
+    row d carries the chunks data-peer d owns, ``gather`` leaves
+    all-gathered per pod member — each peer's payload is dequantized with
+    *that peer's* metadata, fixing the old local-scale broadcast bug), and
+    ``decode_mean`` yields the fp32 pod mean of the ``Pp`` chunks this
+    device group owns.
+
+    Stage 2 (DCN): ``cfg.stage2_sync()``'s codec (default 8-bit block,
+    stateless) re-encodes the pod mean, exchanges it across the ``pod``
+    axis through the ordinary :func:`exchange_wire`, and ``decode_mean``s
+    to the final shard — so each stage is the same
+    encode -> exchange -> decode_mean contract as the flat path and
+    sim == dist holds by construction (:func:`repro.core.loco.sim_sync_hier`).
 
     Chunk mapping: device (p, d) ends up with flat chunk r = p*Dd + d, same
-    as the flat exchange, so the FSDP layout is unchanged.  See
-    SyncConfig.hierarchical for rationale.
+    as the flat exchange, so the FSDP layout is unchanged.  Error feedback
+    covers stage 1 only; the error states are bit-identical to the flat
+    path's.
     """
+    if len(dp_axes) != 2:
+        raise ValueError(
+            f"hierarchical sync needs a (pod, data) mesh; got dp axes "
+            f"{dp_axes!r} — use the flat exchange (hierarchical=False) on "
+            "single-axis meshes")
+    if cfg.strategy not in codec_lib.CODECS:
+        raise ValueError(
+            f"hierarchical sync needs a registered wire codec for stage 1; "
+            f"strategy {cfg.strategy!r} has none "
+            f"(registered: {sorted(codec_lib.CODECS)})")
     pod_axis, data_axis = dp_axes
     Pp = jax.lax.axis_size(pod_axis)
     Dd = jax.lax.axis_size(data_axis)
-    c = n // (Pp * Dd)
+    n = g.shape[0]
 
-    # stage 1 (ICI): group d = strided chunks {p*Dd + d}; a2a within the pod.
-    def regroup(x, elems_per_chunk):
-        # flat -> (Pp, Dd, chunk_payload) -> rows (Dd, Pp*chunk_payload)
-        return (x.reshape(Pp, Dd, elems_per_chunk)
-                 .transpose(1, 0, 2).reshape(Dd, Pp * elems_per_chunk))
+    # --- stage 1 (ICI): own codec, intra-pod exchange ----------------------
+    codec = codec_lib.get_codec(cfg)
+    wire, new_state = codec.encode(g, state, key)
+    # regroup split leaves into intra-pod row order, then run the ordinary
+    # wire exchange restricted to the data axis (gather/none leaves need no
+    # regrouping — they are per-node, not per-chunk).
+    shapes1 = codec.wire_shapes(n)
+    wire1 = {name: (_regroup_chunks(wire[name], Pp, Dd).reshape(-1)
+                    if leaf.comm == "split" else wire[name])
+             for name, leaf in shapes1.items()}
+    recv1 = exchange_wire(wire1, shapes1, Dd, (data_axis,))
+    pod_mean = codec.decode_mean(recv1)              # (Pp * c,) fp32
 
-    pay_rows = regroup(payload, (c // 2) if qc.bits == 4 else c)
-    recv_pay = all_to_all_chunks(pay_rows, (data_axis,))
-    if qc.mode == "block":
-        sc_rows = regroup(scales, c // qc.block)
-        recv_sc = all_to_all_chunks(sc_rows, (data_axis,))
-    else:
-        recv_sc = jnp.broadcast_to(scales, (Dd, 1))
-
-    def deq_row(p_row, s_row):
-        return Q.decompress(p_row, s_row, qc)
-
-    contrib = jax.vmap(deq_row)(recv_pay, recv_sc)        # (Dd, Pp*c) fp32
-    pod_mean = jnp.mean(contrib, axis=0)                  # my group's pod mean
-
-    # stage 2 (DCN): 8-bit block-scaled exchange of the pod means.
-    qc8 = Q.QuantConfig(bits=8, mode="block", block=qc.block)
-    q8, s8 = Q.quant_block(pod_mean, qc8)
-    recv8 = all_to_all_chunks(q8.reshape(Pp, c), (pod_axis,))
-    recv8s = all_to_all_chunks(s8.reshape(Pp, c // qc8.block), (pod_axis,))
-    contrib2 = jax.vmap(lambda p_, s_: Q.dequant_block(p_, s_, qc8))(recv8, recv8s)
-    g_shard = jnp.mean(contrib2, axis=0)                  # (c,)
-    return g_shard, new_state
+    # --- stage 2 (DCN): stateless re-encode across pods --------------------
+    cfg2 = loco_lib.validate_stage2(cfg)
+    codec2 = codec_lib.get_codec(cfg2)
+    n2 = pod_mean.shape[0]
+    wire2, _ = codec2.encode(pod_mean, codec2.init_state(n2), None)
+    recv2 = exchange_wire(wire2, codec2.wire_shapes(n2), Pp, (pod_axis,))
+    return codec2.decode_mean(recv2), new_state

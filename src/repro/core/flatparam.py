@@ -92,6 +92,7 @@ class MeshTopo:
     tp_axis: str
     dp: int
     tp: int
+    pods: int = 1  # size of the inter-pod axis (1 = single-pod / flat mesh)
 
     @staticmethod
     def from_mesh(mesh: jax.sharding.Mesh) -> "MeshTopo":
@@ -101,7 +102,9 @@ class MeshTopo:
         else:
             dp_axes = ("data",)
         dp = math.prod(mesh.shape[a] for a in dp_axes)
-        return MeshTopo(dp_axes=dp_axes, tp_axis="model", dp=dp, tp=mesh.shape["model"])
+        return MeshTopo(dp_axes=dp_axes, tp_axis="model", dp=dp,
+                        tp=mesh.shape["model"],
+                        pods=mesh.shape["pod"] if "pod" in names else 1)
 
     def chunk_spec(self, stacked: bool) -> P:
         dims = ("model", self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0])

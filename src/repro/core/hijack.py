@@ -129,10 +129,14 @@ def gather_with_sync_buckets(
     return _make_bucketed_gather(plan, tuple(dp_axes))(w_chunk, tuple(states))
 
 
-def gather_fp(w_chunk: jax.Array, dp_axes: tuple[str, ...]) -> jax.Array:
-    """Plain differentiable FSDP gather: backward is a full-precision
-    reduce-scatter *sum*.  Used for small (non-LoCo) tensors; callers divide
-    the resulting grads by D to get the mean (see steps.py)."""
+@lru_cache(maxsize=None)
+def _make_gather_fp(dp_axes: tuple[str, ...]):
+    """Build (and cache) the fp custom_vjp gather per dp-axes tuple.
+
+    Cached like :func:`_make_gather`: gather_fp is called once per non-loco
+    parameter per trace, and rebuilding the custom_vjp closure each call
+    defeated JAX's function-identity caches (pinned by the retrace-count
+    test in tests/test_comm_dist.py)."""
 
     @jax.custom_vjp
     def gather(w_chunk):
@@ -143,12 +147,21 @@ def gather_fp(w_chunk: jax.Array, dp_axes: tuple[str, ...]) -> jax.Array:
 
     def bwd(_, g_full):
         # bf16 wire (the "16-bit Adam" baseline of the paper); mean in f32.
+        # chunk dtype == gathered dtype, so g_full.dtype is the right
+        # cotangent dtype for w_chunk.
         D = axis_size(dp_axes)
         g = psum_scatter_flat(g_full.astype(jnp.bfloat16), dp_axes)
-        return ((g.astype(jnp.float32) / D).astype(w_chunk.dtype),)
+        return ((g.astype(jnp.float32) / D).astype(g_full.dtype),)
 
     gather.defvjp(fwd, bwd)
-    return gather(w_chunk)
+    return gather
+
+
+def gather_fp(w_chunk: jax.Array, dp_axes: tuple[str, ...]) -> jax.Array:
+    """Plain differentiable FSDP gather: backward is a full-precision
+    reduce-scatter *sum*.  Used for small (non-LoCo) tensors; callers divide
+    the resulting grads by D to get the mean (see steps.py)."""
+    return _make_gather_fp(tuple(dp_axes))(w_chunk)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1,))

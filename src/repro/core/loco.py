@@ -55,15 +55,67 @@ class SyncConfig:
     # no registered kernel fall back to the jnp oracle, so this is always
     # safe to enable.
     use_kernels: bool = False
-    # Beyond-paper: two-stage multi-pod exchange -- 4-bit all2all + fp32 mean
-    # inside each pod (ICI), then an 8-bit all2all of the pod-means across
-    # pods (DCN).  Cuts inter-pod traffic ~8x vs the flat dp-group all2all;
-    # error feedback covers stage 1 (the lossy hop), stage 2's 8-bit error
-    # is small and unbiased-ish (documented in EXPERIMENTS.md §Perf).
+    # Beyond-paper: two-stage multi-pod exchange (paper §3.3 applied to an
+    # ICI+DCN topology).  Stage 1 runs *this* config's codec as an all2all
+    # + fp32 mean inside each pod (ICI); stage 2 re-encodes the pod means
+    # with ``stage2_sync()``'s codec and exchanges them across pods (DCN).
+    # Cuts inter-pod traffic ~(bf16 bits / stage-2 bits)x vs the flat
+    # dp-group all2all; error feedback covers stage 1 (the lossy hop),
+    # stage 2's 8-bit error is small and unbiased-ish (EXPERIMENTS.md
+    # §Comm).  Per-bucket under a sync plan: policy flag ``body=loco4+hier``.
     hierarchical: bool = False
+    # Stage-2 (inter-pod) wire config; None = 8-bit block-scaled direct
+    # quantization.  Must resolve to a *stateless* registered codec (the
+    # pod mean is recomputed every step; there is nothing for error
+    # feedback to persist against) — enforced at build time in
+    # launch/steps.py and at trace time in comm.hierarchical_sync.
+    stage2: "SyncConfig | None" = None
 
     def needs_state(self) -> bool:
         return self.strategy in ("loco", "ef", "ef21", "onebit")
+
+    def stage2_sync(self) -> "SyncConfig":
+        """Resolved stage-2 (DCN) wire config of the two-stage exchange."""
+        if self.stage2 is not None:
+            return self.stage2
+        return SyncConfig(
+            strategy="naive4",
+            quant=dataclasses.replace(self.quant, bits=8, mode="block",
+                                      stochastic_rounding=False),
+            use_kernels=self.use_kernels)
+
+
+def validate_stage2(cfg: SyncConfig) -> SyncConfig:
+    """Resolve and check a hierarchical config's stage-2 codec.
+
+    The single source of truth for the stage-2 contract, shared by the
+    distributed form (comm.hierarchical_sync), the simulation form
+    (sim_sync_hier) and build-time validation (launch/steps.py): it must be
+    a *registered* codec, *stateless* (the pod mean is recomputed every
+    step; there is nothing for error feedback to persist against), and
+    cannot use stochastic rounding (no PRNG key reaches the stage-2
+    encode).  Returns the resolved config.
+    """
+    from repro.core import codec as codec_lib
+
+    s2 = cfg.stage2_sync()
+    if s2.strategy not in codec_lib.CODECS or s2.needs_state():
+        raise ValueError(
+            f"stage-2 codec {s2.strategy!r} must be a stateless registered "
+            "codec (the pod mean is recomputed every step; there is nothing "
+            "for error feedback to persist against); use naive4-style "
+            "direct quantization")
+    if s2.hierarchical or s2.stage2 is not None:
+        raise ValueError(
+            "stage-2 config must not itself be hierarchical: there is no "
+            "third network to stage over, and the flags would be silently "
+            "ignored. Clear hierarchical/stage2 on the stage2 config.")
+    if s2.quant.stochastic_rounding:
+        raise ValueError(
+            "stage-2 stochastic_rounding is not supported (no PRNG key "
+            "reaches the stage-2 encode; it would fail mid-trace). Disable "
+            "it on the stage2 config.")
+    return s2
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +214,14 @@ def sim_sync(g_nodes: jax.Array, state: jax.Array, step: jax.Array,
     """
     if cfg.strategy == "fp":
         return jnp.mean(g_nodes, axis=0), state
+    d, new_state = _sim_round(g_nodes, state, step, cfg, key)
+    return jnp.mean(d, axis=0), new_state
+
+
+def _sim_round(g_nodes, state, step, cfg: SyncConfig, key):
+    """One simulated compression round: per-node local_compress (with
+    per-node rounding keys when stochastic rounding is on) + maybe_reset.
+    Shared by sim_sync and sim_sync_hier so the two forms cannot drift."""
     if cfg.quant.stochastic_rounding and cfg.strategy != "onebit":
         if key is None:
             key = jax.random.fold_in(jax.random.PRNGKey(0x10C0), step)
@@ -171,8 +231,61 @@ def sim_sync(g_nodes: jax.Array, state: jax.Array, step: jax.Array,
         )(g_nodes, state, keys)
     else:
         d, new_state = jax.vmap(lambda g, s: local_compress(g, s, cfg))(g_nodes, state)
-    new_state = jax.vmap(lambda s: maybe_reset(s, step, cfg))(new_state)
-    return jnp.mean(d, axis=0), new_state
+    return d, jax.vmap(lambda s: maybe_reset(s, step, cfg))(new_state)
+
+
+@partial(jax.jit, static_argnames=("cfg", "pods"))
+def sim_sync_hier(g_nodes: jax.Array, state: jax.Array, step: jax.Array,
+                  cfg: SyncConfig, pods: int, key: jax.Array | None = None):
+    """Two-stage (hierarchical) synchronization over ``pods`` simulated pods.
+
+    g_nodes: (N, d) per-node local gradients, N = pods * Dd; node
+    ``r = p * Dd + dd`` lives in pod ``p`` at intra-pod index ``dd`` (the
+    same rank order as the distributed ``("pod", "data")`` mesh).
+    returns (g_hat (d,), new_state (N, d)).
+
+    This is the simulation form of :func:`repro.core.comm.hierarchical_sync`
+    and is bit-exact with it *by construction*: stage 1 is each node's codec
+    round trip (identical to :func:`sim_sync`) followed by the intra-pod
+    mean; stage 2 re-encodes, per destination device, exactly the pod-mean
+    slice that device would hold distributed — the ``Pp`` chunks
+    ``{p' * Dd + dd}`` in chunk order — through ``cfg.stage2_sync()``'s
+    codec, then means over source pods.  Chunk granularity ``c = d / N``
+    must keep every bucket edge on a quantizer-block boundary (the buckets
+    layer guarantees c % 512 == 0).
+    """
+    from repro.core import codec as codec_lib
+
+    if cfg.strategy not in codec_lib.CODECS:
+        raise ValueError(
+            f"hierarchical sync needs a registered wire codec; strategy "
+            f"{cfg.strategy!r} has none (registered: {sorted(codec_lib.CODECS)})")
+    N, d = g_nodes.shape
+    assert N % pods == 0, (N, pods)
+    dd_size = N // pods
+    c = d // N
+    assert c * N == d, (d, N)
+
+    # ---- stage 1: per-node codec round trip (== sim_sync), pod mean -------
+    dec, new_state = _sim_round(g_nodes, state, step, cfg, key)
+    pod_means = jnp.mean(dec.reshape(pods, dd_size, d), axis=1)  # (pods, d)
+
+    # ---- stage 2: per-device slice re-encode across pods -------------------
+    cfg2 = validate_stage2(cfg)
+    codec2 = codec_lib.get_codec(cfg2)
+    # device (p_src, dd)'s stage-2 input: pod p_src's mean restricted to the
+    # chunks {p * Dd + dd : p}, concatenated in chunk order.
+    pm = pod_means.reshape(pods, pods, dd_size, c)               # [p_src, p, dd, c]
+    slices = pm.transpose(0, 2, 1, 3).reshape(pods, dd_size, pods * c)
+
+    def rt2(x):
+        return codec2.roundtrip(x, codec2.init_state(x.shape[0]))[0]
+
+    dec2 = jax.vmap(jax.vmap(rt2))(slices)                       # [p_src, dd, Pp*c]
+    # final chunk r = p*Dd+dd: mean over source pods of their decoded piece.
+    ghat_chunks = jnp.mean(dec2.reshape(pods, dd_size, pods, c), axis=0)
+    ghat = ghat_chunks.transpose(1, 0, 2).reshape(d)             # [dd, p, c] -> flat
+    return ghat, new_state
 
 
 def deviation_bound(cfg: SyncConfig, d: int, k: int, c_inf: float, alpha: float = 1.0):

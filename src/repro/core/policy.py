@@ -78,7 +78,10 @@ class SyncPolicy:
                 break
         if self.min_compress_elems and n_elems < self.min_compress_elems:
             if cfg.strategy != "fp":
-                cfg = dataclasses.replace(cfg, strategy="fp")
+                # hierarchical staging is dropped with the codec: fp has no
+                # wire codec to stage (and build-time validation rejects it)
+                cfg = dataclasses.replace(cfg, strategy="fp",
+                                          hierarchical=False, stage2=None)
         return cfg
 
 
@@ -94,7 +97,12 @@ def uniform(cfg: SyncConfig) -> SyncPolicy:
 def _base_preset(name: str, base: SyncConfig) -> SyncConfig:
     """Named wire presets; unlisted fields inherit from the run default."""
     if name == "fp":
-        return dataclasses.replace(base, strategy="fp")
+        # fp has no wire codec to stage: clear an inherited hierarchical
+        # default (e.g. --hierarchical + 'norm=fp') instead of resolving a
+        # combo build-time validation must reject.  '...=fp+hier' still
+        # re-adds the flag explicitly and fails loudly.
+        return dataclasses.replace(base, strategy="fp",
+                                   hierarchical=False, stage2=None)
     if name in ("loco", "loco4"):
         return dataclasses.replace(
             base, strategy="loco", quant=dataclasses.replace(base.quant, bits=4))
@@ -117,6 +125,13 @@ def _preset(spec: str, base: SyncConfig) -> SyncConfig:
     matched buckets only (`SyncConfig.use_kernels` is per-bucket; the codec
     registry dispatches unsupported combinations back to jnp, so enabling
     kernels for a cell with no fused path is safe).
+
+    ``+hier`` / ``+hier4`` / ``+nohier`` toggle the two-stage (pod, data)
+    exchange for the matched buckets (`SyncConfig.hierarchical` is likewise
+    per-bucket): stage 1 runs the bucket's own codec intra-pod, stage 2
+    re-encodes the pod means inter-pod at 8 bits (``hier``) or 4 bits
+    (``hier4``), block-scaled.  Needs a 2-axis dp mesh; build-time
+    validation in launch/steps.py rejects it loudly otherwise.
     """
     name, *flags = spec.split("+")
     cfg = _base_preset(name, base)
@@ -125,9 +140,22 @@ def _preset(spec: str, base: SyncConfig) -> SyncConfig:
             cfg = dataclasses.replace(cfg, use_kernels=True)
         elif f == "nokernels":
             cfg = dataclasses.replace(cfg, use_kernels=False)
+        elif f == "hier":
+            cfg = dataclasses.replace(cfg, hierarchical=True, stage2=None)
+        elif f == "hier4":
+            cfg = dataclasses.replace(
+                cfg, hierarchical=True,
+                stage2=SyncConfig(
+                    strategy="naive4",
+                    quant=dataclasses.replace(cfg.quant, bits=4, mode="block",
+                                              stochastic_rounding=False),
+                    use_kernels=cfg.use_kernels))
+        elif f == "nohier":
+            cfg = dataclasses.replace(cfg, hierarchical=False, stage2=None)
         else:
             raise ValueError(f"unknown preset flag {f!r} in {spec!r}; "
-                             "known flags: kernels nokernels")
+                             "known flags: kernels nokernels hier hier4 "
+                             "nohier")
     return cfg
 
 

@@ -8,6 +8,11 @@ Two gradient codecs (paper Eqn. (1) and the block-scaled variant):
 * ``block``  -- beyond-paper default: per-block (256 elements) absmax dynamic
   scale.  Removes the clipping hyper-parameter; costs one f32 scale per block
   on the wire (~1.6% at 4-bit).
+* ``tensor`` -- one absmax dynamic scale for the whole segment.  Cheapest
+  metadata (4 bytes per segment) but the scale is *per-node dynamic*, so it
+  must cross the wire per peer (a ``gather`` leaf in the codec registry) —
+  unlike ``fixed``, whose scale is a static config constant every peer
+  already knows.
 
 plus the 8-bit error codecs:
 
@@ -38,7 +43,7 @@ class QuantConfig:
     """Static configuration of the gradient wire format."""
 
     bits: int = 4
-    mode: Literal["fixed", "block"] = "block"
+    mode: Literal["fixed", "block", "tensor"] = "block"
     scale: float = 2.0**17          # fixed mode only (paper: 2**17 or 2**19)
     block: int = DEFAULT_BLOCK      # block mode only
     # 8-bit error codec ("int8" = paper-exact, "f8" = TPU production path)
@@ -106,6 +111,27 @@ def quant_block(
 def dequant_block(q: jax.Array, scales: jax.Array, cfg: QuantConfig) -> jax.Array:
     qb = _to_blocks(q.astype(jnp.float32), cfg.block)
     return (qb / scales.reshape(-1, 1)).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# tensor-scaled codec (one dynamic absmax scale per segment)
+# ---------------------------------------------------------------------------
+
+def quant_tensor(
+    x: jax.Array, cfg: QuantConfig, key: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Whole-segment absmax quantization.  Returns (int8 codes, (1,) f32 scale).
+
+    The scale is *dynamic per node* (each peer's absmax differs), so a
+    receiver must dequantize each peer's payload with that peer's scale —
+    the codec registry exchanges it as a ``gather`` wire leaf.
+    """
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf))
+    scale = jnp.float32(cfg.qmax) / jnp.maximum(absmax, 1e-30)
+    q = _round(xf * scale, cfg, key)
+    q = jnp.clip(q, cfg.qmin, cfg.qmax).astype(jnp.int8)
+    return q, scale.reshape(1)
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +241,8 @@ def compress(
     if cfg.mode == "fixed":
         q = quant_fixed(x, cfg, key)
         scales = jnp.full((1,), cfg.scale, jnp.float32)
+    elif cfg.mode == "tensor":
+        q, scales = quant_tensor(x, cfg, key)
     else:
         q, scales = quant_block(x, cfg, key)
     if cfg.bits == 4:
@@ -224,7 +252,7 @@ def compress(
 
 def decompress(payload: jax.Array, scales: jax.Array, cfg: QuantConfig) -> jax.Array:
     q = unpack_int4(payload) if cfg.bits == 4 else payload
-    if cfg.mode == "fixed":
+    if cfg.mode in ("fixed", "tensor"):
         return q.astype(jnp.float32) / scales[0]
     return dequant_block(q, scales, cfg)
 

@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import buckets as BK
 from repro.core import flatparam as FP
+from repro.core import loco as loco_lib
 from repro.core import policy as POL
 from repro.core.flatparam import MeshTopo, ParamGroup
 from repro.core.loco import SyncConfig, maybe_reset
@@ -82,9 +83,16 @@ def build_sync_plan(run: RunConfig, groups, topo: MeshTopo) -> "BK.SyncPlan | No
     return BK.make_sync_plan(groups, topo, bcfg, pol)
 
 
-def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None") -> None:
+def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None",
+                           topo: MeshTopo) -> None:
     """Reject configs the in-backward hijack path cannot honor, at step-build
-    time (before any tracing), with the resolved per-bucket configs in view."""
+    time (before any tracing), with the resolved per-bucket configs in view:
+    stochastic rounding (no PRNG key in the backward), strategies without a
+    wire codec (ef21 used to fail deep inside tracing), and hierarchical
+    buckets on meshes or strategies the two-stage exchange cannot serve
+    (which used to silently fall back to the flat exchange)."""
+    from repro.core import codec as codec_lib
+
     cfgs = ([(f"{p.qualname}[{b.index}]", b.sync)
              for p in plan.params for b in p.buckets]
             if plan is not None else [("sync", run.sync)])
@@ -96,6 +104,30 @@ def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None") -> None:
                 "thread; it would silently round to nearest). Use the "
                 "post-grad dist_sync/sim_sync with an explicit key, or "
                 "disable stochastic_rounding.")
+        if c.strategy != "fp" and c.strategy not in codec_lib.CODECS:
+            raise ValueError(
+                f"{where}: strategy {c.strategy!r} has no wire codec and "
+                "cannot run in the training step (ef21 needs a "
+                "receiver-side mean-estimate shard; use the post-grad "
+                f"loco.sim_sync). Registered: {sorted(codec_lib.CODECS)}.")
+        if c.hierarchical:
+            if len(topo.dp_axes) != 2 or topo.pods < 2:
+                raise ValueError(
+                    f"{where}: hierarchical sync needs a multi-pod "
+                    f"(pod, data) mesh; this mesh has dp axes "
+                    f"{topo.dp_axes!r} with {topo.pods} pod(s) — a size-1 "
+                    "pod axis would pay the stage-2 requantization error "
+                    "for zero DCN saving. Launch with --pods >= 2 or drop "
+                    "the +hier policy flag.")
+            if c.strategy == "fp":
+                raise ValueError(
+                    f"{where}: hierarchical sync has no meaning for the fp "
+                    "reduce-scatter baseline (there is no wire codec to "
+                    "stage); drop +hier for this bucket.")
+            try:
+                loco_lib.validate_stage2(c)
+            except ValueError as e:
+                raise ValueError(f"{where}: {e}") from None
 
 
 def build_model(cfg: ArchConfig, tp: int, sp: bool = False):
@@ -165,7 +197,7 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
     sched = make_schedule(run.schedule, run.lr, run.total_steps, run.warmup_steps)
     sync = run.sync
     plan = build_sync_plan(run, groups, topo)
-    _validate_sync_configs(run, plan)
+    _validate_sync_configs(run, plan, topo)
     needs_state = plan.needs_state() if plan is not None else sync.needs_state()
     assert shape.global_batch % topo.dp == 0, (shape.global_batch, topo.dp)
     local_batch = shape.global_batch // topo.dp

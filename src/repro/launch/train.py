@@ -42,12 +42,18 @@ def build_args(argv=None):
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--sync", default="loco",
                     choices=["fp", "loco", "ef", "naive4", "onebit"])
-    ap.add_argument("--quant-mode", default="block", choices=["block", "fixed"])
+    ap.add_argument("--quant-mode", default="block",
+                    choices=["block", "fixed", "tensor"])
     ap.add_argument("--quant-scale", type=float, default=2.0**17)
     ap.add_argument("--error-codec", default="f8", choices=["f8", "bf16", "none"])
     ap.add_argument("--beta", type=float, default=0.5)
     ap.add_argument("--reset-every", type=int, default=512)
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--hierarchical", action="store_true",
+                    help="two-stage (pod, data) exchange for every bucket: "
+                         "the bucket's codec intra-pod, 8-bit block across "
+                         "pods; needs --pods >= 2. Per-bucket control via "
+                         "--policy '...+hier'")
     ap.add_argument("--bucket-mb", type=float, default=0.0,
                     help="bucketed sync: target MiB of fp32 gradient per "
                          "bucket (0 = monolithic legacy path)")
@@ -79,6 +85,7 @@ def make_run(args) -> RunConfig:
         beta=args.beta,
         reset_every=args.reset_every,
         use_kernels=args.use_kernels,
+        hierarchical=args.hierarchical,
     )
     policy = POL.parse_policy(args.policy, sync) if args.policy else None
     return RunConfig(sync=sync, optimizer=args.optimizer, lr=args.lr,
@@ -106,7 +113,8 @@ def main(argv=None):
     bundle = make_train_step(cfg, run, mesh, shape)
     plan = bundle.helpers["plan"]
     if plan is not None:
-        print(WIRE.format_report(WIRE.plan_report(plan)), flush=True)
+        pods = bundle.helpers["topo"].pods
+        print(WIRE.format_report(WIRE.plan_report(plan, pods=pods)), flush=True)
     dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
                     global_batch=args.global_batch, seed=args.seed)
     batch_fn = (make_whisper_batch_fn(dc, cfg.d_model, cfg.dec_len)

@@ -16,9 +16,14 @@ Conventions
   (stacked groups multiply by ``layers``); ``all_to_all`` sends and
   receives the same volume, so this is also the receive size.
 * ``fp`` buckets count the bf16 reduce-scatter wire (2 bytes/elem).
-* The hierarchical two-stage exchange is reported as the flat path (its
-  stage-1 volume); the DCN-side saving is modeled in
-  benchmarks/bench_comm_model.py, not here.
+* On a multi-pod ``(pod, data)`` mesh (``pods > 1``) every bucket also
+  splits into ICI (intra-pod) vs DCN (inter-pod) bytes.  Flat buckets
+  attribute each wire leaf by destination row: of the ``D = pods * Dd``
+  all-to-all rows, ``(pods - 1) * Dd`` cross the DCN.  Hierarchical
+  buckets report stage 1 (the bucket's own codec, exchanged intra-pod
+  only) as ICI and stage 2 (the ``stage2_sync()`` codec on the pod means)
+  as DCN — both byte-matched to the exchanged wire arrays, like the flat
+  prediction (property-tested in tests/test_comm_dist.py).
 """
 from __future__ import annotations
 
@@ -63,6 +68,60 @@ def state_bytes(n_elems: int, cfg: SyncConfig) -> int:
     return n_elems * jnp.dtype(state_dtype(cfg)).itemsize
 
 
+def hier_stage_components(
+        n_elems: int, cfg: SyncConfig,
+        pods: int, dd: int) -> tuple[tuple[int, int], tuple[int, int]]:
+    """((payload, scales) per stage) of the two-stage exchange.
+
+    Stage 1 moves the bucket codec's full wire intra-pod (``gather`` leaves
+    are received from the ``dd`` pod members only); stage 2 moves the
+    stage-2 codec's wire for the pod-mean segment — ``n_elems / dd``
+    elements — across the ``pods`` pods.  The single source of the
+    hierarchical byte accounting: both :func:`hier_stage_bytes` and
+    :func:`bucket_wire` derive from it, keeping ici + dcn == payload +
+    scales by construction.
+    """
+    cfg2 = cfg.stage2_sync()
+    n2 = n_elems // dd
+    return ((payload_bytes(n_elems, cfg), scale_bytes(n_elems, cfg, dp=dd)),
+            (payload_bytes(n2, cfg2), scale_bytes(n2, cfg2, dp=pods)))
+
+
+def hier_stage_bytes(n_elems: int, cfg: SyncConfig,
+                     pods: int, dd: int) -> tuple[int, int]:
+    """(stage-1 ICI, stage-2 DCN) bytes of the two-stage exchange, each
+    byte-matching the arrays :func:`repro.core.comm.hierarchical_sync`
+    actually exchanges on that network."""
+    (p1, s1), (p2, s2) = hier_stage_components(n_elems, cfg, pods, dd)
+    return p1 + s1, p2 + s2
+
+
+def flat_stage_bytes(n_elems: int, cfg: SyncConfig,
+                     dp: int, dd: int) -> tuple[int, int]:
+    """(ICI, DCN) attribution of a *flat* exchange's wire bytes.
+
+    Of the ``dp`` equal all-to-all rows (and the ``dp`` gather copies),
+    ``dd`` stay inside the pod; the rest cross the DCN.  ``none`` leaves
+    never cross the wire and count as ICI-resident, matching the existing
+    total convention (ici + dcn == payload_bytes + scale_bytes).
+    """
+    if cfg.strategy == "fp":
+        total = 2 * n_elems
+        return total * dd // dp, total * (dp - dd) // dp
+    ici = dcn = 0
+    for leaf in codec_lib.get_codec(cfg).wire_shapes(n_elems).values():
+        if leaf.comm == "split":
+            per_row = leaf.nbytes // dp
+            ici += per_row * dd
+            dcn += per_row * (dp - dd)
+        elif leaf.comm == "gather":
+            ici += leaf.nbytes * dd
+            dcn += leaf.nbytes * (dp - dd)
+        else:
+            ici += leaf.nbytes
+    return ici, dcn
+
+
 @dataclasses.dataclass(frozen=True)
 class BucketWire:
     param: str
@@ -73,6 +132,9 @@ class BucketWire:
     payload: int         # bytes, per device per sync, x layers
     scales: int
     state: int
+    ici: int = 0         # intra-pod bytes (== wire when pods == 1)
+    dcn: int = 0         # inter-pod bytes (stage-2 wire for hierarchical)
+    hierarchical: bool = False
 
     @property
     def wire(self) -> int:
@@ -88,6 +150,10 @@ class WireReport:
     fp32_bytes: int      # what an uncompressed fp32 exchange would move
     bf16_bytes: int      # the 16-bit Adam baseline wire
     state_bytes: int     # resident error-state footprint per device
+    pods: int = 1        # inter-pod axis size the ICI/DCN split was computed for
+    ici_bytes: int = 0   # intra-pod bytes per device per step
+    dcn_bytes: int = 0   # inter-pod bytes per device per step
+    bf16_dcn_bytes: int = 0  # the 16-bit baseline's inter-pod share
 
     @property
     def ratio_vs_bf16(self) -> float:
@@ -96,6 +162,12 @@ class WireReport:
     @property
     def ratio_vs_fp32(self) -> float:
         return self.total_wire / max(self.fp32_bytes, 1)
+
+    @property
+    def dcn_ratio_vs_bf16(self) -> float:
+        """Inter-pod bytes vs the bf16 baseline's inter-pod share — the
+        headline saving of the hierarchical two-stage exchange."""
+        return self.dcn_bytes / max(self.bf16_dcn_bytes, 1)
 
     def by_class(self) -> dict[str, int]:
         out: dict[str, int] = {}
@@ -110,35 +182,64 @@ class WireReport:
             "bf16_bytes": self.bf16_bytes,
             "state_bytes": self.state_bytes,
             "ratio_vs_bf16": self.ratio_vs_bf16,
+            "pods": self.pods,
+            "ici_bytes": self.ici_bytes,
+            "dcn_bytes": self.dcn_bytes,
+            "bf16_dcn_bytes": self.bf16_dcn_bytes,
+            "dcn_ratio_vs_bf16": self.dcn_ratio_vs_bf16,
             "by_class": self.by_class(),
             "n_buckets": len(self.buckets),
         }, indent=2)
 
 
-def bucket_wire(param: str, tclass: str, b: Bucket, layers: int) -> BucketWire:
+def bucket_wire(param: str, tclass: str, b: Bucket, layers: int,
+                pods: int = 1) -> BucketWire:
     dp = b.seg_elems // b.chunk_elems
+    dd = dp // max(pods, 1)
+    hier = b.sync.hierarchical and pods > 1 and b.sync.strategy != "fp"
+    if hier:
+        # two-stage: the bucket codec's wire stays intra-pod; only the
+        # stage-2 re-encode of the pod means crosses the DCN.
+        (p1, s1), (p2, s2) = hier_stage_components(b.seg_elems, b.sync,
+                                                   pods, dd)
+        pay, sc = p1 + p2, s1 + s2
+        ici, dcn = p1 + s1, p2 + s2
+    else:
+        pay = payload_bytes(b.seg_elems, b.sync)
+        sc = scale_bytes(b.seg_elems, b.sync, dp=dp)
+        ici, dcn = flat_stage_bytes(b.seg_elems, b.sync, dp, dd)
     return BucketWire(
         param=param, bucket=b.index, tensor_class=tclass,
         strategy=b.sync.strategy, n_elems=b.seg_elems,
-        payload=layers * payload_bytes(b.seg_elems, b.sync),
-        scales=layers * scale_bytes(b.seg_elems, b.sync, dp=dp),
-        state=layers * state_bytes(b.seg_elems, b.sync))
+        payload=layers * pay, scales=layers * sc,
+        state=layers * state_bytes(b.seg_elems, b.sync),
+        ici=layers * ici, dcn=layers * dcn, hierarchical=hier)
 
 
-def plan_report(plan: SyncPlan) -> WireReport:
-    """Static wire accounting for every bucket in the plan."""
+def plan_report(plan: SyncPlan, pods: int = 1) -> WireReport:
+    """Static wire accounting for every bucket in the plan.
+
+    ``pods`` is the size of the inter-pod mesh axis (1 = single-pod /
+    flat-mesh run; the ICI/DCN split is then degenerate: everything ICI).
+    """
     rows = []
-    fp32 = bf16 = 0
+    fp32 = bf16 = bf16_dcn = 0
     for pp in plan.params:
         for b in pp.buckets:
-            rows.append(bucket_wire(pp.qualname, pp.tensor_class, b, pp.layers))
+            rows.append(bucket_wire(pp.qualname, pp.tensor_class, b,
+                                    pp.layers, pods=pods))
             fp32 += pp.layers * 4 * b.seg_elems
             bf16 += pp.layers * 2 * b.seg_elems
+            bf16_dcn += pp.layers * 2 * b.seg_elems * (pods - 1) // max(pods, 1)
     return WireReport(
         buckets=tuple(rows),
         total_wire=sum(r.wire for r in rows),
         fp32_bytes=fp32, bf16_bytes=bf16,
-        state_bytes=sum(r.state for r in rows))
+        state_bytes=sum(r.state for r in rows),
+        pods=pods,
+        ici_bytes=sum(r.ici for r in rows),
+        dcn_bytes=sum(r.dcn for r in rows),
+        bf16_dcn_bytes=bf16_dcn)
 
 
 def format_report(rep: WireReport, max_rows: int = 12) -> str:
@@ -150,6 +251,13 @@ def format_report(rep: WireReport, max_rows: int = 12) -> str:
         f"error-state: {rep.state_bytes / 2**20:.2f} MiB; "
         f"buckets: {len(rep.buckets)}",
     ]
+    if rep.pods > 1:
+        lines.append(
+            f"  ICI {rep.ici_bytes / 2**20:8.2f} MiB | "
+            f"DCN {rep.dcn_bytes / 2**20:8.2f} MiB "
+            f"({rep.dcn_ratio_vs_bf16:.3f}x of bf16 DCN share; "
+            f"{sum(1 for b in rep.buckets if b.hierarchical)} "
+            f"hierarchical buckets)")
     for cls, byt in sorted(rep.by_class().items()):
         lines.append(f"  class {cls:<6} {byt / 2**20:8.2f} MiB")
     rows = sorted(rep.buckets, key=lambda r: -r.wire)[:max_rows]

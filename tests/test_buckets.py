@@ -97,6 +97,37 @@ def test_policy_parse_roundtrip():
     assert POL.parse_policy("block/w*=fp", base).rules[0].name_glob == "block/w*"
 
 
+def test_policy_parse_hier_flags():
+    """+hier / +hier4 / +nohier resolve per-bucket two-stage configs."""
+    base = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+    pol = POL.parse_policy("body=loco4+hier,embed=loco8+hier4,norm=fp", base)
+    body = pol.resolve("b/wq", "body", 1 << 20)
+    assert body.hierarchical and body.stage2 is None
+    s2 = body.stage2_sync()
+    assert (s2.strategy, s2.quant.bits, s2.quant.mode) == ("naive4", 8, "block")
+    assert not s2.needs_state()
+    emb = pol.resolve("e/tok", "embed", 1 << 20)
+    assert emb.hierarchical and emb.stage2 is not None
+    assert emb.stage2.quant.bits == 4 and emb.stage2.strategy == "naive4"
+    assert not pol.resolve("b/n1", "norm", 1 << 20).hierarchical
+    hier_default = dataclasses.replace(base, hierarchical=True)
+    off = POL.parse_policy("body=loco4+nohier", hier_default)
+    assert not off.resolve("b/wq", "body", 1 << 20).hierarchical
+    assert off.resolve("e/tok", "embed", 1 << 20).hierarchical  # default kept
+    # min-override buckets drop to fp AND lose the hierarchical staging
+    # (fp has no codec to stage; build-time validation would reject it)
+    tiny = POL.parse_policy("body=loco4+hier,min=65536", base) \
+        .resolve("b/wq", "body", 1024)
+    assert tiny.strategy == "fp" and not tiny.hierarchical
+    # an fp rule under a hierarchical run default ('--hierarchical' +
+    # 'norm=fp') resolves to the FLAT fp wire, not a rejected fp+hier combo
+    norm_fp = POL.parse_policy("norm=fp", hier_default) \
+        .resolve("b/n1", "norm", 1 << 20)
+    assert norm_fp.strategy == "fp" and not norm_fp.hierarchical
+    with pytest.raises(ValueError, match="unknown preset flag"):
+        POL.parse_policy("body=loco4+heir", base)
+
+
 def test_classify():
     from repro.core.flatparam import ParamInfo
     assert POL.classify(ParamInfo("tok", (512, 64), init="embed")) == "embed"

@@ -65,8 +65,23 @@ CFGS = [
                                                   scale=2.0**10)),
     SyncConfig(strategy="ef", quant=QuantConfig(bits=8, mode="block")),
     SyncConfig(strategy="naive4", quant=QuantConfig(bits=4, mode="block")),
+    SyncConfig(strategy="naive4", quant=QuantConfig(bits=8, mode="tensor")),
+    SyncConfig(strategy="loco", quant=QuantConfig(bits=4, mode="tensor")),
     SyncConfig(strategy="onebit"),
 ]
+
+
+def test_tensor_mode_scale_is_gather_leaf():
+    """Tensor-mode scales are per-node dynamic, so the codec must declare
+    them ``gather`` (all-gathered per peer) — a ``none`` leaf would make
+    every receiver decode with its *local* scale (the old hierarchical
+    broadcast bug)."""
+    cfg = SyncConfig(strategy="loco", quant=QuantConfig(mode="tensor"))
+    shapes = C.get_codec(cfg).wire_shapes(1024)
+    assert shapes["scales"].comm == "gather"
+    # fixed mode stays static: the scale is a config constant
+    cfg_fixed = SyncConfig(strategy="loco", quant=QuantConfig(mode="fixed"))
+    assert C.get_codec(cfg_fixed).wire_shapes(1024)["scales"].comm == "none"
 
 
 @pytest.mark.parametrize("cfg", CFGS, ids=lambda c: f"{c.strategy}-"
@@ -372,9 +387,11 @@ def test_stochastic_rounding_requires_key():
         gather_with_sync(jnp.zeros((n,), jnp.bfloat16),
                          jnp.zeros((n,), jnp.float8_e4m3fn), SR, ("data",))
     # step builder: rejected at config time before any tracing
+    from repro.core.flatparam import MeshTopo
     from repro.launch.steps import _validate_sync_configs, RunConfig
+    topo = MeshTopo(dp_axes=("data",), tp_axis="model", dp=2, tp=2)
     with pytest.raises(ValueError, match="stochastic_rounding"):
-        _validate_sync_configs(RunConfig(sync=SR), None)
+        _validate_sync_configs(RunConfig(sync=SR), None, topo)
 
 
 def test_stochastic_rounding_key_threads_and_varies():

@@ -75,3 +75,34 @@ def test_compress_decompress_wire_shapes(seed):
     assert scales.shape == (2048 // cfg.block,)
     y = Q.decompress(payload, scales, cfg)
     assert y.shape == x.shape
+
+
+@hypothesis.given(hst.integers(0, 2**31 - 1),
+                  hst.sampled_from([4, 8]),
+                  hst.sampled_from([1e-6, 1e-3, 1.0, 100.0]))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_tensor_roundtrip_relative_bound(seed, bits, scale):
+    """Tensor absmax: one dynamic scale, error <= absmax/(2*qmax)."""
+    cfg = QuantConfig(bits=bits, mode="tensor")
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2048,)) * scale
+    rt = Q.roundtrip(x, cfg)
+    bound = jnp.max(jnp.abs(x)) / (2 * cfg.qmax) + 1e-9 * scale
+    assert float(jnp.abs(rt - x).max()) <= float(bound) * 1.001
+
+
+def test_tensor_mode_wire_shapes_and_scale():
+    """compress() in tensor mode: packed payload + one (1,) dynamic scale
+    (qmax / absmax), decompress divides by it — unlike fixed mode, the
+    value depends on the data, so peers cannot reconstruct it locally."""
+    cfg = QuantConfig(bits=4, mode="tensor")
+    x = jax.random.normal(jax.random.PRNGKey(7), (2048,)) * 3.0
+    payload, scales = Q.compress(x, cfg)
+    assert payload.shape == (1024,) and payload.dtype == jnp.int8
+    assert scales.shape == (1,)
+    np.testing.assert_allclose(
+        float(scales[0]), cfg.qmax / float(jnp.abs(x).max()), rtol=1e-6)
+    y = Q.decompress(payload, scales, cfg)
+    assert y.shape == x.shape
+    # different data -> different scale (the property fixed mode lacks)
+    _, scales2 = Q.compress(x * 10.0, cfg)
+    assert float(scales2[0]) != float(scales[0])
