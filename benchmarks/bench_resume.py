@@ -1,0 +1,148 @@
+"""Elastic-resume smoke: loss continuity across a topology x policy change.
+
+Trains llama2-400m (reduced) on a dp=2 x tp=2 mesh under a bucketed
+policy, checkpoints mid-run, then resumes the same data stream on a
+2-pod x 2-dp x tp=2 mesh under a *different* policy (+hier buckets) two
+ways:
+
+* **migrated** — `restore(..., reshard=True)`: master chunks, optimizer
+  moments and the per-bucket LoCo compensation errors are re-expressed in
+  logical space for the new topology/plan (repro/state, DESIGN.md §12);
+* **dropped**  — same restore but with the compensation state zeroed, i.e.
+  what a non-elastic checkpoint would force.
+
+The uninterrupted source run is the reference.  The migrated resume must
+track it strictly better than the state-dropped resume (LoCo's persistent-
+state claim, paper §4) — asserted, so this doubles as the CI leg.
+
+  PYTHONPATH=src python benchmarks/bench_resume.py --quick
+  -> BENCH_resume.json
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import json
+import shutil
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import csv_row
+except ModuleNotFoundError:  # invoked as `python benchmarks/bench_resume.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.common import csv_row
+from repro.checkpoint import checkpoint as CKPT
+from repro.configs.base import ShapeConfig, get_arch, reduced
+from repro.core import policy as POL
+from repro.core.loco import SyncConfig
+from repro.core.quantizer import QuantConfig
+from repro.data.synthetic import DataConfig, make_batch_fn
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import (RunConfig, make_init, make_train_step,
+                                state_fingerprint)
+
+CFG = reduced(get_arch("llama2-400m"))
+SHAPE = ShapeConfig("bench", seq_len=32, global_batch=8, kind="train")
+SYNC = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+
+
+def _setup(run, mesh, seed):
+    init_fn, _ = make_init(CFG, run, mesh)
+    chunks, states, opt = init_fn(jax.random.PRNGKey(seed))
+    bundle = make_train_step(CFG, run, mesh, SHAPE)
+    fp = state_fingerprint(run, bundle.helpers["groups"],
+                           bundle.helpers["topo"], bundle.helpers["plan"])
+    return bundle, fp, (chunks, states, opt)
+
+
+def _run(bundle, state, bf, lo, hi):
+    chunks, states, opt = state
+    losses = []
+    for i in range(lo, hi):
+        chunks, states, opt, m = bundle.fn(chunks, states, opt, jnp.int32(i),
+                                           bf(jnp.int32(i)))
+        losses.append(float(m["loss"]))
+    return losses, (chunks, states, opt)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/bench_resume_ckpt")
+    args = ap.parse_args(argv)
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)  # stale fingerprints
+    split = 16 if args.quick else 24
+    tail = 16 if args.quick else 24
+
+    run_src = RunConfig(
+        sync=SYNC, optimizer="adam", microbatch=2, total_steps=1000,
+        warmup_steps=2, lr=2e-3, bucket_bytes=64 << 10,
+        policy=POL.parse_policy("embed=loco8,norm=fp,min=16384", SYNC))
+    run_tgt = dataclasses.replace(
+        run_src, bucket_bytes=128 << 10,
+        policy=POL.parse_policy("embed=loco8,body=loco4+hier", SYNC))
+
+    bf = make_batch_fn(DataConfig(vocab=CFG.vocab, seq_len=SHAPE.seq_len,
+                                  global_batch=SHAPE.global_batch, seed=0))
+    t0 = time.time()
+
+    # ---- source: dp=2 x tp=2, checkpoint at `split`, keep running --------
+    mesh_src = make_local_mesh(dp=2, tp=2)
+    bundle, fp_src, st = _setup(run_src, mesh_src, seed=0)
+    head, st = _run(bundle, st, bf, 0, split)
+    CKPT.save(args.ckpt_dir, split,
+              {"chunks": st[0], "states": st[1], "opt": st[2]},
+              fingerprint=fp_src, keep=1)
+    source, _ = _run(bundle, st, bf, split, split + tail)
+
+    # ---- target: 2 pods x 2 dp x tp=2, different policy ------------------
+    mesh_tgt = make_local_mesh(dp=2, tp=2, pods=2)
+    bundle_t, fp_tgt, st0 = _setup(run_tgt, mesh_tgt, seed=1)
+    tmpl = {"chunks": st0[0], "states": st0[1], "opt": st0[2]}
+    restored = CKPT.restore(args.ckpt_dir, split, tmpl,
+                            fingerprint=fp_tgt, reshard=True)
+
+    migrated, _ = _run(bundle_t, (restored["chunks"], restored["states"],
+                                  restored["opt"]), bf, split, split + tail)
+
+    dropped_states = jax.tree.map(jnp.zeros_like, restored["states"])
+    dropped, _ = _run(bundle_t, (restored["chunks"], dropped_states,
+                                 restored["opt"]), bf, split, split + tail)
+
+    gap_m = float(np.mean(np.abs(np.array(migrated) - np.array(source))))
+    gap_d = float(np.mean(np.abs(np.array(dropped) - np.array(source))))
+    out = {
+        "arch": CFG.name, "split_step": split, "tail_steps": tail,
+        "head_losses": head, "source_losses": source,
+        "migrated_losses": migrated, "dropped_losses": dropped,
+        "gap_migrated": gap_m, "gap_dropped": gap_d,
+        "drop_penalty_x": gap_d / max(gap_m, 1e-12),
+        "wall_s": time.time() - t0,
+    }
+    with open("BENCH_resume.json", "w") as f:
+        json.dump(out, f, indent=1)
+    csv_row("resume_migrated_gap", gap_m * 1e6, f"{gap_m:.5f} nats")
+    csv_row("resume_dropped_gap", gap_d * 1e6, f"{gap_d:.5f} nats")
+    print(f"migrated tracks uninterrupted within {gap_m:.4f} nats; "
+          f"state-dropped diverges {out['drop_penalty_x']:.1f}x further "
+          f"({gap_d:.4f})", flush=True)
+
+    assert np.isfinite(migrated).all(), migrated
+    assert gap_m < 0.05, (gap_m, "migrated resume should track the "
+                          "uninterrupted run")
+    assert gap_d > gap_m, (gap_d, gap_m, "dropping the compensation state "
+                           "should hurt more than migrating it")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,84 +1,127 @@
-"""Sharded npz checkpointing.
+"""Sharded npz checkpointing (facade over :mod:`repro.state`).
 
-Saves the train state (flat-param chunks, sync states, optimizer state,
-step) as one .npz per checkpoint with a JSON manifest.  Arrays are fetched
-to host per-leaf (fine at CPU scale; interface-compatible with swapping in
-an async/OCDBT store on a real cluster -- the train loop only calls
-save/restore/latest_step).
+Saves the train state (flat-param chunks, per-bucket sync states, optimizer
+state) as one .npz per checkpoint, with a v2 JSON manifest carrying
+history, per-array checksums and the run's layout fingerprint
+(topology + bucket plan + state dtypes; see DESIGN.md §12).  Writes are
+atomic (tmp + rename), ``latest_step`` verifies integrity and falls back to
+the previous manifest entry on corruption, and ``restore`` can *reshard* a
+checkpoint written under a different dp size / bucket layout / policy /
+hierarchy setting through logical space instead of failing — or fails
+loudly naming every mismatched field when resharding was not requested.
+
+Arrays are fetched to host per-leaf (fine at CPU scale; interface-
+compatible with swapping in an async/OCDBT store on a real cluster — the
+train loop only calls save/restore/latest_step).
 """
 from __future__ import annotations
 
-import json
 import os
 
-import jax
-import numpy as np
+import jax.numpy as jnp
+
+from repro.state import manifest as MAN
+from repro.state import serial
+from repro.state.reshard import reshard as _reshard
 
 
-def _flatten(tree, prefix=""):
-    out = {}
-    if isinstance(tree, dict):
-        for k, v in tree.items():
-            out.update(_flatten(v, f"{prefix}{k}/"))
-    elif isinstance(tree, (tuple, list)):
-        for i, v in enumerate(tree):
-            out.update(_flatten(v, f"{prefix}{i}/"))
-    else:
-        out[prefix.rstrip("/")] = tree
-    return out
+def save(ckpt_dir: str, step: int, state: dict, *,
+         fingerprint: "dict | None" = None, keep: int = 0) -> str:
+    """state: dict of pytrees (e.g. {"chunks":..., "states":..., "opt":...}).
 
-
-def save(ckpt_dir: str, step: int, state: dict) -> str:
-    """state: dict of pytrees (e.g. {"chunks":..., "states":..., "opt":...})."""
+    ``fingerprint`` (from :func:`repro.state.build_fingerprint`) records the
+    layout the arrays were written under, enabling mismatch detection and
+    resharding at restore time.  ``keep > 0`` prunes the manifest history
+    (and data files) to the newest ``keep`` checkpoints.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
-    flat = _flatten(state)
-    arrs = {}
-    for k, v in flat.items():
-        a = np.asarray(jax.device_get(v))
-        if a.dtype == np.dtype("bfloat16") or "float8" in str(a.dtype):
-            arrs[k + "::" + str(a.dtype)] = a.view(
-                np.uint8 if a.dtype.itemsize == 1 else np.uint16)
-        else:
-            arrs[k] = a
-    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
-    np.savez(path, **arrs)
-    with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
-        json.dump({"latest": step}, f)
+    stored = serial.encode_arrays(serial.flatten(state))
+    path = os.path.join(ckpt_dir, MAN.ckpt_file(step))
+    serial.save_npz_atomic(path, stored)
+    # manifest goes last: a crash between the two leaves the previous
+    # manifest intact, never a manifest pointing at a half-written file.
+    MAN.add_entry(ckpt_dir, step, serial.checksums(stored), fingerprint,
+                  keep=keep)
     return path
 
 
-def latest_step(ckpt_dir: str) -> int | None:
-    mf = os.path.join(ckpt_dir, "manifest.json")
-    if not os.path.exists(mf):
+def latest_step(ckpt_dir: str) -> "int | None":
+    """Newest checkpoint step that passes integrity verification.
+
+    Corrupted/missing entries are skipped with a warning (falling back to
+    the previous manifest entry) instead of being returned blindly.
+    """
+    if not os.path.exists(os.path.join(ckpt_dir, MAN.MANIFEST)):
         return None
-    with open(mf) as f:
-        return json.load(f)["latest"]
+    entry = MAN.latest_valid_entry(ckpt_dir)
+    return None if entry is None else entry["step"]
 
 
-def restore(ckpt_dir: str, step: int, template: dict) -> dict:
-    """Restores into the structure of `template` (pytree of arrays)."""
-    import jax.numpy as jnp
+def restore(ckpt_dir: str, step: int, template: dict, *,
+            fingerprint: "dict | None" = None,
+            reshard: bool = False) -> dict:
+    """Restore into the structure of ``template`` (pytree of arrays).
 
-    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
-    data = np.load(path)
-    flat_t = _flatten(template)
+    With a target ``fingerprint`` and a fingerprinted checkpoint, layout
+    mismatches either reshard through logical space (``reshard=True``) or
+    raise :class:`repro.state.CheckpointMismatch` naming every differing
+    field.  Without fingerprints (legacy checkpoints / callers) the arrays
+    must match the template bit-for-bit in shape and dtype — validated
+    up front with the offending key named, not deep inside a ``.view``.
+    """
+    entry = MAN.find_entry(ckpt_dir, step)
+    fname = entry["file"] if entry is not None else MAN.ckpt_file(step)
+    try:
+        stored = serial.load_npz(os.path.join(ckpt_dir, fname))
+    except Exception as e:
+        raise ValueError(
+            f"checkpoint step {step} failed integrity verification: "
+            f"{fname}: unreadable ({e}) (latest_step() skips such "
+            "entries)") from e
+    if entry is not None:
+        # verify against the already-loaded arrays: one read, one crc pass
+        reason = MAN.verify_checksums(entry, stored)
+        if reason is not None:
+            raise ValueError(
+                f"checkpoint step {step} failed integrity verification: "
+                f"{reason} (latest_step() skips such entries)")
+    data = serial.decode_arrays(stored)
+
+    src_fp = entry.get("fingerprint") if entry is not None else None
+    if fingerprint is not None and src_fp is None and reshard:
+        raise ValueError(
+            f"checkpoint step {step} carries no layout fingerprint (saved "
+            "by a pre-manifest-v2 writer or without fingerprint=); it can "
+            "only be restored into a bit-identical template — resharding "
+            "has nothing to compare the target layout against")
+    if fingerprint is not None and src_fp is not None:
+        diff = MAN.fingerprint_diff(src_fp, fingerprint)
+        if diff:
+            if not reshard:
+                raise MAN.CheckpointMismatch(
+                    f"checkpoint step {step} was written under a different "
+                    "layout; pass --resume-reshard to migrate it through "
+                    "logical space. Differing fields:\n  "
+                    + "\n  ".join(diff[:20])
+                    + ("" if len(diff) <= 20
+                       else f"\n  ... and {len(diff) - 20} more"))
+            return _reshard(data, src_fp, fingerprint, template)
+
+    flat_t = serial.flatten(template)
     out = {}
-    for k in flat_t:
-        if k in data.files:
-            out[k] = jnp.asarray(data[k])
-        else:
-            hit = [f for f in data.files if f.startswith(k + "::")]
-            assert hit, f"missing checkpoint key {k}"
-            dtype = hit[0].split("::")[1]
-            raw = data[hit[0]]
-            out[k] = jnp.asarray(raw).view(jnp.dtype(dtype))
-    return _unflatten(out, template)
-
-
-def _unflatten(flat: dict, template, prefix=""):
-    if isinstance(template, dict):
-        return {k: _unflatten(flat, v, f"{prefix}{k}/") for k, v in template.items()}
-    if isinstance(template, (tuple, list)):
-        vals = [_unflatten(flat, v, f"{prefix}{i}/") for i, v in enumerate(template)]
-        return type(template)(vals)
-    return flat[prefix.rstrip("/")]
+    for k, t in flat_t.items():
+        if k not in data:
+            raise ValueError(
+                f"checkpoint step {step} is missing key {k!r} required by "
+                "the restore template (topology/plan changed? resume with "
+                "a fingerprint and --resume-reshard)")
+        a = data[k]
+        t_shape, t_dtype = tuple(t.shape), jnp.dtype(t.dtype)
+        if tuple(a.shape) != t_shape or jnp.dtype(a.dtype) != t_dtype:
+            raise ValueError(
+                f"checkpoint key {k!r} has shape {tuple(a.shape)} dtype "
+                f"{a.dtype}, but the restore template expects {t_shape} "
+                f"{t_dtype} (topology/plan changed? resume with a "
+                "fingerprint and --resume-reshard)")
+        out[k] = jnp.asarray(a)
+    return serial.unflatten(out, template)

@@ -143,15 +143,49 @@ def make_param_plan(group_name: str, info, topo, bucket_cfg: BucketConfig,
                      chunklen=chunklen, layers=layers, buckets=tuple(buckets))
 
 
-def make_sync_plan(groups, topo, bucket_cfg: BucketConfig,
-                   policy: SyncPolicy) -> SyncPlan:
-    """Build the whole-model schedule.  Non-loco params keep gather_fp."""
-    plans = []
+def loco_params(groups):
+    """Yield ``(group_name, info, layers)`` for every sync-planned param.
+
+    The one definition of which params participate in sync plans, shared by
+    the runtime plan builder and the monolithic (checkpoint-fingerprint)
+    plan so the two geometries cannot diverge.
+    """
     for g in groups:
         layers = g.n_layers if g.stacked else 1
         for info in g.infos:
-            if not info.loco:
-                continue
-            plans.append(make_param_plan(g.name, info, topo, bucket_cfg,
-                                         policy, layers=layers))
-    return SyncPlan(params=tuple(plans))
+            if info.loco:
+                yield g.name, info, layers
+
+
+def make_sync_plan(groups, topo, bucket_cfg: BucketConfig,
+                   policy: SyncPolicy) -> SyncPlan:
+    """Build the whole-model schedule.  Non-loco params keep gather_fp."""
+    return SyncPlan(params=tuple(
+        make_param_plan(gname, info, topo, bucket_cfg, policy, layers=layers)
+        for gname, info, layers in loco_params(groups)))
+
+
+def monolithic_param_plan(group_name: str, info, topo, cfg: SyncConfig,
+                          layers: int = 1) -> ParamPlan:
+    """The legacy monolithic sync expressed as a single-bucket plan.
+
+    The monolithic path's per-device state covers the whole ``(padlen,)``
+    local gradient, which is exactly one bucket spanning the full chunk
+    (``seg_elems = D * chunklen = padlen``).  Describing it this way lets
+    every layout consumer — in particular the elastic checkpoint manifest
+    (repro/state, DESIGN.md §12) — treat bucketed and monolithic runs
+    through one geometry instead of two.
+    """
+    chunklen = info.chunklen(topo.tp, topo.dp)
+    return ParamPlan(
+        group=group_name, name=info.name, tensor_class=classify(info),
+        chunklen=chunklen, layers=layers,
+        buckets=(Bucket(index=0, offset=0, chunk_elems=chunklen,
+                        seg_elems=topo.dp * chunklen, sync=cfg),))
+
+
+def monolithic_sync_plan(groups, topo, cfg: SyncConfig) -> SyncPlan:
+    """Whole-model single-bucket-per-param plan (see monolithic_param_plan)."""
+    return SyncPlan(params=tuple(
+        monolithic_param_plan(gname, info, topo, cfg, layers=layers)
+        for gname, info, layers in loco_params(groups)))

@@ -89,6 +89,27 @@ class Codec:
             return jnp.zeros((n,), self.state_dtype())
         return jnp.zeros((1,), jnp.float32)
 
+    # ---- state (de)serialization -------------------------------------------
+    # The compressor state is *stored* in ``state_dtype()`` but its meaning
+    # is a float32 compensation-error vector.  These two hooks are the only
+    # place that mapping lives; the elastic checkpoint subsystem
+    # (repro/state) uses them to round-trip every bucket's state through
+    # logical fp32 space when resharding across topologies/plans
+    # (DESIGN.md §12).  For plain float storage (bf16/f32) they are casts;
+    # codecs with a scaled integer/f8 error format override both.
+    def state_decode(self, state: jax.Array) -> jax.Array:
+        """Stored compressor state -> logical fp32 error values."""
+        return state.astype(jnp.float32)
+
+    def state_encode(self, e: jax.Array) -> jax.Array:
+        """Logical fp32 error values -> stored compressor state.
+
+        Exact inverse of :meth:`state_decode` on its own range, so a
+        decode -> encode round trip at unchanged dtype is bit-exact (the
+        identity-reshard contract, tests/test_checkpoint.py).
+        """
+        return e.astype(self.state_dtype())
+
     def wire_shapes(self, n: int) -> dict[str, WireLeaf]:
         raise NotImplementedError
 
@@ -269,6 +290,12 @@ class LocoCodec(_QuantizedCodec):
 
     def state_dtype(self):
         return Q.error_dtype(self.cfg.quant)
+
+    def state_decode(self, state):
+        return Q.error_decode(state, self.cfg.quant)
+
+    def state_encode(self, e):
+        return Q.error_encode(e, self.cfg.quant)
 
     def encode_ref(self, g, state, key=None):
         self._check_key(key)

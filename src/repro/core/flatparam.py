@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import zlib
-from typing import Callable, Sequence
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -170,12 +170,24 @@ def init_sync_state(info: ParamInfo, cfg: SyncConfig, topo: MeshTopo) -> jax.Arr
     return jnp.zeros((1,), jnp.float32)
 
 
+def bucket_state_struct(b) -> tuple[int, Any]:
+    """(length, dtype) of one bucket's stored compressor-state leaf.
+
+    The single source of truth for state-leaf layout, shared by the local
+    init, the global shape builder below, and the elastic checkpoint
+    manifest (repro/state, DESIGN.md §12): a state-carrying bucket stores
+    its full ``(seg_elems,)`` segment in the codec's state dtype, a
+    stateless bucket a ``(1,)`` fp32 dummy.
+    """
+    if b.sync.needs_state():
+        return b.seg_elems, loco_lib.state_dtype(b.sync)
+    return 1, jnp.float32
+
+
 def init_sync_state_buckets(pplan: ParamPlan) -> tuple[jax.Array, ...]:
     """Per-bucket compressor states for one param under a sync plan."""
-    return tuple(
-        jnp.zeros((b.seg_elems,), loco_lib.state_dtype(b.sync))
-        if b.sync.needs_state() else jnp.zeros((1,), jnp.float32)
-        for b in pplan.buckets)
+    return tuple(jnp.zeros((n,), dt)
+                 for n, dt in map(bucket_state_struct, pplan.buckets))
 
 
 def materialize(
@@ -416,9 +428,7 @@ def train_state_shapes(groups: Sequence[ParamGroup], cfg: SyncConfig, topo: Mesh
             if plan is not None and info.loco:
                 pp = plan.lookup(g.name, info.name)
                 sg[info.name] = tuple(
-                    state_struct(b.seg_elems, loco_lib.state_dtype(b.sync))
-                    if b.sync.needs_state() else state_struct(1, jnp.float32)
-                    for b in pp.buckets)
+                    state_struct(*bucket_state_struct(b)) for b in pp.buckets)
             elif info.loco and cfg.needs_state():
                 sg[info.name] = state_struct(pad, loco_lib.state_dtype(cfg))
             else:

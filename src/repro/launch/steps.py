@@ -83,6 +83,19 @@ def build_sync_plan(run: RunConfig, groups, topo: MeshTopo) -> "BK.SyncPlan | No
     return BK.make_sync_plan(groups, topo, bcfg, pol)
 
 
+def state_fingerprint(run: RunConfig, groups, topo: MeshTopo,
+                      plan: "BK.SyncPlan | None") -> dict:
+    """Layout fingerprint of this run's train state (DESIGN.md §12).
+
+    Built from the *target* plan before any restore happens, so the
+    checkpoint layer can compare it against the stored fingerprint and
+    reshard (or fail loudly) instead of tripping over mismatched arrays.
+    """
+    from repro.state import build_fingerprint
+
+    return build_fingerprint(groups, topo, run.sync, plan)
+
+
 def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None",
                            topo: MeshTopo) -> None:
     """Reject configs the in-backward hijack path cannot honor, at step-build

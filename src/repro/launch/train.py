@@ -25,7 +25,8 @@ from repro.core.loco import SyncConfig
 from repro.core.quantizer import QuantConfig
 from repro.data.synthetic import DataConfig, make_batch_fn, make_whisper_batch_fn
 from repro.launch.mesh import make_local_mesh, make_production_mesh
-from repro.launch.steps import RunConfig, make_init, make_train_step
+from repro.launch.steps import (RunConfig, make_init, make_train_step,
+                                state_fingerprint)
 from repro.telemetry import wire as WIRE
 
 
@@ -74,6 +75,16 @@ def build_args(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-keep", type=int, default=0,
+                    help="prune checkpoint history to the newest N "
+                         "(0 = keep all)")
+    ap.add_argument("--resume-reshard", action="store_true",
+                    help="when resuming onto a different dp size / bucket "
+                         "layout / policy / hierarchy setting, migrate the "
+                         "checkpointed state (master chunks, optimizer "
+                         "moments, per-bucket compensation errors) through "
+                         "logical space instead of failing on the layout "
+                         "mismatch")
     return ap.parse_args(argv)
 
 
@@ -121,11 +132,18 @@ def main(argv=None):
                 if cfg.enc_dec else make_batch_fn(dc))
 
     start = 0
+    ckpt_fp = None
     if args.ckpt_dir:
+        # the *target* plan's fingerprint is built before any restore, so a
+        # layout change either reshards explicitly or fails loudly up front
+        ckpt_fp = state_fingerprint(run, bundle.helpers["groups"],
+                                    bundle.helpers["topo"], plan)
         latest = CKPT.latest_step(args.ckpt_dir)
         if latest is not None:
             state = CKPT.restore(args.ckpt_dir, latest,
-                                 {"chunks": chunks, "states": states, "opt": opt})
+                                 {"chunks": chunks, "states": states, "opt": opt},
+                                 fingerprint=ckpt_fp,
+                                 reshard=args.resume_reshard)
             chunks, states, opt = state["chunks"], state["states"], state["opt"]
             start = latest
             print(f"restored step {latest}")
@@ -144,7 +162,8 @@ def main(argv=None):
                   f"tok/s={tok_s:,.0f}{extra}", flush=True)
         if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
             CKPT.save(args.ckpt_dir, step + 1,
-                      {"chunks": chunks, "states": states, "opt": opt})
+                      {"chunks": chunks, "states": states, "opt": opt},
+                      fingerprint=ckpt_fp, keep=args.ckpt_keep)
     print(f"done in {time.time()-t0:.1f}s")
     return float(m["loss"])
 

@@ -1,0 +1,22 @@
+"""Elastic compressor-state checkpointing (DESIGN.md §12).
+
+LoCo's quality rests on its *persistent* compensation-error state; dropping
+it on resume degrades compression back to naive low-bit.  This package
+makes that state (plus master chunks and optimizer state) survive topology
+and policy changes by round-tripping every sharded array through **logical
+space**:
+
+``serial``    flatten/dtype-view/atomic-npz primitives + checksums
+``manifest``  manifest v2: history, integrity, layout fingerprints
+``logical``   chunk/bucket/quantized-state <-> logical fp32 views
+``reshard``   the cross-(topology, plan) migration driver
+
+``repro.checkpoint.checkpoint`` is the user-facing facade over this
+package (save / restore / latest_step).
+"""
+from repro.state.manifest import (CheckpointMismatch, build_fingerprint,
+                                  fingerprint_diff)
+from repro.state.reshard import reshard
+
+__all__ = ["CheckpointMismatch", "build_fingerprint", "fingerprint_diff",
+           "reshard"]

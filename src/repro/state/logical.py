@@ -1,0 +1,137 @@
+"""Logical-space views of the sharded train state (host-side, numpy).
+
+Everything the runtime lays out *forward* at init time — flat padded
+vector -> ``D`` rank chunks -> chunk-space buckets -> quantized per-bucket
+error states (DESIGN.md §2, §7) — this module runs *backward* and forward
+again, so a checkpoint written under one ``(topology, plan)`` can be
+re-expressed under another:
+
+* **Chunk space.** A parameter's global chunk array ``(..., TP, padlen)``
+  *is* its logical flat padded vector (rank ``d`` owns the contiguous slice
+  ``[d*C, (d+1)*C)``), so chunk repartitioning is: truncate the pad to the
+  ``numel`` real elements, re-pad to the target ``padlen'``.
+* **Error space.** Bucket ``b``'s stored state ``(..., D, seg_b)`` holds,
+  per source device, the compensation error of chunk-space columns
+  ``[off_b, off_b + c_b)`` of the ``(D, C)`` view of that device's local
+  gradient.  Decoding every bucket via its codec's ``state_decode`` and
+  writing the columns back yields the logical per-device fp32 error
+  ``(..., D, padlen)`` — indexed by flat logical position, topology-free
+  except for the device axis.
+* **Device migration.** The compensation that reaches the averaged
+  gradient is ``mean_d e_d`` (each device adds its error before the
+  all-to-all; receivers average over ``D``).  Migrating ``D -> D'`` ranks
+  therefore replicates the source mean to every target rank: the
+  compensation contribution to the next synchronized gradient is preserved
+  exactly, independent of either rank count.  ``D' == D`` passes the
+  per-device states through untouched, which (with unchanged dtypes) makes
+  the identity reshard bit-exact.
+
+All functions take and return numpy arrays with leading batch dims
+``(L?, TP)`` and operate on the trailing axes only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec as codec_lib
+from repro.state import manifest as MAN
+
+
+# ---------------------------------------------------------------------------
+# chunk space (master chunks, chunk-mirroring optimizer state)
+# ---------------------------------------------------------------------------
+
+def repartition_flat(a: np.ndarray, numel: int, pad_tgt: int) -> np.ndarray:
+    """``(..., pad_src)`` -> ``(..., pad_tgt)`` preserving the real elements.
+
+    Positions ``>= numel`` are padding under every topology (chunks are
+    contiguous slices of the same flat vector); they are re-zeroed when the
+    pad length changes and passed through untouched when it does not (the
+    identity reshard preserves every byte).
+    """
+    if a.shape[-1] == pad_tgt:
+        return a
+    out = np.zeros(a.shape[:-1] + (pad_tgt,), a.dtype)
+    n = min(numel, a.shape[-1], pad_tgt)
+    out[..., :n] = a[..., :n]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# error space (per-bucket compressor states)
+# ---------------------------------------------------------------------------
+
+def _state_codec(bd: dict) -> codec_lib.Codec:
+    return codec_lib.get_codec(MAN.bucket_sync_config(bd))
+
+
+def decode_state(arr: np.ndarray, bd: dict) -> np.ndarray:
+    """One bucket's stored state -> fp32 logical error values."""
+    dec = _state_codec(bd).state_decode(jnp.asarray(arr))
+    return np.asarray(jax.device_get(dec), np.float32)
+
+
+def encode_state(e: np.ndarray, bd: dict) -> np.ndarray:
+    """fp32 logical error values -> the bucket's storage dtype."""
+    enc = _state_codec(bd).state_encode(jnp.asarray(e, jnp.float32))
+    return np.asarray(jax.device_get(enc))
+
+
+def stitch_error(bucket_arrays: "list[np.ndarray]", buckets: "list[dict]",
+                 dp: int, chunklen: int) -> np.ndarray:
+    """Per-bucket stored states -> logical per-device error ``(..., D, pad)``.
+
+    ``bucket_arrays[i]`` is bucket i's global state ``(..., D, seg_i)`` (or
+    a ``(..., D, 1)`` dummy for stateless buckets, which contribute zero
+    error).  The result's last axis is flat logical position: element
+    ``(dev, r*C + off + j)`` came from bucket state ``(dev, r*c_b + j)``.
+    """
+    lead = bucket_arrays[0].shape[:-2]
+    view = np.zeros(lead + (dp, dp, chunklen), np.float32)
+    for arr, bd in zip(bucket_arrays, buckets):
+        if not bd["needs_state"]:
+            continue
+        c, off = bd["chunk_elems"], bd["offset"]
+        assert arr.shape[-2:] == (dp, bd["seg_elems"]), \
+            (arr.shape, dp, bd["seg_elems"])
+        dec = decode_state(arr, bd)
+        view[..., off:off + c] = dec.reshape(lead + (dp, dp, c))
+    return view.reshape(lead + (dp, dp * chunklen))
+
+
+def migrate_error_devices(e: np.ndarray, dp_tgt: int) -> np.ndarray:
+    """``(..., D, pad)`` -> ``(..., D', pad)``.
+
+    Same rank count: identity (bit-exact).  Different: every target rank
+    gets the source-rank mean, preserving ``mean_d e_d`` — the quantity the
+    synchronized gradient actually sees.
+    """
+    dp_src = e.shape[-2]
+    if dp_src == dp_tgt:
+        return e
+    m = e.mean(axis=-2, keepdims=True, dtype=np.float32)
+    return np.broadcast_to(m, e.shape[:-2] + (dp_tgt, e.shape[-1])).copy()
+
+
+def split_error(e: np.ndarray, buckets: "list[dict]",
+                chunklen: int) -> "list[np.ndarray]":
+    """Logical per-device error ``(..., D, pad)`` -> target bucket states.
+
+    Inverse of :func:`stitch_error` under the target plan: slice each
+    bucket's chunk-space columns and re-encode into its storage dtype;
+    stateless buckets get their ``(..., D, 1)`` fp32 dummy.
+    """
+    lead, dp = e.shape[:-2], e.shape[-2]
+    view = e.reshape(lead + (dp, dp, chunklen))
+    out = []
+    for bd in buckets:
+        if not bd["needs_state"]:
+            out.append(np.zeros(lead + (dp, 1), np.float32))
+            continue
+        c, off = bd["chunk_elems"], bd["offset"]
+        seg = np.ascontiguousarray(view[..., off:off + c]).reshape(
+            lead + (dp, bd["seg_elems"]))
+        out.append(encode_state(seg, bd))
+    return out

@@ -1,0 +1,109 @@
+"""Array (de)serialization for checkpoints: flatten, dtype views, atomic npz.
+
+numpy's npz container cannot store bfloat16 / float8 arrays natively, so
+sub-fp32 dtypes are stored as unsigned views with the true dtype recorded in
+the key (``name::bfloat16``).  :func:`load_arrays` undoes the view (via
+ml_dtypes, which registers those dtypes with numpy), so every consumer sees
+arrays in their true storage dtype.
+
+Writes are **atomic**: the npz is written to a ``.tmp`` sibling and
+``os.replace``d into place, so a crash mid-write can never leave a
+half-written file under the final name (the manifest is only updated after
+the data file exists — see repro/state/manifest.py).
+"""
+from __future__ import annotations
+
+import os
+import zlib
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16/float8 with numpy)
+import numpy as np
+
+DTYPE_SEP = "::"
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat dict of arrays
+# ---------------------------------------------------------------------------
+
+def flatten(tree, prefix=""):
+    """Pytree -> {"a/b/0": leaf} with dict keys and tuple/list indices."""
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def unflatten(flat: dict, template, prefix=""):
+    if isinstance(template, dict):
+        return {k: unflatten(flat, v, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, (tuple, list)):
+        vals = [unflatten(flat, v, f"{prefix}{i}/")
+                for i, v in enumerate(template)]
+        return type(template)(vals)
+    return flat[prefix.rstrip("/")]
+
+
+# ---------------------------------------------------------------------------
+# dtype views (npz cannot hold bf16/f8 natively)
+# ---------------------------------------------------------------------------
+
+def _needs_view(dt: np.dtype) -> bool:
+    return dt == np.dtype("bfloat16") or "float8" in str(dt)
+
+
+def encode_arrays(flat: dict) -> dict[str, np.ndarray]:
+    """{key: device array} -> {storage key: npz-safe host array}."""
+    out = {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        if _needs_view(a.dtype):
+            out[k + DTYPE_SEP + str(a.dtype)] = a.view(
+                np.uint8 if a.dtype.itemsize == 1 else np.uint16)
+        else:
+            out[k] = a
+    return out
+
+
+def decode_arrays(stored: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Inverse of :func:`encode_arrays` (keys lose the dtype suffix)."""
+    out = {}
+    for k, a in stored.items():
+        if DTYPE_SEP in k:
+            k, dtype = k.split(DTYPE_SEP)
+            a = a.view(np.dtype(dtype))
+        out[k] = a
+    return out
+
+
+# ---------------------------------------------------------------------------
+# atomic npz + checksums
+# ---------------------------------------------------------------------------
+
+def checksums(stored: dict[str, np.ndarray]) -> dict[str, int]:
+    """crc32 of each *stored* array's bytes (post dtype-view)."""
+    return {k: zlib.crc32(np.ascontiguousarray(a).tobytes())
+            for k, a in stored.items()}
+
+
+def save_npz_atomic(path: str, stored: dict[str, np.ndarray]) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **stored)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def load_npz(path: str) -> dict[str, np.ndarray]:
+    """Load the stored (still dtype-viewed) arrays of one checkpoint."""
+    with np.load(path) as data:
+        return {k: data[k] for k in data.files}

@@ -1,0 +1,314 @@
+"""Elastic compressor-state checkpointing (repro/state, DESIGN.md §12).
+
+Covers the reshard contract (identity bit-exact; cross-topology preserves
+the decoded compensation error up to target-dtype requantization; hier and
+monolithic<->planned layout changes round-trip), manifest v2 integrity
+(corrupted-latest fallback, atomic writes, --ckpt-keep pruning), loud
+mismatch failures naming the differing field, and an end-to-end resume of
+a bucketed run onto a different dp size x policy.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as CKPT
+from repro.configs.base import ShapeConfig, get_arch, reduced
+from repro.core import flatparam as FP
+from repro.core import policy as POL
+from repro.core.flatparam import MeshTopo
+from repro.core.loco import SyncConfig
+from repro.core.quantizer import QuantConfig
+from repro.data.synthetic import DataConfig, make_batch_fn
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import (RunConfig, build_sync_plan, make_init,
+                                make_train_step, state_fingerprint)
+from repro.state import CheckpointMismatch, fingerprint_diff
+from repro.state import logical, serial
+from repro.state import manifest as MAN
+from repro.state.reshard import reshard
+
+CFG = reduced(get_arch("llama2-400m"))
+SHAPE = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+SYNC = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+
+TOPO_2x2 = MeshTopo(dp_axes=("data",), tp_axis="model", dp=2, tp=2)
+TOPO_4x2 = MeshTopo(dp_axes=("data",), tp_axis="model", dp=4, tp=2)
+TOPO_POD = MeshTopo(dp_axes=("pod", "data"), tp_axis="model", dp=4, tp=2,
+                    pods=2)
+
+_groups = None
+
+
+def groups():
+    global _groups
+    if _groups is None:
+        from repro.launch.steps import build_model
+        _groups = build_model(CFG, 2).groups()
+    return _groups
+
+
+def _is_sds(x):
+    return isinstance(x, jax.ShapeDtypeStruct)
+
+
+def make_layout(run: RunConfig, topo: MeshTopo):
+    """(fingerprint, zero-template) of one run config on one topology."""
+    gs = groups()
+    plan = build_sync_plan(run, gs, topo)
+    fp = state_fingerprint(run, gs, topo, plan)
+    cshape, sshape = FP.train_state_shapes(gs, run.sync, topo, plan=plan)
+    z = lambda s: jnp.zeros(s.shape, s.dtype)
+    tmpl = {"chunks": jax.tree.map(z, cshape, is_leaf=_is_sds),
+            "states": jax.tree.map(z, sshape, is_leaf=_is_sds),
+            "opt": tuple(jax.tree.map(z, cshape, is_leaf=_is_sds)
+                         for _ in range(2))}
+    return fp, tmpl
+
+
+def random_state(tmpl, seed=0):
+    """Template -> random state (dummy (..,1) state leaves stay zero, as in
+    any real checkpoint)."""
+    rng = np.random.default_rng(seed)
+
+    def rnd(a):
+        if a.shape[-1] == 1 and a.dtype == jnp.float32 and a.ndim >= 3:
+            return a  # stateless-bucket dummy
+        v = rng.standard_normal(a.shape).astype(np.float32) * 1e-4
+        return jnp.asarray(v).astype(a.dtype)
+
+    return {"chunks": jax.tree.map(rnd, tmpl["chunks"]),
+            "states": jax.tree.map(rnd, tmpl["states"]),
+            "opt": jax.tree.map(rnd, tmpl["opt"])}
+
+
+def as_data(state):
+    """State pytree -> the decoded-array dict reshard consumes."""
+    return serial.decode_arrays(serial.encode_arrays(serial.flatten(state)))
+
+
+RUN_A = RunConfig(sync=SYNC, bucket_bytes=64 << 10,
+                  policy=POL.parse_policy("embed=loco8,norm=fp,min=16384",
+                                          SYNC))
+RUN_B = RunConfig(sync=SYNC, bucket_bytes=128 << 10,
+                  policy=POL.parse_policy("embed=loco8", SYNC))
+
+
+def mean_logical_error(state, fp, group, name):
+    """Mean-over-devices decoded compensation error of one param (real
+    elements only) — the quantity the synchronized gradient sees."""
+    p = {f"{q['group']}/{q['name']}": q for q in fp["params"]}[
+        f"{group}/{name}"]
+    leaf = state["states"][group][name]
+    arrs = [np.asarray(x)
+            for x in (leaf if isinstance(leaf, tuple) else [leaf])]
+    e = logical.stitch_error(arrs, p["buckets"], fp["topo"]["dp"],
+                             p["chunklen"])
+    return e.mean(axis=-2)[..., :p["numel"]]
+
+
+# ---------------------------------------------------------------------------
+# reshard math (host-side, no mesh)
+# ---------------------------------------------------------------------------
+
+def test_identity_reshard_bit_exact():
+    fp, tmpl = make_layout(RUN_A, TOPO_2x2)
+    state = random_state(tmpl)
+    out = reshard(as_data(state), fp, fp, state)
+    flat, flat_out = serial.flatten(state), serial.flatten(out)
+    assert set(flat) == set(flat_out)
+    for k in flat:
+        assert np.asarray(flat_out[k]).tobytes() == \
+            np.asarray(flat[k]).tobytes(), k
+
+
+def test_cross_topology_reshard_preserves_error():
+    fpA, tmplA = make_layout(RUN_A, TOPO_2x2)
+    fpB, tmplB = make_layout(RUN_B, TOPO_4x2)
+    state = random_state(tmplA)
+    out = reshard(as_data(state), fpA, fpB, tmplB)
+    # f8 requantization at the 2^-14 pre-scale: half a ulp of the largest
+    # magnitude we feed in (~1e-4 * mean of 2) is far below this bound
+    tol = 2.0 ** -14 * 2.0 ** -6
+    for p in fpA["params"]:
+        g, n = p["group"], p["name"]
+        if not p["loco"]:
+            continue
+        mA = mean_logical_error(state, fpA, g, n)
+        mB = mean_logical_error(out, fpB, g, n)
+        np.testing.assert_allclose(mB, mA, atol=tol, err_msg=f"{g}/{n}")
+        # master chunks: real elements preserved exactly
+        cA = np.asarray(state["chunks"][g][n])[..., :p["numel"]]
+        cB = np.asarray(out["chunks"][g][n])[..., :p["numel"]]
+        np.testing.assert_array_equal(cA, cB, err_msg=f"{g}/{n}")
+
+
+def test_monolithic_to_planned_and_back():
+    run_mono = RunConfig(sync=SYNC)  # no buckets: bare (padlen,) states
+    fpM, tmplM = make_layout(run_mono, TOPO_2x2)
+    fpP, tmplP = make_layout(RUN_B, TOPO_4x2)
+    assert not fpM["planned"] and fpP["planned"]
+    state = random_state(tmplM)
+    out = reshard(as_data(state), fpM, fpP, tmplP)
+    back = reshard(as_data(out), fpP, fpM, tmplM)
+    for p in fpM["params"]:
+        if not p["loco"]:
+            continue
+        g, n = p["group"], p["name"]
+        mM = mean_logical_error(state, fpM, g, n)
+        m2 = mean_logical_error(back, fpM, g, n)
+        # two requantization hops; values are exactly representable after
+        # the first, so the second adds nothing
+        np.testing.assert_allclose(m2, mM, atol=2.0 ** -14 * 2.0 ** -5,
+                                   err_msg=f"{g}/{n}")
+
+
+def test_hier_bucket_state_round_trip():
+    """+hier changes the wire, not the state layout: migrating flat <-> hier
+    buckets at the same dp preserves every decoded error bit."""
+    run_hier = dataclasses.replace(
+        RUN_B, policy=POL.parse_policy("embed=loco8,body=loco4+hier", SYNC))
+    fpF, tmplF = make_layout(RUN_B, TOPO_POD)
+    fpH, tmplH = make_layout(run_hier, TOPO_POD)
+    diff = fingerprint_diff(fpF, fpH)
+    assert any("hierarchical" in d for d in diff), diff
+    state = random_state(tmplF)
+    out = reshard(as_data(state), fpF, fpH, tmplH)
+    back = reshard(as_data(out), fpH, fpF, tmplF)
+    for k, v in serial.flatten(state["states"]).items():
+        assert np.asarray(serial.flatten(back["states"])[k]).tobytes() == \
+            np.asarray(v).tobytes(), k
+
+
+def test_tp_reshard_rejected():
+    fpA, tmplA = make_layout(RUN_A, TOPO_2x2)
+    topo_tp4 = MeshTopo(dp_axes=("data",), tp_axis="model", dp=2, tp=4)
+    fpT, tmplT = make_layout(RUN_A, topo_tp4)
+    state = random_state(tmplA)
+    with pytest.raises(CheckpointMismatch, match="TP"):
+        reshard(as_data(state), fpA, fpT, tmplT)
+
+
+# ---------------------------------------------------------------------------
+# facade: mismatch failures, integrity, history
+# ---------------------------------------------------------------------------
+
+def test_mismatch_without_reshard_names_fields(tmp_path):
+    fpA, tmplA = make_layout(RUN_A, TOPO_2x2)
+    fpB, tmplB = make_layout(RUN_B, TOPO_4x2)
+    CKPT.save(str(tmp_path), 3, random_state(tmplA), fingerprint=fpA)
+    with pytest.raises(CheckpointMismatch) as ei:
+        CKPT.restore(str(tmp_path), 3, tmplB, fingerprint=fpB, reshard=False)
+    msg = str(ei.value)
+    assert "topo.dp" in msg and "resume-reshard" in msg
+    # with reshard it goes through
+    out = CKPT.restore(str(tmp_path), 3, tmplB, fingerprint=fpB, reshard=True)
+    assert jax.tree.structure(out) == jax.tree.structure(tmplB)
+
+
+def test_shape_mismatch_without_fingerprint_is_loud(tmp_path):
+    _, tmplA = make_layout(RUN_A, TOPO_2x2)
+    fpB, tmplB = make_layout(RUN_B, TOPO_4x2)
+    CKPT.save(str(tmp_path), 1, random_state(tmplA))  # no fingerprint
+    with pytest.raises(ValueError, match="shape"):
+        CKPT.restore(str(tmp_path), 1, tmplB)
+    # reshard=True cannot help a fingerprint-less checkpoint: say so
+    # instead of suggesting the flag the caller already passed
+    with pytest.raises(ValueError, match="no layout fingerprint"):
+        CKPT.restore(str(tmp_path), 1, tmplB, fingerprint=fpB, reshard=True)
+
+
+def test_corrupted_latest_falls_back(tmp_path):
+    fp, tmpl = make_layout(RUN_A, TOPO_2x2)
+    CKPT.save(str(tmp_path), 1, random_state(tmpl, seed=1), fingerprint=fp)
+    CKPT.save(str(tmp_path), 2, random_state(tmpl, seed=2), fingerprint=fp)
+    assert CKPT.latest_step(str(tmp_path)) == 2
+    # corrupt the newest data file (truncate: simulates a torn write)
+    p2 = tmp_path / "ckpt_00000002.npz"
+    p2.write_bytes(p2.read_bytes()[: p2.stat().st_size // 2])
+    with pytest.warns(UserWarning, match="integrity"):
+        assert CKPT.latest_step(str(tmp_path)) == 1
+    # restoring the corrupted step explicitly is refused
+    with pytest.raises(ValueError, match="integrity"):
+        CKPT.restore(str(tmp_path), 2, tmpl, fingerprint=fp)
+    # the fallback entry restores fine
+    out = CKPT.restore(str(tmp_path), 1, tmpl, fingerprint=fp)
+    assert jax.tree.structure(out) == jax.tree.structure(tmpl)
+    # a missing file falls back the same way
+    os.remove(p2)
+    with pytest.warns(UserWarning, match="missing"):
+        assert CKPT.latest_step(str(tmp_path)) == 1
+
+
+def test_history_pruning_and_atomicity(tmp_path):
+    fp, tmpl = make_layout(RUN_A, TOPO_2x2)
+    for s in (1, 2, 3):
+        CKPT.save(str(tmp_path), s, random_state(tmpl, seed=s),
+                  fingerprint=fp, keep=2)
+    files = sorted(f for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert files == ["ckpt_00000002.npz", "ckpt_00000003.npz"]
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    hist = MAN.load_manifest(str(tmp_path))["history"]
+    assert [e["step"] for e in hist] == [2, 3]
+    assert all(e["checksums"] for e in hist)
+
+
+def test_legacy_v1_manifest_still_restores(tmp_path):
+    fp, tmpl = make_layout(RUN_A, TOPO_2x2)
+    state = random_state(tmpl)
+    CKPT.save(str(tmp_path), 5, state)
+    # rewrite the manifest in the v1 format
+    with open(tmp_path / "manifest.json", "w") as f:
+        json.dump({"latest": 5}, f)
+    assert CKPT.latest_step(str(tmp_path)) == 5
+    out = CKPT.restore(str(tmp_path), 5, tmpl)
+    for k, v in serial.flatten(out).items():
+        assert np.asarray(v).tobytes() == \
+            np.asarray(serial.flatten(state)[k]).tobytes(), k
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: bucketed run resumes onto a different dp x policy
+# ---------------------------------------------------------------------------
+
+def test_train_resume_reshard_end_to_end(tmp_path):
+    runA = dataclasses.replace(RUN_A, optimizer="adam", microbatch=2,
+                               total_steps=10, warmup_steps=1, lr=1e-3)
+    meshA = make_local_mesh(dp=2, tp=2)
+    init_fn, _ = make_init(CFG, runA, meshA)
+    chunks, states, opt = init_fn(jax.random.PRNGKey(0))
+    bundleA = make_train_step(CFG, runA, meshA, SHAPE)
+    bf = make_batch_fn(DataConfig(vocab=CFG.vocab, seq_len=SHAPE.seq_len,
+                                  global_batch=SHAPE.global_batch))
+    for i in range(3):
+        chunks, states, opt, _ = bundleA.fn(chunks, states, opt, jnp.int32(i),
+                                            bf(jnp.int32(i)))
+    fpA = state_fingerprint(runA, bundleA.helpers["groups"],
+                            bundleA.helpers["topo"], bundleA.helpers["plan"])
+    CKPT.save(str(tmp_path), 3, {"chunks": chunks, "states": states,
+                                 "opt": opt}, fingerprint=fpA)
+
+    runB = dataclasses.replace(RUN_B, optimizer="adam", microbatch=2,
+                               total_steps=10, warmup_steps=1, lr=1e-3)
+    meshB = make_local_mesh(dp=4, tp=2)
+    init_fnB, _ = make_init(CFG, runB, meshB)
+    cB, sB, oB = init_fnB(jax.random.PRNGKey(1))
+    bundleB = make_train_step(CFG, runB, meshB, SHAPE)
+    fpB = state_fingerprint(runB, bundleB.helpers["groups"],
+                            bundleB.helpers["topo"], bundleB.helpers["plan"])
+    st = CKPT.restore(str(tmp_path), 3, {"chunks": cB, "states": sB,
+                                         "opt": oB},
+                      fingerprint=fpB, reshard=True)
+    cB, sB, oB = st["chunks"], st["states"], st["opt"]
+    losses = []
+    for i in range(3, 6):
+        cB, sB, oB, m = bundleB.fn(cB, sB, oB, jnp.int32(i), bf(jnp.int32(i)))
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all(), losses
+    # the migrated run picks up where the source run left off: its first
+    # post-resume loss stays in the source trajectory's neighborhood
+    assert losses[0] < 7.5, losses
