@@ -22,7 +22,11 @@ graph from ENTRY, multiplying every ``while`` body by its trip count
                    not ground truth -- consistent across configs, which is
                    what the §Perf iteration needs.
 * collectives   -- wire bytes per kind, with the same (N-1)/N accounting as
-                   analysis/roofline.parse_collectives, x trip weights.
+                   analysis/roofline.parse_collectives, x trip weights — and
+                   per-kind LAUNCH counts (``coll_counts`` /
+                   :func:`collective_launches`), the number the wire
+                   coalescer [DESIGN.md §13] drives down while bytes stay
+                   fixed.
 
 Validated against cost_analysis on loop-free modules (test_analysis.py).
 """
@@ -263,3 +267,17 @@ def analyze(hlo_text: str) -> HloStats:
     comps, entry = parse_computations(hlo_text)
     memo: dict = {}
     return _analyze_comp(entry, comps, memo)
+
+
+def collective_launches(hlo_text: str) -> dict[str, float]:
+    """Trip-count-weighted collective LAUNCH counts per kind.
+
+    Counts every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+    ``all-to-all`` / ``collective-permute`` instruction reachable from
+    ENTRY, multiplying loop bodies by their trip counts; async
+    ``-start``/``-done`` pairs count once.  This is the per-step *launch*
+    number the wire coalescer (DESIGN.md §13) optimizes — wire BYTES are
+    invariant under coalescing, so only this count shows the win.
+    Validated against hand-countable modules in tests/test_analysis.py.
+    """
+    return dict(analyze(hlo_text).coll_counts)

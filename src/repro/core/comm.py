@@ -11,13 +11,22 @@ ordering follows rank ``r = pod * DATA + data`` so that sequential
 all-to-all over the dp axes, decompress and average **locally in fp32**
 (paper §3.3's all2all-instead-of-reduce-scatter argument).  It synchronizes
 one *segment* — ``dist_sync_buckets`` schedules many segments (the buckets
-of :mod:`repro.core.buckets`) as independent exchanges, each under its own
-config and state, which XLA is free to overlap with backward compute.
+of :mod:`repro.core.buckets`) under their own configs and states.
+
+Launch discipline (DESIGN.md §13): by default every exchange is
+**coalesced** through :mod:`repro.core.wirepack` — wire leaves (and, in the
+bucketed path, whole buckets) that share an exchange signature are packed
+into one ``uint8`` buffer and cross the network in ONE collective per comm
+group, instead of one per bucket-leaf.  The packed path is bit-exact with
+the per-leaf path (bytes move verbatim; only the launch count changes);
+``coalesce=False`` keeps the legacy one-collective-per-leaf schedule as an
+escape hatch and as the parity oracle for the tests.
 
 Buckets whose config sets ``hierarchical`` route through
-:func:`hierarchical_sync` instead: the same codec contract run twice — the
-bucket's own codec intra-pod (ICI), then a stateless second codec on the
-pod means inter-pod (DCN) — cutting cross-pod traffic to the stage-2 wire.
+:func:`hierarchical_sync` (or its coalesced in-plan equivalent): the same
+codec contract run twice — the bucket's own codec intra-pod (ICI), then a
+stateless second codec on the pod means inter-pod (DCN) — cutting
+cross-pod traffic to the stage-2 wire.
 """
 from __future__ import annotations
 
@@ -26,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import codec as codec_lib
 from repro.core import loco as loco_lib
+from repro.core import wirepack as WP
 from repro.core.buckets import ParamPlan
 from repro.core.loco import SyncConfig
 
@@ -79,22 +89,51 @@ def exchange_wire(
     shapes: dict[str, "codec_lib.WireLeaf"],
     D: int,
     dp_axes: tuple[str, ...],
+    coalesce: bool = True,
 ) -> dict[str, jax.Array]:
     """Move every wire leaf across the dp group per its ``comm`` kind.
 
     Returns the received pytree: each leaf with a leading peer axis ``D``
     (``split`` -> all-to-all rows, ``gather`` -> per-peer metadata,
     ``none`` -> the local copy broadcast — every peer already has it).
+
+    With ``coalesce`` (the default) all ``split`` leaves ride ONE packed u8
+    all-to-all and all ``gather`` leaves ONE packed all-gather —
+    bit-identical received arrays (collectives move bytes verbatim, the
+    dtype views are exact), one launch per comm kind instead of per leaf.
     """
     recv = {}
+    split = [n for n, l in shapes.items() if l.comm == "split"]
+    gather = [n for n, l in shapes.items() if l.comm == "gather"]
     for name, leaf in shapes.items():
-        arr = wire[name]
-        if leaf.comm == "split":
-            recv[name] = all_to_all_chunks(arr.reshape(D, -1), dp_axes)
-        elif leaf.comm == "gather":
+        if leaf.comm == "none":  # static metadata, known to every peer
+            recv[name] = jnp.broadcast_to(wire[name], (D, *wire[name].shape))
+    if not coalesce:
+        for name in split:
+            recv[name] = all_to_all_chunks(wire[name].reshape(D, -1), dp_axes)
+        for name in gather:
+            arr = wire[name]
             recv[name] = all_gather_flat(arr, dp_axes).reshape(D, *arr.shape)
-        else:  # static metadata, known to every peer
-            recv[name] = jnp.broadcast_to(arr, (D, *arr.shape))
+        return recv
+    if split:
+        rows = [WP.to_bytes(wire[n]).reshape(D, -1) for n in split]
+        widths = [r.shape[1] for r in rows]
+        buf = all_to_all_chunks(jnp.concatenate(rows, axis=1), dp_axes)
+        off = 0
+        for name, w in zip(split, widths):
+            piece = jax.lax.slice_in_dim(buf, off, off + w, axis=1)
+            recv[name] = WP.from_bytes(piece, shapes[name].dtype)
+            off += w
+    if gather:
+        bufs = [WP.to_bytes(wire[n]) for n in gather]
+        widths = [b.shape[0] for b in bufs]
+        got = all_gather_flat(jnp.concatenate(bufs), dp_axes).reshape(D, -1)
+        off = 0
+        for name, w in zip(gather, widths):
+            piece = jax.lax.slice_in_dim(got, off, off + w, axis=1)
+            recv[name] = WP.from_bytes(piece, shapes[name].dtype).reshape(
+                D, *wire[name].shape)
+            off += w
     return recv
 
 
@@ -104,6 +143,7 @@ def dist_sync(
     cfg: SyncConfig,
     dp_axes: tuple[str, ...],
     key: jax.Array | None = None,
+    coalesce: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
     """Synchronize one flat gradient segment across the dp group.
 
@@ -130,7 +170,8 @@ def dist_sync(
         # flattened): unsupported combos raise inside hierarchical_sync and
         # are caught earlier, with the bucket in view, by
         # launch.steps._validate_sync_configs.
-        return hierarchical_sync(g, state, cfg, dp_axes, key=key)
+        return hierarchical_sync(g, state, cfg, dp_axes, key=key,
+                                 coalesce=coalesce)
 
     if cfg.strategy == "fp":
         # 16-bit-style baseline: reduce-scatter mean (bf16 wire).
@@ -149,7 +190,8 @@ def dist_sync(
     wire, new_state = codec.encode(g, state, key)
 
     # --- exchange of the low-bit wire pytree (step 3 / §3.3) --------------
-    recv = exchange_wire(wire, codec.wire_shapes(n), D, dp_axes)
+    recv = exchange_wire(wire, codec.wire_shapes(n), D, dp_axes,
+                         coalesce=coalesce)
 
     # --- receiver-side dequant + mean --------------------------------------
     return codec.decode_mean(recv), new_state
@@ -159,12 +201,76 @@ def dist_sync(
 # bucketed dispatch: many segments, each with its own config + state
 # ---------------------------------------------------------------------------
 
+def _bucket_keys(key: jax.Array | None, plan: ParamPlan) -> tuple:
+    """Per-bucket rounding keys, folded in ONE vectorized pass (instead of
+    one scalar ``fold_in`` launch per bucket inside the schedule loop)."""
+    if key is None:
+        return (None,) * len(plan.buckets)
+    idx = jnp.asarray([b.index for b in plan.buckets], jnp.uint32)
+    ks = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+    return tuple(ks[i] for i in range(len(plan.buckets)))
+
+
+def _none_leaves(codec: "codec_lib.Codec", n: int,
+                 wire: dict[str, jax.Array], peers: int) -> dict[str, jax.Array]:
+    """Broadcast the never-exchanged (``comm == "none"``) leaves to the
+    peer-axis layout ``decode_mean`` expects."""
+    return {name: jnp.broadcast_to(wire[name], (peers, *wire[name].shape))
+            for name, leaf in codec.wire_shapes(n).items()
+            if leaf.comm == "none"}
+
+
+def _fused_state(codec: "codec_lib.Codec", states: tuple,
+                 run: "WP.EncodeRun", D: int) -> jax.Array:
+    """Member bucket states -> the run segment's peer-major state vector."""
+    if not codec.needs_state():
+        return states[run.positions[0]]  # dummy; encode passes it through
+    return WP.fuse_run_state(run, [states[p] for p in run.positions], D)
+
+
+def _split_state(codec: "codec_lib.Codec", ns: jax.Array, states: tuple,
+                 run: "WP.EncodeRun", D: int) -> list[jax.Array]:
+    """Inverse of :func:`_fused_state`: per-member updated state buffers."""
+    if not codec.needs_state():
+        return [states[pos] for pos in run.positions]
+    return WP.split_run_state(run, ns, D)
+
+
+def _exchange_stage(
+    gplan: WP.WireGroupPlan,
+    stage: str,
+    wires: dict[int, dict[str, jax.Array]],
+    axes: tuple[str, ...],
+) -> dict[int, dict[str, jax.Array]]:
+    """Run one stage's packed collectives: ≤1 all-to-all for the stage's
+    ``split`` leaves, ≤1 all-gather for its ``gather`` leaves.  Returns the
+    received leaves per bucket (leading peer axis), bit-identical to what
+    the per-bucket :func:`exchange_wire` would deliver."""
+    recv: dict[int, dict[str, jax.Array]] = {}
+    ga = gplan.group(stage, "a2a")
+    if ga is not None:
+        buf = all_to_all_chunks(WP.pack_a2a(ga, wires), axes)
+        for bidx, leaves in WP.unpack_a2a(ga, buf).items():
+            recv.setdefault(bidx, {}).update(leaves)
+    gg = gplan.group(stage, "gather")
+    if gg is not None:
+        buf = all_gather_flat(WP.pack_gather(gg, wires), axes)
+        buf = buf.reshape(gg.peers, -1)
+        shapes = {l.bucket: {} for l in gg.leaves}
+        for l in gg.leaves:
+            shapes[l.bucket][l.name] = wires[l.bucket][l.name].shape
+        for bidx, leaves in WP.unpack_gather(gg, buf, shapes).items():
+            recv.setdefault(bidx, {}).update(leaves)
+    return recv
+
+
 def dist_sync_buckets(
     g: jax.Array,
     states: tuple[jax.Array, ...],
     plan: ParamPlan,
     dp_axes: tuple[str, ...],
     key: jax.Array | None = None,
+    coalesce: bool = True,
 ) -> tuple[jax.Array, tuple[jax.Array, ...]]:
     """Synchronize a full local gradient bucket by bucket.
 
@@ -176,29 +282,220 @@ def dist_sync_buckets(
     chunk-space bucket geometry is the rank's contiguous chunk slice), and
     the per-bucket updated states.
 
-    Each bucket issues its own collective, so XLA can overlap the
-    exchanges; when every bucket resolves to the same config the result is
-    bit-exact with the monolithic :func:`dist_sync` (see buckets.py).
+    With ``coalesce`` (the default) the plan's buckets are grouped by
+    exchange signature (:func:`repro.core.wirepack.build_group_plan`) and
+    each group crosses the network in ONE packed collective — every codec
+    bucket's wire in one u8 all-to-all (+ one all-gather for per-node
+    metadata), every ``fp`` bucket in one bf16 reduce-scatter, and the
+    hierarchical buckets' two stages likewise packed per stage.  Bit-exact
+    with ``coalesce=False`` (the legacy one-exchange-per-bucket schedule,
+    kept as escape hatch and parity oracle): the encoded bytes, their
+    destinations, and every ``decode_mean`` input are identical — only the
+    launch count changes, O(comm groups) instead of O(buckets x leaves).
     """
     assert len(states) == len(plan.buckets), (len(states), len(plan.buckets))
     D = axis_size(dp_axes)
     C = plan.chunklen
     assert g.shape[0] == D * C, (g.shape, D, C)
+    gm = g.astype(jnp.float32).reshape(D, C)   # one upcast for all buckets
+    keys = _bucket_keys(key, plan)
+
+    def seg_of(b):
+        return jax.lax.slice_in_dim(gm, b.offset, b.offset + b.chunk_elems,
+                                    axis=1).reshape(-1)
+
+    if not coalesce:
+        shards, new_states = [], []
+        for b, st, kb in zip(plan.buckets, states, keys):
+            sh, ns = dist_sync(seg_of(b), st, b.sync, dp_axes, key=kb,
+                               coalesce=False)
+            shards.append(sh)
+            new_states.append(ns)
+        return jnp.concatenate(shards), tuple(new_states)
+    return _dist_sync_coalesced(gm, states, plan, dp_axes, keys,
+                                run_space=False)
+
+
+def dist_sync_runs(
+    g: jax.Array,
+    run_states: tuple[jax.Array, ...],
+    plan: ParamPlan,
+    dp_axes: tuple[str, ...],
+    key: jax.Array | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """:func:`dist_sync_buckets` with RUN-space compressor states.
+
+    ``run_states`` holds one peer-major buffer per :class:`encode run
+    <repro.core.wirepack.EncodeRun>` (see
+    :func:`repro.core.flatparam.fuse_run_states`) instead of one per
+    bucket.  Numerically identical to the bucket-space call — a run's
+    state is the exact peer-major concatenation of its members' — but the
+    training hot path carries ``len(runs)`` state leaves instead of
+    ``len(buckets)``: under a uniform policy that is ONE leaf per
+    parameter, so the scan-carry copies, cotangent plumbing and reset ops
+    that used to scale with bucket count collapse to the monolithic
+    path's.  This is what finally makes fine-grained bucket plans free.
+    """
+    D = axis_size(dp_axes)
+    C = plan.chunklen
+    assert g.shape[0] == D * C, (g.shape, D, C)
     gm = g.astype(jnp.float32).reshape(D, C)
-    shards, new_states = [], []
-    for b, st in zip(plan.buckets, states):
-        seg = jax.lax.slice_in_dim(gm, b.offset, b.offset + b.chunk_elems,
-                                   axis=1).reshape(-1)
-        kb = jax.random.fold_in(key, b.index) if key is not None else None
-        sh, ns = dist_sync(seg, st, b.sync, dp_axes, key=kb)
-        shards.append(sh)
-        new_states.append(ns)
-    return jnp.concatenate(shards), tuple(new_states)
+    keys = _bucket_keys(key, plan)
+    return _dist_sync_coalesced(gm, run_states, plan, dp_axes, keys,
+                                run_space=True)
+
+
+def _dist_sync_coalesced(
+    gm: jax.Array,
+    states: tuple[jax.Array, ...],
+    plan: ParamPlan,
+    dp_axes: tuple[str, ...],
+    keys: tuple,
+    run_space: bool,
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Shared coalesced schedule.  ``states`` (and the returned new
+    states) are per-run when ``run_space`` else per-bucket — the per-bucket
+    form stitches members through peer-major views around each fused
+    encode, the run form uses the buffers as-is."""
+    D = gm.shape[0]
+    any_hier = any(b.sync.hierarchical and b.sync.strategy != "fp"
+                   for b in plan.buckets)
+    if any_hier:
+        _check_hier_axes(dp_axes)
+        Pp = jax.lax.axis_size(dp_axes[0])
+        Dd = jax.lax.axis_size(dp_axes[1])
+    else:
+        Pp, Dd = 1, D
+    gplan = WP.build_group_plan(plan, D, pods=Pp)
+    runs = WP.encode_runs(plan)
+
+    def run_seg(run):
+        return jax.lax.slice_in_dim(gm, run.offset,
+                                    run.offset + run.chunk_total,
+                                    axis=1).reshape(-1)
+
+    assert len(states) == (len(runs) if run_space else len(plan.buckets)), (
+        len(states), len(runs), len(plan.buckets), run_space)
+
+    # --- encode every run (stage-1 wires; no collectives yet).  Adjacent
+    # same-config buckets quantize as ONE segment (WP.encode_runs): the
+    # uniform 28-bucket plan traces one encode like the monolithic path.
+    wires: dict[int, dict[str, jax.Array]] = {}
+    fp_segs: dict[int, jax.Array] = {}
+    new_states: list = [None] * len(states)
+    for ri, run in enumerate(runs):
+        cfg = run.sync
+        if cfg.strategy == "fp":
+            fp_segs[run.slot] = run_seg(run).astype(jnp.bfloat16)
+            if run_space:
+                new_states[ri] = states[ri]
+            else:
+                for pos in run.positions:
+                    new_states[pos] = states[pos]
+            continue
+        if cfg.strategy == "ef21":
+            raise NotImplementedError(
+                "ef21 distributed path needs a receiver-side mean-estimate "
+                "shard; use the post-grad reference (loco.sim_sync) for "
+                "ef21, or strategy='ef'/'loco' here.")
+        if cfg.hierarchical:
+            _check_hier_codec(cfg)
+        codec = codec_lib.get_codec(cfg)
+        # fused runs never use rounding keys (stochastic rounding is not
+        # fusible), so key=None is exact there
+        kb = None if run.fused else keys[run.positions[0]]
+        if run_space:
+            wire, ns = codec.encode(run_seg(run), states[ri], kb)
+            new_states[ri] = ns
+        elif run.fused:
+            wire, ns = codec.encode(run_seg(run),
+                                    _fused_state(codec, states, run, D),
+                                    None)
+            for pos, s in zip(run.positions,
+                              _split_state(codec, ns, states, run, D)):
+                new_states[pos] = s
+        else:
+            pos = run.positions[0]
+            wire, ns = codec.encode(run_seg(run), states[pos], kb)
+            new_states[pos] = ns
+        if cfg.hierarchical:
+            seg_n = D * run.chunk_total
+            wire = {name: (_regroup_chunks(wire[name], Pp, Dd).reshape(-1)
+                           if leaf.comm == "split" else wire[name])
+                    for name, leaf in codec.wire_shapes(seg_n).items()}
+        wires[run.slot] = wire
+
+    # --- one packed collective per comm group ------------------------------
+    shards: dict[int, jax.Array] = {}
+    rg = gplan.group("flat", "reduce")
+    if rg is not None:
+        shard = psum_scatter_flat(WP.pack_reduce(rg, fp_segs), dp_axes)
+        for slot, sh in WP.unpack_reduce(rg, shard).items():
+            shards[slot] = sh.astype(jnp.float32) / D
+    recv_flat = _exchange_stage(gplan, "flat", wires, dp_axes)
+    recv_h1 = (_exchange_stage(gplan, "hier1", wires, (dp_axes[-1],))
+               if any_hier else {})
+
+    # --- decode flat runs; hier runs: pod mean -> stage-2 encode -----------
+    wires2: dict[int, dict[str, jax.Array]] = {}
+    hier_codec2: dict[int, "codec_lib.Codec"] = {}
+    for run in runs:
+        cfg = run.sync
+        if cfg.strategy == "fp":
+            continue
+        codec = codec_lib.get_codec(cfg)
+        seg_n = D * run.chunk_total
+        if not cfg.hierarchical:
+            recv = dict(recv_flat.get(run.slot, {}))
+            recv.update(_none_leaves(codec, seg_n, wires[run.slot], D))
+            shards[run.slot] = codec.decode_mean(recv)
+            continue
+        recv1 = dict(recv_h1.get(run.slot, {}))
+        recv1.update(_none_leaves(codec, seg_n, wires[run.slot], Dd))
+        pod_mean = codec.decode_mean(recv1)            # (seg / Dd,) fp32
+        cfg2 = loco_lib.validate_stage2(cfg)
+        codec2 = codec_lib.get_codec(cfg2)
+        n2 = pod_mean.shape[0]
+        wires2[run.slot], _ = codec2.encode(pod_mean, codec2.init_state(n2),
+                                            None)
+        hier_codec2[run.slot] = codec2
+
+    # --- stage 2 (DCN): packed exchange across pods ------------------------
+    if wires2:
+        recv_h2 = _exchange_stage(gplan, "hier2", wires2, (dp_axes[0],))
+        for run in runs:
+            if run.slot not in wires2:
+                continue
+            codec2 = hier_codec2[run.slot]
+            n2 = D * run.chunk_total // Dd
+            recv2 = dict(recv_h2.get(run.slot, {}))
+            recv2.update(_none_leaves(codec2, n2, wires2[run.slot], Pp))
+            shards[run.slot] = codec2.decode_mean(recv2)
+
+    # runs are in chunk-space offset order, each shard spans its whole run
+    return (jnp.concatenate([shards[run.slot] for run in runs]),
+            tuple(new_states))
 
 
 # ---------------------------------------------------------------------------
 # hierarchical (two-stage) multi-pod exchange -- beyond-paper optimization
 # ---------------------------------------------------------------------------
+
+def _check_hier_axes(dp_axes: tuple[str, ...]) -> None:
+    if len(dp_axes) != 2:
+        raise ValueError(
+            f"hierarchical sync needs a (pod, data) mesh; got dp axes "
+            f"{dp_axes!r} — use the flat exchange (hierarchical=False) on "
+            "single-axis meshes")
+
+
+def _check_hier_codec(cfg: SyncConfig) -> None:
+    if cfg.strategy not in codec_lib.CODECS:
+        raise ValueError(
+            f"hierarchical sync needs a registered wire codec for stage 1; "
+            f"strategy {cfg.strategy!r} has none "
+            f"(registered: {sorted(codec_lib.CODECS)})")
+
 
 def _regroup_chunks(arr: jax.Array, Pp: int, Dd: int) -> jax.Array:
     """Flat chunk-major wire leaf -> stage-1 rows for the intra-pod a2a.
@@ -220,6 +517,7 @@ def hierarchical_sync(
     cfg: SyncConfig,
     dp_axes: tuple[str, ...],
     key: jax.Array | None = None,
+    coalesce: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
     """Codec-level two-stage exchange over a ``(pod, data)`` mesh.
 
@@ -240,21 +538,17 @@ def hierarchical_sync(
     encode -> exchange -> decode_mean contract as the flat path and
     sim == dist holds by construction (:func:`repro.core.loco.sim_sync_hier`).
 
+    Both legs inherit :func:`exchange_wire`'s coalesced packing: one u8
+    all-to-all (+ one all-gather when the codec has per-node metadata) per
+    stage instead of one collective per wire leaf.
+
     Chunk mapping: device (p, d) ends up with flat chunk r = p*Dd + d, same
     as the flat exchange, so the FSDP layout is unchanged.  Error feedback
     covers stage 1 only; the error states are bit-identical to the flat
     path's.
     """
-    if len(dp_axes) != 2:
-        raise ValueError(
-            f"hierarchical sync needs a (pod, data) mesh; got dp axes "
-            f"{dp_axes!r} — use the flat exchange (hierarchical=False) on "
-            "single-axis meshes")
-    if cfg.strategy not in codec_lib.CODECS:
-        raise ValueError(
-            f"hierarchical sync needs a registered wire codec for stage 1; "
-            f"strategy {cfg.strategy!r} has none "
-            f"(registered: {sorted(codec_lib.CODECS)})")
+    _check_hier_axes(dp_axes)
+    _check_hier_codec(cfg)
     pod_axis, data_axis = dp_axes
     Pp = jax.lax.axis_size(pod_axis)
     Dd = jax.lax.axis_size(data_axis)
@@ -270,7 +564,7 @@ def hierarchical_sync(
     wire1 = {name: (_regroup_chunks(wire[name], Pp, Dd).reshape(-1)
                     if leaf.comm == "split" else wire[name])
              for name, leaf in shapes1.items()}
-    recv1 = exchange_wire(wire1, shapes1, Dd, (data_axis,))
+    recv1 = exchange_wire(wire1, shapes1, Dd, (data_axis,), coalesce=coalesce)
     pod_mean = codec.decode_mean(recv1)              # (Pp * c,) fp32
 
     # --- stage 2 (DCN): stateless re-encode across pods --------------------
@@ -278,5 +572,6 @@ def hierarchical_sync(
     codec2 = codec_lib.get_codec(cfg2)
     n2 = pod_mean.shape[0]
     wire2, _ = codec2.encode(pod_mean, codec2.init_state(n2), None)
-    recv2 = exchange_wire(wire2, codec2.wire_shapes(n2), Pp, (pod_axis,))
+    recv2 = exchange_wire(wire2, codec2.wire_shapes(n2), Pp, (pod_axis,),
+                          coalesce=coalesce)
     return codec2.decode_mean(recv2), new_state

@@ -36,9 +36,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import loco as loco_lib
+from repro.core import wirepack as WP
 from repro.core.buckets import ALIGN, ParamPlan, SyncPlan
 from repro.core.hijack import (gather_fp, gather_with_sync,
-                               gather_with_sync_buckets, replicated_grad_psum)
+                               gather_with_sync_buckets,
+                               gather_with_sync_runs, replicated_grad_psum)
 from repro.core.loco import SyncConfig
 
 GRAIN = ALIGN  # dp chunks stay divisible by 2 (int4 pack) * 256 (quant block)
@@ -184,10 +186,87 @@ def bucket_state_struct(b) -> tuple[int, Any]:
     return 1, jnp.float32
 
 
-def init_sync_state_buckets(pplan: ParamPlan) -> tuple[jax.Array, ...]:
-    """Per-bucket compressor states for one param under a sync plan."""
+def state_units(pplan: ParamPlan, coalesce: bool = True):
+    """The state-leaf units of one param's stored train state.
+
+    The coalesced runtime (DESIGN.md §13) stores ONE buffer per encode run
+    — expressed here as synthetic :class:`~repro.core.buckets.Bucket`-like
+    units spanning the run's members, so every layout consumer (local
+    init, global specs/shapes, the checkpoint manifest and the logical
+    reshard stitcher) keeps working off :func:`bucket_state_struct`
+    unchanged, just coarser.  ``coalesce=False`` (the escape-hatch
+    schedule) keeps the original one-leaf-per-bucket layout.
+    """
+    import dataclasses as _dc
+
+    if not coalesce:
+        return pplan.buckets
+    D = (pplan.buckets[0].seg_elems // pplan.buckets[0].chunk_elems
+         if pplan.buckets else 1)
+    return tuple(
+        _dc.replace(pplan.buckets[run.positions[0]],
+                    index=ri, offset=run.offset,
+                    chunk_elems=run.chunk_total,
+                    seg_elems=D * run.chunk_total)
+        for ri, run in enumerate(WP.encode_runs(pplan)))
+
+
+def init_sync_state_units(pplan: ParamPlan,
+                          coalesce: bool = True) -> tuple[jax.Array, ...]:
+    """Per-state-unit compressor states (see :func:`state_units`)."""
     return tuple(jnp.zeros((n,), dt)
-                 for n, dt in map(bucket_state_struct, pplan.buckets))
+                 for n, dt in map(bucket_state_struct,
+                                  state_units(pplan, coalesce)))
+
+
+# ---------------------------------------------------------------------------
+# run-space state views (the coalesced runtime's state granularity)
+# ---------------------------------------------------------------------------
+#
+# Under the coalesced runtime the train state STORES one peer-major buffer
+# per encode run (repro.core.wirepack.encode_runs; see state_units above):
+# carrying len(buckets) leaves through the microbatch scan, the custom_vjp
+# cotangent and the reset schedule would cost O(buckets) small ops per
+# step, while a run's state is the exact column concatenation of its
+# members' (D, c_b) views — so under a uniform policy the hot loop carries
+# one state leaf per parameter, same as the monolithic path, and the
+# fuse/split below convert bit-exactly between the two granularities
+# (used by the parity tests and any bucket-space consumer).  See
+# DESIGN.md §13.
+
+def fuse_run_states(pplan: ParamPlan, states: Sequence[jax.Array],
+                    dp: int) -> tuple[jax.Array, ...]:
+    """Per-bucket state buffers -> per-encode-run peer-major buffers.
+
+    ``states[i]`` is bucket i's ``(L?, seg_i)`` local state; the returned
+    tuple holds one ``(L?, D * c_run)`` buffer per run (stateless runs
+    keep their first member's dummy).
+    """
+    out = []
+    for run in WP.encode_runs(pplan):
+        if len(run.positions) == 1 or not run.sync.needs_state():
+            out.append(states[run.positions[0]])
+            continue
+        out.append(WP.fuse_run_state(
+            run, [states[pos] for pos in run.positions], dp))
+    return tuple(out)
+
+
+def split_run_states(pplan: ParamPlan, run_states: Sequence[jax.Array],
+                     dp: int) -> tuple[jax.Array, ...]:
+    """Inverse of :func:`fuse_run_states` (stateless members share the
+    run's pass-through dummy)."""
+    out: list = [None] * len(pplan.buckets)
+    for ri, run in enumerate(WP.encode_runs(pplan)):
+        rs = run_states[ri]
+        if len(run.positions) == 1 or not run.sync.needs_state():
+            for pos in run.positions:
+                out[pos] = rs
+            continue
+        for pos, piece in zip(run.positions,
+                              WP.split_run_state(run, rs, dp)):
+            out[pos] = piece
+    return tuple(out)
 
 
 def materialize(
@@ -198,15 +277,25 @@ def materialize(
     topo: MeshTopo,
     compute_dtype=jnp.bfloat16,
     pplan: ParamPlan | None = None,
+    coalesce: bool = True,
 ) -> jax.Array:
     """fp32 chunk -> logical bf16 TP-local tensor (FSDP gather w/ LoCo bwd).
 
-    With a ``pplan``, ``state`` is the tuple of per-bucket states and the
-    backward runs the bucketed schedule instead of the monolithic sync.
+    With a ``pplan``, the backward runs the bucketed schedule instead of
+    the monolithic sync.  Under ``coalesce`` (default) ``state`` is the
+    RUN-space tuple (:func:`fuse_run_states`) and the exchange is the
+    packed one-collective-per-comm-group schedule; otherwise ``state`` is
+    the per-bucket tuple and every bucket issues its own collectives.
+    Bit-exact either way (DESIGN.md §13).
     """
     w = chunk.astype(compute_dtype)
-    if info.loco and pplan is not None:
-        flat = gather_with_sync_buckets(w, state, pplan, topo.dp_axes)
+    if info.loco and pplan is not None and coalesce:
+        # run-space states (fuse_run_states): the packed schedule with one
+        # state leaf per encode run
+        flat = gather_with_sync_runs(w, state, pplan, topo.dp_axes)
+    elif info.loco and pplan is not None:
+        flat = gather_with_sync_buckets(w, state, pplan, topo.dp_axes,
+                                        coalesce=False)
     elif info.loco:
         flat = gather_with_sync(w, state, cfg, topo.dp_axes)
     else:
@@ -248,7 +337,8 @@ class TrainStore:
     """
 
     def __init__(self, groups, chunks, states, cfg: SyncConfig, topo: MeshTopo,
-                 compute_dtype=jnp.bfloat16, plan: SyncPlan | None = None):
+                 compute_dtype=jnp.bfloat16, plan: SyncPlan | None = None,
+                 coalesce: bool = True):
         self.groups = {g.name: g for g in groups}
         self.chunks = chunks  # {group: {name: (L?, 1, chunk)}} local views
         self.states = states  # {group: {name: (L?, 1, 1.., padlen) | tuple}} local
@@ -256,6 +346,7 @@ class TrainStore:
         self.topo = topo
         self.compute_dtype = compute_dtype
         self.plan = plan      # None = monolithic sync per param
+        self.coalesce = coalesce  # packed per-comm-group exchange (§13)
 
     def _pplan(self, gname: str, info: ParamInfo) -> ParamPlan | None:
         if self.plan is None or not info.loco:
@@ -272,7 +363,8 @@ class TrainStore:
             s = _squeeze_state(self.states[gname][info.name])
             out[info.name] = materialize(c, s, info, self.cfg, self.topo,
                                          self.compute_dtype,
-                                         pplan=self._pplan(gname, info))
+                                         pplan=self._pplan(gname, info),
+                                         coalesce=self.coalesce)
         return out
 
     # ---- stacked groups: xs for lax.scan ------------------------------------
@@ -290,7 +382,8 @@ class TrainStore:
             s = _squeeze_state(ss[info.name])
             out[info.name] = materialize(c, s, info, self.cfg, self.topo,
                                          self.compute_dtype,
-                                         pplan=self._pplan(gname, info))
+                                         pplan=self._pplan(gname, info),
+                                         coalesce=self.coalesce)
         return out
 
 
@@ -338,18 +431,22 @@ def _squeeze_state(s):
 # ---------------------------------------------------------------------------
 
 def init_train_state_local(groups: Sequence[ParamGroup], key: jax.Array, cfg: SyncConfig,
-                           topo: MeshTopo, plan: SyncPlan | None = None):
+                           topo: MeshTopo, plan: SyncPlan | None = None,
+                           coalesce: bool = True):
     """Returns (chunks, states) local pytrees, to be used with the specs below.
 
-    With a ``plan``, each loco param's state leaf is the tuple of per-bucket
-    states (bucket b: (seg_elems,) in its resolved dtype, or a (1,) dummy).
+    With a ``plan``, each loco param's state leaf is a tuple of per-unit
+    states — one per encode run under ``coalesce`` (the default runtime),
+    one per bucket otherwise (see :func:`state_units`); each unit stores
+    its ``(seg_elems,)`` segment in its resolved dtype, or a (1,) dummy.
     """
     chunks, states = {}, {}
     for g in groups:
         cg, sg = {}, {}
         for info in g.infos:
             if plan is not None and info.loco:
-                s = init_sync_state_buckets(plan.lookup(g.name, info.name))
+                s = init_sync_state_units(plan.lookup(g.name, info.name),
+                                          coalesce)
             else:
                 s = init_sync_state(info, cfg, topo)
             if g.stacked:
@@ -390,7 +487,7 @@ def init_serve_params_local(groups: Sequence[ParamGroup], key: jax.Array, topo: 
 # ---------------------------------------------------------------------------
 
 def train_state_specs(groups: Sequence[ParamGroup], topo: MeshTopo,
-                      plan: SyncPlan | None = None):
+                      plan: SyncPlan | None = None, coalesce: bool = True):
     chunks, states = {}, {}
     for g in groups:
         cg, sg = {}, {}
@@ -399,7 +496,7 @@ def train_state_specs(groups: Sequence[ParamGroup], topo: MeshTopo,
             if plan is not None and info.loco:
                 pp = plan.lookup(g.name, info.name)
                 sg[info.name] = tuple(topo.state_spec(g.stacked)
-                                      for _ in pp.buckets)
+                                      for _ in state_units(pp, coalesce))
             else:
                 sg[info.name] = topo.state_spec(g.stacked)
         chunks[g.name], states[g.name] = cg, sg
@@ -407,7 +504,7 @@ def train_state_specs(groups: Sequence[ParamGroup], topo: MeshTopo,
 
 
 def train_state_shapes(groups: Sequence[ParamGroup], cfg: SyncConfig, topo: MeshTopo,
-                       plan: SyncPlan | None = None):
+                       plan: SyncPlan | None = None, coalesce: bool = True):
     """Global ShapeDtypeStructs for dry-run lowering (no allocation)."""
     chunks, states = {}, {}
     for g in groups:
@@ -428,7 +525,8 @@ def train_state_shapes(groups: Sequence[ParamGroup], cfg: SyncConfig, topo: Mesh
             if plan is not None and info.loco:
                 pp = plan.lookup(g.name, info.name)
                 sg[info.name] = tuple(
-                    state_struct(*bucket_state_struct(b)) for b in pp.buckets)
+                    state_struct(*bucket_state_struct(b))
+                    for b in state_units(pp, coalesce))
             elif info.loco and cfg.needs_state():
                 sg[info.name] = state_struct(pad, loco_lib.state_dtype(cfg))
             else:

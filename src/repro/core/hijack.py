@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.core.buckets import ParamPlan
 from repro.core.comm import (all_gather_flat, axis_size, dist_sync,
-                             dist_sync_buckets, psum_scatter_flat)
+                             dist_sync_buckets, dist_sync_runs,
+                             psum_scatter_flat)
 from repro.core.loco import SyncConfig
 
 
@@ -82,13 +83,19 @@ def gather_with_sync(
 
 
 @lru_cache(maxsize=None)
-def _make_bucketed_gather(plan: ParamPlan, dp_axes: tuple[str, ...]):
+def _make_bucketed_gather(plan: ParamPlan, dp_axes: tuple[str, ...],
+                          coalesce: bool = True):
     """custom_vjp gather whose backward runs the per-bucket schedule.
 
     The compressor state is a *tuple* of per-bucket buffers; the tuple rides
     through the custom_vjp as one pytree argument, and the backward returns
     the per-bucket updated states as its cotangent (same float-dtype
     legality argument as the monolithic path — see module docstring).
+
+    ``coalesce`` selects the packed one-collective-per-comm-group exchange
+    (default; bit-exact with the per-bucket schedule, see DESIGN.md §13);
+    the flag is part of the cache key so a ``--no-coalesce`` run never
+    reuses a packed closure.
     """
     for b in plan.buckets:
         _reject_stochastic_rounding(b.sync)
@@ -101,7 +108,8 @@ def _make_bucketed_gather(plan: ParamPlan, dp_axes: tuple[str, ...]):
         return all_gather_flat(w_chunk, dp_axes), states
 
     def bwd(states, g_full):
-        g_shard, new_states = dist_sync_buckets(g_full, states, plan, dp_axes)
+        g_shard, new_states = dist_sync_buckets(g_full, states, plan, dp_axes,
+                                                coalesce=coalesce)
         new_states = tuple(ns.astype(s.dtype)
                            for ns, s in zip(new_states, states))
         return g_shard.astype(g_full.dtype), new_states
@@ -115,6 +123,7 @@ def gather_with_sync_buckets(
     states: tuple[jax.Array, ...],
     plan: ParamPlan,
     dp_axes: tuple[str, ...],
+    coalesce: bool = True,
 ) -> jax.Array:
     """FSDP all-gather whose backward runs the bucketed sync schedule.
 
@@ -126,7 +135,52 @@ def gather_with_sync_buckets(
         assert jnp.issubdtype(st.dtype, jnp.floating), (
             f"bucket {b.index} state must be a float dtype for the "
             "cotangent to carry the updated state (see gather_with_sync)")
-    return _make_bucketed_gather(plan, tuple(dp_axes))(w_chunk, tuple(states))
+    return _make_bucketed_gather(plan, tuple(dp_axes),
+                                 coalesce)(w_chunk, tuple(states))
+
+
+@lru_cache(maxsize=None)
+def _make_run_gather(plan: ParamPlan, dp_axes: tuple[str, ...]):
+    """custom_vjp gather whose backward runs the coalesced schedule with
+    RUN-space states (one buffer per encode run — see
+    :func:`repro.core.flatparam.fuse_run_states`).  The training hot path
+    uses this form: the state pytree that rides the scan carries and the
+    cotangent shrinks from len(buckets) to len(runs) leaves."""
+    for b in plan.buckets:
+        _reject_stochastic_rounding(b.sync)
+
+    @jax.custom_vjp
+    def gather(w_chunk: jax.Array, run_states: tuple) -> jax.Array:
+        return all_gather_flat(w_chunk, dp_axes)
+
+    def fwd(w_chunk, run_states):
+        return all_gather_flat(w_chunk, dp_axes), run_states
+
+    def bwd(run_states, g_full):
+        g_shard, new_states = dist_sync_runs(g_full, run_states, plan,
+                                             dp_axes)
+        new_states = tuple(ns.astype(s.dtype)
+                           for ns, s in zip(new_states, run_states))
+        return g_shard.astype(g_full.dtype), new_states
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def gather_with_sync_runs(
+    w_chunk: jax.Array,
+    run_states: tuple[jax.Array, ...],
+    plan: ParamPlan,
+    dp_axes: tuple[str, ...],
+) -> jax.Array:
+    """FSDP all-gather whose backward runs the coalesced bucketed schedule
+    over run-space compressor states (bit-exact with
+    :func:`gather_with_sync_buckets` modulo the state view)."""
+    for st in run_states:
+        assert jnp.issubdtype(st.dtype, jnp.floating), (
+            "run state must be a float dtype for the cotangent to carry "
+            "the updated state (see gather_with_sync)")
+    return _make_run_gather(plan, tuple(dp_axes))(w_chunk, tuple(run_states))
 
 
 @lru_cache(maxsize=None)

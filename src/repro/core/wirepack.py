@@ -1,0 +1,390 @@
+"""Wire coalescer: one packed collective per comm group, not per bucket-leaf.
+
+The bucketed scheduler (:mod:`repro.core.buckets`) buys per-bucket wire
+policies at the price of launches: every bucket issues its own collective
+per wire leaf per mesh axis, so a 28-bucket plan pays O(buckets x leaves x
+axes) small collectives where the monolithic path pays O(leaves).  1-bit
+Adam and 0/1 Adam both report exactly this overhead eating the compression
+win at scale; the classic fix is to pack the payloads and launch once per
+communication group.
+
+This module is the *static* half of that fix.  At step-build time it groups
+a plan's buckets by **exchange signature** — the (mesh axes, hierarchical
+stage, :class:`~repro.core.codec.WireLeaf` ``comm`` kind) triple that
+decides which collective a wire array rides — and lays every (bucket, leaf)
+of a group out at a fixed byte offset inside one packed ``uint8`` buffer:
+
+* ``a2a`` groups pack each leaf's per-peer rows side by side into a
+  ``(peers, row_bytes)`` buffer and cross the dp group in ONE all-to-all.
+* ``gather`` groups pack each per-node metadata leaf into a flat
+  ``(row_bytes,)`` buffer and cross in ONE all-gather.
+* ``reduce`` groups hold the ``fp`` buckets' bf16 segments, summed by ONE
+  reduce-scatter (elements, not bytes: the network does arithmetic here).
+
+Byte views use the same dtype-view trick as ``repro/state/serial``
+(``lax.bitcast_convert_type`` to/from ``uint8``), so any wire dtype —
+int8 payloads, f32 scales, packed-uint8 signs, and future f8/bf16 leaves —
+packs losslessly.  Bit-exactness of the packed exchange is structural:
+``a2a``/``gather`` collectives move bytes verbatim (no arithmetic), the
+byte views are exact, and each bucket's ``decode_mean`` runs on slices that
+are bit-identical to what the per-bucket exchange would have delivered.
+The 512-aligned chunk geometry of :mod:`repro.core.buckets` guarantees
+every leaf's per-peer row is an integral number of bytes (asserted here).
+
+The *traced* half (pack/unpack) is also here — pure local reshapes and
+byte casts; the collectives themselves stay in :mod:`repro.core.comm`,
+which consumes these plans.  See DESIGN.md §13.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec as codec_lib
+from repro.core import loco as loco_lib
+from repro.core.buckets import ParamPlan
+from repro.core.loco import SyncConfig
+
+Stage = Literal["flat", "hier1", "hier2"]
+Kind = Literal["a2a", "gather", "reduce"]
+
+
+# ---------------------------------------------------------------------------
+# byte views (the state/serial dtype-view trick, in-graph)
+# ---------------------------------------------------------------------------
+
+def to_bytes(a: jax.Array) -> jax.Array:
+    """Flat ``uint8`` view of an array's bytes (bit-exact, no arithmetic)."""
+    if a.dtype == jnp.uint8:
+        return a.reshape(-1)
+    return jax.lax.bitcast_convert_type(a, jnp.uint8).reshape(-1)
+
+
+def from_bytes(buf: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`to_bytes` along the last axis.
+
+    ``buf``'s trailing axis is a byte count divisible by ``dtype``'s
+    itemsize; leading axes (the peer axis of a received buffer) pass
+    through, so ``(D, row_bytes) -> (D, row_elems)``.
+    """
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.uint8:
+        return buf
+    k = dtype.itemsize
+    if k == 1:  # same itemsize: bitcast preserves the shape
+        return jax.lax.bitcast_convert_type(buf, dtype)
+    assert buf.shape[-1] % k == 0, (buf.shape, dtype)
+    b = buf.reshape(*buf.shape[:-1], buf.shape[-1] // k, k)
+    return jax.lax.bitcast_convert_type(b, dtype)
+
+
+# ---------------------------------------------------------------------------
+# encode runs: adjacent same-config buckets encoded as ONE segment
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EncodeRun:
+    """Maximal run of adjacent buckets that encode/decode as one segment.
+
+    Launch coalescing alone leaves a compute tax: a 28-bucket uniform plan
+    still traces 28 small encode/decode subgraphs where the monolithic
+    path traces one.  Buckets that are adjacent in chunk space and resolve
+    to the *same fusible* config quantize as a single segment, bit-exactly:
+    ``block``/``fixed`` quantization, the error codecs, and the receiver
+    mean are all elementwise per 256-block, and the 512-aligned bucket
+    edges keep every run boundary on a block boundary — so
+    ``encode(concat) == concat(encode)`` (property-pinned in
+    tests/test_wirepack.py).  ``tensor``/``onebit`` scales and stochastic
+    rounding are whole-segment dependent and never fuse; hierarchical and
+    special-cased buckets stay singleton runs.
+
+    ``slot`` (the first member's bucket index) keys the run's wire arrays
+    inside the packed group buffers.
+    """
+
+    slot: int
+    buckets: tuple[int, ...]      # member bucket indices, in offset order
+    positions: tuple[int, ...]    # member positions in plan.buckets
+    offset: int                   # chunk-space start of the run
+    chunk_elems: tuple[int, ...]  # per-member per-rank lengths
+    sync: SyncConfig
+
+    @property
+    def chunk_total(self) -> int:
+        return sum(self.chunk_elems)
+
+    @property
+    def fused(self) -> bool:
+        return len(self.buckets) > 1
+
+
+def fusible(cfg: SyncConfig) -> bool:
+    """Whether adjacent buckets of this exact config may encode as one
+    segment (see :class:`EncodeRun`).  ``fp`` buckets always fuse — their
+    wire is an elementwise bf16 sum."""
+    if cfg.strategy == "fp":
+        return True
+    return (cfg.strategy in ("loco", "ef", "naive4")
+            and cfg.quant.mode in ("block", "fixed")
+            and not cfg.quant.stochastic_rounding
+            and not cfg.hierarchical)
+
+
+def fuse_run_state(run: EncodeRun, members: list, dp: int) -> jax.Array:
+    """Member bucket state buffers (position order, each ``(L?, D*c_b)``)
+    -> the run's single peer-major buffer ``(L?, D*c_run)``.  The ONE place
+    the column-stitch math lives (callers: comm's bucket-space mode,
+    flatparam's tree converters).  Stateful runs only — pass-through
+    dummies are the caller's business."""
+    lead = members[0].shape[:-1]
+    segs = [m.reshape(*lead, dp, c)
+            for m, c in zip(members, run.chunk_elems)]
+    return jnp.concatenate(segs, axis=-1).reshape(*lead, dp * run.chunk_total)
+
+
+def split_run_state(run: EncodeRun, rs: jax.Array, dp: int) -> list:
+    """Exact inverse of :func:`fuse_run_state`."""
+    lead = rs.shape[:-1]
+    rsm = rs.reshape(*lead, dp, run.chunk_total)
+    out, off = [], 0
+    for c in run.chunk_elems:
+        out.append(jax.lax.slice_in_dim(rsm, off, off + c, axis=rsm.ndim - 1)
+                   .reshape(*lead, dp * c))
+        off += c
+    return out
+
+
+@lru_cache(maxsize=None)
+def encode_runs(plan: ParamPlan) -> tuple[EncodeRun, ...]:
+    """Partition a plan's buckets into maximal fusible runs, offset order."""
+    runs: list[EncodeRun] = []
+    cur: list = []
+
+    def flush():
+        if cur:
+            runs.append(EncodeRun(
+                slot=cur[0][1].index,
+                buckets=tuple(b.index for _, b in cur),
+                positions=tuple(p for p, _ in cur),
+                offset=cur[0][1].offset,
+                chunk_elems=tuple(b.chunk_elems for _, b in cur),
+                sync=cur[0][1].sync))
+        cur.clear()
+
+    for pos, b in enumerate(plan.buckets):
+        if cur and not (fusible(b.sync) and b.sync == cur[-1][1].sync
+                        and b.offset == cur[-1][1].offset
+                        + cur[-1][1].chunk_elems):
+            flush()
+        cur.append((pos, b))
+        if not fusible(b.sync):
+            flush()
+    flush()
+    return tuple(runs)
+
+
+# ---------------------------------------------------------------------------
+# static group plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackedLeaf:
+    """One (encode-run, wire-leaf) slot inside a packed group buffer.
+
+    For ``a2a`` groups ``offset``/``nbytes`` are *per-peer row* bytes (the
+    leaf occupies columns ``[offset, offset + nbytes)`` of every row); for
+    ``gather`` groups they index the flat local send buffer; for ``reduce``
+    groups they are per-peer row *elements* of the bf16 segment buffer.
+    """
+
+    bucket: int          # run slot (== bucket index for singleton runs)
+    name: str            # wire-leaf name ("payload", "scales", ...) / "seg"
+    offset: int
+    nbytes: int
+    elems: int           # leaf elements per peer row (a2a/reduce) or total (gather)
+    dtype: str           # dtype name (string keeps the dataclass hashable)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireGroup:
+    """All the wire arrays that ride one packed collective."""
+
+    stage: Stage
+    kind: Kind
+    peers: int           # exchange group size (D flat, Dd stage 1, pods stage 2)
+    row_bytes: int       # per-peer bytes (a2a/reduce: row; gather: local buffer)
+    leaves: tuple[PackedLeaf, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class WireGroupPlan:
+    """Static packing layout for one ParamPlan's coalesced exchange."""
+
+    groups: tuple[WireGroup, ...]
+
+    def group(self, stage: Stage, kind: Kind) -> "WireGroup | None":
+        for g in self.groups:
+            if g.stage == stage and g.kind == kind:
+                return g
+        return None
+
+    def launches(self, axes: int = 1) -> int:
+        """Collectives issued per sync: one per group per mesh axis it
+        crosses (hier stages cross exactly one axis each)."""
+        return sum(axes if g.stage == "flat" else 1 for g in self.groups)
+
+
+def _leaf_entries(cfg, n: int) -> list[tuple[str, "codec_lib.WireLeaf"]]:
+    """(name, WireLeaf) pairs of a codec's wire, in stable dict order."""
+    return list(codec_lib.get_codec(cfg).wire_shapes(n).items())
+
+
+@lru_cache(maxsize=None)
+def build_group_plan(plan: ParamPlan, D: int, pods: int = 1) -> WireGroupPlan:
+    """Group one parameter's buckets by exchange signature.
+
+    ``D`` is the dp-group size (``seg_elems / chunk_elems`` of every
+    bucket); ``pods`` the inter-pod axis size (1 = flat mesh).  Raises if
+    any leaf's bytes don't divide evenly over its peer group — the packed
+    row layout requires integral per-peer rows, which the 512-aligned
+    bucket geometry guarantees for every registered codec.
+    """
+    dd = D // max(pods, 1)
+    builders: dict[tuple, list[PackedLeaf]] = {}
+    offs: dict[tuple, int] = {}
+
+    def add(stage: Stage, kind: Kind, peers: int, bucket: int, name: str,
+            nbytes: int, elems: int, dtype) -> None:
+        sig = (stage, kind, peers)
+        off = offs.get(sig, 0)
+        builders.setdefault(sig, []).append(PackedLeaf(
+            bucket=bucket, name=name, offset=off, nbytes=nbytes,
+            elems=elems, dtype=jnp.dtype(dtype).name))
+        offs[sig] = off + nbytes
+
+    for run in encode_runs(plan):
+        cfg = run.sync
+        seg = D * run.chunk_total
+        if cfg.strategy == "fp":
+            # summed on the wire: packed as bf16 *elements*, one
+            # reduce-scatter for all fp buckets of the plan.
+            add("flat", "reduce", D, run.slot, "seg",
+                nbytes=2 * run.chunk_total, elems=run.chunk_total,
+                dtype=jnp.bfloat16)
+            continue
+        hier = cfg.hierarchical
+        stage1: Stage = "hier1" if hier else "flat"
+        peers1 = dd if hier else D
+        for name, leaf in _leaf_entries(cfg, seg):
+            if leaf.comm == "split":
+                row, rem = divmod(leaf.nbytes, peers1)
+                erow, erem = divmod(math.prod(leaf.shape), peers1)
+                if rem or erem:
+                    raise ValueError(
+                        f"{plan.qualname}[{run.slot}].{name}: leaf of "
+                        f"{leaf.nbytes} bytes does not split over "
+                        f"{peers1} peers; bucket edges must stay "
+                        "512-aligned (see buckets.ALIGN)")
+                add(stage1, "a2a", peers1, run.slot, name,
+                    nbytes=row, elems=erow, dtype=leaf.dtype)
+            elif leaf.comm == "gather":
+                add(stage1, "gather", peers1, run.slot, name,
+                    nbytes=leaf.nbytes, elems=math.prod(leaf.shape),
+                    dtype=leaf.dtype)
+            # comm == "none": static metadata, never exchanged
+        if hier:
+            cfg2 = loco_lib.validate_stage2(cfg)
+            n2 = seg // dd
+            for name, leaf in _leaf_entries(cfg2, n2):
+                if leaf.comm == "split":
+                    row, rem = divmod(leaf.nbytes, pods)
+                    if rem:
+                        raise ValueError(
+                            f"{plan.qualname}[{run.slot}].stage2.{name}: "
+                            f"{leaf.nbytes} bytes do not split over "
+                            f"{pods} pods")
+                    add("hier2", "a2a", pods, run.slot, name,
+                        nbytes=row, elems=math.prod(leaf.shape) // pods,
+                        dtype=leaf.dtype)
+                elif leaf.comm == "gather":
+                    add("hier2", "gather", pods, run.slot, name,
+                        nbytes=leaf.nbytes, elems=math.prod(leaf.shape),
+                        dtype=leaf.dtype)
+
+    groups = tuple(
+        WireGroup(stage=sig[0], kind=sig[1], peers=sig[2],
+                  row_bytes=offs[sig], leaves=tuple(leaves))
+        for sig, leaves in builders.items())
+    return WireGroupPlan(groups=groups)
+
+
+# ---------------------------------------------------------------------------
+# traced pack / unpack (pure local; comm issues the collectives)
+# ---------------------------------------------------------------------------
+
+def pack_a2a(group: WireGroup, wires: dict[int, dict[str, jax.Array]]) -> jax.Array:
+    """Pack an a2a group's wire arrays into one ``(peers, row_bytes)`` u8
+    buffer; row *i* concatenates every member leaf's piece for peer *i*."""
+    assert group.kind == "a2a", group.kind
+    rows = []
+    for l in group.leaves:
+        arr = wires[l.bucket][l.name]
+        rows.append(to_bytes(arr).reshape(group.peers, l.nbytes))
+    return jnp.concatenate(rows, axis=1)
+
+
+def unpack_a2a(group: WireGroup, recv: jax.Array) -> dict[int, dict[str, jax.Array]]:
+    """Received ``(peers, row_bytes)`` buffer -> per-bucket recv leaves,
+    each ``(peers, row_elems)`` — bit-identical to the per-leaf exchange."""
+    out: dict[int, dict[str, jax.Array]] = {}
+    for l in group.leaves:
+        piece = jax.lax.slice_in_dim(recv, l.offset, l.offset + l.nbytes,
+                                     axis=1)
+        out.setdefault(l.bucket, {})[l.name] = from_bytes(piece, l.dtype)
+    return out
+
+
+def pack_gather(group: WireGroup, wires: dict[int, dict[str, jax.Array]]) -> jax.Array:
+    """Pack a gather group's per-node metadata into one flat u8 buffer."""
+    assert group.kind == "gather", group.kind
+    return jnp.concatenate([to_bytes(wires[l.bucket][l.name])
+                            for l in group.leaves])
+
+
+def unpack_gather(group: WireGroup, recv: jax.Array,
+                  shapes: dict[int, dict[str, tuple]]) -> dict[int, dict[str, jax.Array]]:
+    """``(peers, row_bytes)`` gathered buffer -> per-bucket ``(peers, *shape)``
+    recv leaves (``shapes[bucket][name]`` is the pre-exchange leaf shape)."""
+    out: dict[int, dict[str, jax.Array]] = {}
+    for l in group.leaves:
+        piece = jax.lax.slice_in_dim(recv, l.offset, l.offset + l.nbytes,
+                                     axis=1)
+        arr = from_bytes(piece, l.dtype)
+        out.setdefault(l.bucket, {})[l.name] = arr.reshape(
+            (group.peers, *shapes[l.bucket][l.name]))
+    return out
+
+
+def pack_reduce(group: WireGroup, segs: dict[int, jax.Array]) -> jax.Array:
+    """Pack fp buckets' ``(D * c_b,)`` bf16 segments into one flat
+    ``(D * sum_c,)`` buffer whose per-peer tiles concatenate the buckets'
+    per-peer rows — so one tiled reduce-scatter returns the concatenation
+    of the per-bucket shards."""
+    assert group.kind == "reduce", group.kind
+    rows = [segs[l.bucket].reshape(group.peers, l.elems)
+            for l in group.leaves]
+    return jnp.concatenate(rows, axis=1).reshape(-1)
+
+
+def unpack_reduce(group: WireGroup, shard: jax.Array) -> dict[int, jax.Array]:
+    """``(sum_c,)`` reduce-scattered shard -> per-bucket ``(c_b,)`` shards."""
+    out = {}
+    for l in group.leaves:
+        off = l.offset // 2  # reduce offsets are bf16 bytes; shard is elements
+        out[l.bucket] = jax.lax.slice_in_dim(shard, off, off + l.elems, axis=0)
+    return out

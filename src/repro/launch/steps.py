@@ -61,12 +61,19 @@ class RunConfig:
     # all-gather + reduce-scatter of the same total volume.
     sequence_parallel: bool = True
     # Bucketed sync scheduler (core/buckets + core/policy).  bucket_bytes > 0
-    # partitions every loco param's gradient into size-targeted buckets,
-    # each dispatched as its own all_to_all; `policy` resolves per-bucket
-    # wire configs (None = every bucket uses `sync`).  Both unset =
-    # monolithic legacy path, bit-identical to the pre-bucket runtime.
+    # partitions every loco param's gradient into size-targeted buckets;
+    # `policy` resolves per-bucket wire configs (None = every bucket uses
+    # `sync`).  Both unset = monolithic legacy path, bit-identical to the
+    # pre-bucket runtime.  Exchange granularity is governed by `coalesce`
+    # below (packed per comm group vs one collective per bucket-leaf).
     bucket_bytes: int = 0
     policy: "POL.SyncPolicy | None" = None
+    # Coalesced wire exchange (core/wirepack, DESIGN.md §13): pack every
+    # bucket's wire leaves by exchange signature and launch ONE collective
+    # per comm group per step instead of one per bucket-leaf.  Bit-exact
+    # with the per-bucket schedule; off = the legacy launch pattern
+    # (escape hatch, `--no-coalesce`).
+    coalesce: bool = True
     # Log decoded error-feedback norms each step (adds a small reduction).
     telemetry: bool = False
 
@@ -90,10 +97,13 @@ def state_fingerprint(run: RunConfig, groups, topo: MeshTopo,
     Built from the *target* plan before any restore happens, so the
     checkpoint layer can compare it against the stored fingerprint and
     reshard (or fail loudly) instead of tripping over mismatched arrays.
+    The state-unit geometry follows ``run.coalesce`` (encode runs vs
+    per-bucket leaves — DESIGN.md §13).
     """
     from repro.state import build_fingerprint
 
-    return build_fingerprint(groups, topo, run.sync, plan)
+    return build_fingerprint(groups, topo, run.sync, plan,
+                             coalesce=run.coalesce)
 
 
 def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None",
@@ -103,8 +113,13 @@ def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None",
     stochastic rounding (no PRNG key in the backward), strategies without a
     wire codec (ef21 used to fail deep inside tracing), and hierarchical
     buckets on meshes or strategies the two-stage exchange cannot serve
-    (which used to silently fall back to the flat exchange)."""
+    (which used to silently fall back to the flat exchange).  With
+    ``run.coalesce`` the per-param wire-group plans are also built here, so
+    a packing-layout problem (a leaf that does not split evenly over its
+    peer group) surfaces at build time with the param named instead of
+    mid-trace."""
     from repro.core import codec as codec_lib
+    from repro.core import wirepack as WP
 
     cfgs = ([(f"{p.qualname}[{b.index}]", b.sync)
              for p in plan.params for b in p.buckets]
@@ -141,6 +156,12 @@ def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None",
                 loco_lib.validate_stage2(c)
             except ValueError as e:
                 raise ValueError(f"{where}: {e}") from None
+    if plan is not None and run.coalesce:
+        for p in plan.params:
+            try:
+                WP.build_group_plan(p, topo.dp, pods=max(topo.pods, 1))
+            except ValueError as e:
+                raise ValueError(f"{p.qualname}: {e}") from None
 
 
 def build_model(cfg: ArchConfig, tp: int, sp: bool = False):
@@ -220,7 +241,10 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
             for g in groups}
 
     def reset_states(states_l, step):
-        """Per-bucket error reset: every bucket follows its own schedule."""
+        """Per-unit error reset: every state unit follows its own
+        schedule.  Under the coalesced runtime a unit is one encode run
+        (whose members share one config, so one reset per run is the same
+        schedule the per-bucket layout had)."""
         out = {}
         for g in groups:
             og = {}
@@ -229,8 +253,8 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
                 if plan is not None and info.loco:
                     pp = plan.lookup(g.name, info.name)
                     og[info.name] = tuple(
-                        maybe_reset(sb, step, b.sync)
-                        for sb, b in zip(s, pp.buckets))
+                        maybe_reset(sb, step, u.sync)
+                        for sb, u in zip(s, FP.state_units(pp, run.coalesce)))
                 else:
                     og[info.name] = maybe_reset(s, step, sync)
             out[g.name] = og
@@ -242,7 +266,8 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
         opt_l = tuple(squeeze_chunks(t, groups) for t in opt_state)
 
         def loss_fn(c, s, mb):
-            store = FP.TrainStore(groups, c, s, sync, topo, plan=plan)
+            store = FP.TrainStore(groups, c, s, sync, topo, plan=plan,
+                                  coalesce=run.coalesce)
             return model.loss_fn(store, mb, remat=run.remat)
 
         def micro_body(carry, mb):
@@ -287,7 +312,8 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
         metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
         if run.telemetry:
             esq = WIRE.error_sq_norm_local(new_states_l, groups, sync, plan,
-                                           tp=topo.tp)
+                                           tp=topo.tp,
+                                           coalesce=run.coalesce)
             metrics["err_norm"] = jnp.sqrt(
                 jax.lax.psum(esq, topo.dp_axes + (topo.tp_axis,)))
         new_chunks = unsqueeze_like(new_chunks_l, chunks)
@@ -295,7 +321,8 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
         new_opt = tuple(unsqueeze_like(t, chunks) for t in new_opt_l)
         return new_chunks, new_states, new_opt, metrics
 
-    cspec, sspec = FP.train_state_specs(groups, topo, plan=plan)
+    cspec, sspec = FP.train_state_specs(groups, topo, plan=plan,
+                                        coalesce=run.coalesce)
     n_opt = len(opt.init(_chunk_shapes_local(groups, topo)))
     opt_spec = tuple(cspec for _ in range(n_opt))
     dp = _dp_entry(topo)
@@ -311,7 +338,8 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
     sm = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                        check_vma=False)
 
-    cshapes, sshapes = FP.train_state_shapes(groups, sync, topo, plan=plan)
+    cshapes, sshapes = FP.train_state_shapes(groups, sync, topo, plan=plan,
+                                             coalesce=run.coalesce)
     cshapes = _with_sharding(cshapes, cspec, mesh)
     sshapes = _with_sharding(sshapes, sspec, mesh)
     opt_shapes = tuple(cshapes for _ in range(n_opt))
@@ -371,13 +399,15 @@ def make_init(cfg: ArchConfig, run: RunConfig, mesh):
     groups = model.groups()
     opt = _make_opt(run)
     plan = build_sync_plan(run, groups, topo)
-    cspec, sspec = FP.train_state_specs(groups, topo, plan=plan)
+    cspec, sspec = FP.train_state_specs(groups, topo, plan=plan,
+                                        coalesce=run.coalesce)
     n_opt = len(opt.init(_chunk_shapes_local(groups, topo)))
     opt_spec = tuple(cspec for _ in range(n_opt))
 
     def body(key):
         chunks, states = FP.init_train_state_local(groups, key, run.sync, topo,
-                                                   plan=plan)
+                                                   plan=plan,
+                                                   coalesce=run.coalesce)
         chunks_l = squeeze_chunks(chunks, groups)
         opt_l = opt.init(chunks_l)
         opt_state = tuple(unsqueeze_like(t, chunks) for t in opt_l)

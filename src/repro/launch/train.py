@@ -64,6 +64,13 @@ def build_args(argv=None):
                          "'body=loco4+kernels' to enable the Pallas fast "
                          "paths per tensor class "
                          "(see repro.core.policy.parse_policy)")
+    ap.add_argument("--coalesce", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="pack the bucketed sync's wire leaves by exchange "
+                         "signature and launch one collective per comm "
+                         "group per step (bit-exact; --no-coalesce keeps "
+                         "the legacy one-collective-per-bucket-leaf "
+                         "schedule)")
     ap.add_argument("--telemetry", action="store_true",
                     help="log decoded error-feedback norms each step")
     ap.add_argument("--optimizer", default="adam")
@@ -103,7 +110,8 @@ def make_run(args) -> RunConfig:
                      schedule=args.schedule, warmup_steps=args.warmup,
                      total_steps=args.steps, microbatch=args.microbatch,
                      bucket_bytes=int(args.bucket_mb * (1 << 20)),
-                     policy=policy, telemetry=args.telemetry)
+                     policy=policy, coalesce=args.coalesce,
+                     telemetry=args.telemetry)
 
 
 def main(argv=None):

@@ -96,14 +96,20 @@ def bucket_sync_config(bd: dict) -> SyncConfig:
 
 
 def build_fingerprint(groups, topo: FP.MeshTopo, sync: SyncConfig,
-                      plan: "BK.SyncPlan | None") -> dict:
+                      plan: "BK.SyncPlan | None",
+                      coalesce: bool = True) -> dict:
     """Serialize the full train-state layout of one run configuration.
 
     ``plan=None`` (the monolithic path) is described through
     :func:`repro.core.buckets.monolithic_sync_plan`, so both paths share
     one geometry; ``planned`` records which one the *stored pytree* used
-    (planned runs store per-bucket state tuples, monolithic runs bare
-    arrays).
+    (planned runs store per-unit state tuples, monolithic runs bare
+    arrays).  The recorded ``buckets`` are the STATE units the pytree
+    actually stores: under ``coalesce`` (DESIGN.md §13) one leaf per
+    encode run — adjacent same-config buckets share a buffer, so e.g.
+    changing ``--bucket-mb`` under a uniform policy does not change the
+    stored layout at all — and per wire bucket otherwise.  Reshard
+    consumes these unit dicts generically either way.
     """
     planned = plan is not None
     if plan is None:
@@ -124,7 +130,8 @@ def build_fingerprint(groups, topo: FP.MeshTopo, sync: SyncConfig,
             }
             if info.loco:
                 pp = plan.lookup(g.name, info.name)
-                p["buckets"] = [_bucket_dict(b) for b in pp.buckets]
+                p["buckets"] = [_bucket_dict(b)
+                                for b in FP.state_units(pp, coalesce)]
             else:
                 p["buckets"] = []
             params.append(p)

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import codec as codec_lib
 from repro.core import quantizer as Q
+from repro.core import wirepack as WP
 from repro.core.buckets import Bucket, ParamPlan, SyncPlan
 from repro.core.loco import SyncConfig
 
@@ -122,6 +123,55 @@ def flat_stage_bytes(n_elems: int, cfg: SyncConfig,
     return ici, dcn
 
 
+def _axes(pods: int) -> int:
+    """dp mesh axes a flat exchange crosses (2 on a multi-pod mesh)."""
+    return 2 if pods > 1 else 1
+
+
+def _exchanged_leaves(cfg: SyncConfig, n_elems: int) -> int:
+    """Wire leaves that actually cross the network (``none`` leaves don't)."""
+    return sum(1 for leaf in codec_lib.get_codec(cfg).wire_shapes(n_elems)
+               .values() if leaf.comm != "none")
+
+
+def bucket_launches(b: Bucket, pods: int = 1) -> int:
+    """Collectives one bucket issues per sync on the UN-coalesced schedule:
+    one per exchanged wire leaf per mesh axis (hier buckets: each stage's
+    leaves cross exactly one axis).  The per-bucket tax the wire coalescer
+    removes — compare :func:`plan_launches`' coalesced count."""
+    if b.sync.strategy == "fp":
+        return _axes(pods)  # one psum_scatter per mesh axis
+    hier = b.sync.hierarchical and pods > 1
+    if hier:
+        dd = (b.seg_elems // b.chunk_elems) // pods
+        return (_exchanged_leaves(b.sync, b.seg_elems)
+                + _exchanged_leaves(b.sync.stage2_sync(),
+                                    b.seg_elems // dd))
+    return _axes(pods) * _exchanged_leaves(b.sync, b.seg_elems)
+
+
+def plan_launches(plan: SyncPlan, pods: int = 1) -> dict[str, int]:
+    """Collective launches per optimizer step, per schedule.
+
+    ``per_bucket``: the legacy one-collective-per-bucket-leaf count.
+    ``coalesced``:  launches under the wire coalescer — one per comm group
+    per mesh axis it crosses (:mod:`repro.core.wirepack`).
+    ``comm_groups``: packed buffers per step (launches without the
+    per-axis factor).  All three are trip-weighted by stacked-group
+    ``layers``, matching the byte convention of :func:`plan_report`.
+    """
+    per_bucket = coalesced = groups = 0
+    for pp in plan.params:
+        per_bucket += pp.layers * sum(bucket_launches(b, pods)
+                                      for b in pp.buckets)
+        D = pp.buckets[0].seg_elems // pp.buckets[0].chunk_elems
+        gp = WP.build_group_plan(pp, D, pods=max(pods, 1))
+        coalesced += pp.layers * gp.launches(axes=_axes(pods))
+        groups += pp.layers * len(gp.groups)
+    return {"per_bucket": per_bucket, "coalesced": coalesced,
+            "comm_groups": groups}
+
+
 @dataclasses.dataclass(frozen=True)
 class BucketWire:
     param: str
@@ -135,6 +185,7 @@ class BucketWire:
     ici: int = 0         # intra-pod bytes (== wire when pods == 1)
     dcn: int = 0         # inter-pod bytes (stage-2 wire for hierarchical)
     hierarchical: bool = False
+    launches: int = 0    # un-coalesced collectives per sync, x layers
 
     @property
     def wire(self) -> int:
@@ -154,6 +205,12 @@ class WireReport:
     ici_bytes: int = 0   # intra-pod bytes per device per step
     dcn_bytes: int = 0   # inter-pod bytes per device per step
     bf16_dcn_bytes: int = 0  # the 16-bit baseline's inter-pod share
+    # collective launches per step (see plan_launches): the un-coalesced
+    # per-bucket-leaf count, the coalesced per-comm-group count, and the
+    # number of packed comm groups.
+    launches_per_bucket: int = 0
+    launches_coalesced: int = 0
+    comm_groups: int = 0
 
     @property
     def ratio_vs_bf16(self) -> float:
@@ -189,6 +246,9 @@ class WireReport:
             "dcn_ratio_vs_bf16": self.dcn_ratio_vs_bf16,
             "by_class": self.by_class(),
             "n_buckets": len(self.buckets),
+            "launches": {"per_bucket": self.launches_per_bucket,
+                         "coalesced": self.launches_coalesced,
+                         "comm_groups": self.comm_groups},
         }, indent=2)
 
 
@@ -213,7 +273,8 @@ def bucket_wire(param: str, tclass: str, b: Bucket, layers: int,
         strategy=b.sync.strategy, n_elems=b.seg_elems,
         payload=layers * pay, scales=layers * sc,
         state=layers * state_bytes(b.seg_elems, b.sync),
-        ici=layers * ici, dcn=layers * dcn, hierarchical=hier)
+        ici=layers * ici, dcn=layers * dcn, hierarchical=hier,
+        launches=layers * bucket_launches(b, pods))
 
 
 def plan_report(plan: SyncPlan, pods: int = 1) -> WireReport:
@@ -231,6 +292,7 @@ def plan_report(plan: SyncPlan, pods: int = 1) -> WireReport:
             fp32 += pp.layers * 4 * b.seg_elems
             bf16 += pp.layers * 2 * b.seg_elems
             bf16_dcn += pp.layers * 2 * b.seg_elems * (pods - 1) // max(pods, 1)
+    launches = plan_launches(plan, pods=pods)
     return WireReport(
         buckets=tuple(rows),
         total_wire=sum(r.wire for r in rows),
@@ -239,7 +301,10 @@ def plan_report(plan: SyncPlan, pods: int = 1) -> WireReport:
         pods=pods,
         ici_bytes=sum(r.ici for r in rows),
         dcn_bytes=sum(r.dcn for r in rows),
-        bf16_dcn_bytes=bf16_dcn)
+        bf16_dcn_bytes=bf16_dcn,
+        launches_per_bucket=launches["per_bucket"],
+        launches_coalesced=launches["coalesced"],
+        comm_groups=launches["comm_groups"])
 
 
 def format_report(rep: WireReport, max_rows: int = 12) -> str:
@@ -250,6 +315,9 @@ def format_report(rep: WireReport, max_rows: int = 12) -> str:
         f"{rep.ratio_vs_fp32:.3f}x of fp32); "
         f"error-state: {rep.state_bytes / 2**20:.2f} MiB; "
         f"buckets: {len(rep.buckets)}",
+        f"  launches/step: {rep.launches_coalesced} coalesced "
+        f"({rep.comm_groups} comm groups; {rep.launches_per_bucket} "
+        "per-bucket uncoalesced)",
     ]
     if rep.pods > 1:
         lines.append(
@@ -282,21 +350,27 @@ def decoded_error(state, cfg: SyncConfig):
     return state.astype(jnp.float32)
 
 
-def bucket_error_sq_norms(states, pplan: ParamPlan):
-    """Squared L2 norm of each bucket's decoded error (local, per device)."""
-    return tuple(jnp.sum(decoded_error(s, b.sync) ** 2)
-                 for s, b in zip(states, pplan.buckets))
+def bucket_error_sq_norms(states, pplan: ParamPlan, coalesce: bool = True):
+    """Squared L2 norm of each state unit's decoded error (local device)."""
+    from repro.core.flatparam import state_units
+
+    return tuple(jnp.sum(decoded_error(s, u.sync) ** 2)
+                 for s, u in zip(states, state_units(pplan, coalesce)))
 
 
 def error_sq_norm_local(states_l, groups, cfg: SyncConfig,
-                        plan: SyncPlan | None, tp: int = 1):
+                        plan: SyncPlan | None, tp: int = 1,
+                        coalesce: bool = True):
     """Sum of squared decoded-error norms over every param (one device).
 
-    ``states_l`` is the squeezed local state tree of launch/steps.py; the
+    ``states_l`` is the squeezed local state tree of launch/steps.py —
+    per-encode-run leaves under ``coalesce``, per-bucket otherwise; the
     caller psums over the mesh axes and takes the sqrt.  TP-replicated
     params carry identical states on every TP rank, so their contribution
     is divided by ``tp`` (same convention as the grad-norm clip).
     """
+    from repro.core.flatparam import state_units
+
     total = jnp.float32(0)
     for g in groups:
         for info in g.infos:
@@ -304,8 +378,8 @@ def error_sq_norm_local(states_l, groups, cfg: SyncConfig,
             rep = 1.0 / tp if (info.tp_dim is None and tp > 1) else 1.0
             if plan is not None and info.loco:
                 pp = plan.lookup(g.name, info.name)
-                for sb, b in zip(s, pp.buckets):
-                    e = decoded_error(sb, b.sync)
+                for sb, u in zip(s, state_units(pp, coalesce)):
+                    e = decoded_error(sb, u.sync)
                     total = total + rep * jnp.sum(e.astype(jnp.float32) ** 2)
             elif info.loco and cfg.needs_state():
                 e = decoded_error(s, cfg)

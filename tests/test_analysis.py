@@ -74,3 +74,46 @@ def test_roofline_terms_dominance():
     assert t["dominant"] == "compute_s" and abs(t["compute_s"] - 1.0) < 1e-9
     t = roofline_terms(flops=0.0, hbm_bytes=819e9, wire_bytes=25e9)
     assert t["dominant"] == "memory_s"
+
+
+def test_collective_launch_counts_loop_free(mesh22):
+    """collective_launches counts LAUNCHES per kind exactly on a
+    hand-countable loop-free module (satellite: launch counts, not just
+    bytes, are the number the wire coalescer drives down)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis.hlo_stats import collective_launches
+
+    def body(x):
+        a = jax.lax.all_gather(x, "data", tiled=True)
+        b = jax.lax.psum_scatter(a, "data", tiled=True)
+        c = jax.lax.psum_scatter(b * 2.0, "data", tiled=True)
+        return jax.lax.all_gather(c, "data", tiled=True)
+
+    fn = jax.jit(jax.shard_map(body, mesh=mesh22, in_specs=P("data"),
+                               out_specs=P(None), check_vma=False))
+    txt = fn.lower(jnp.zeros((1024,), jnp.float32)).compile().as_text()
+    counts = collective_launches(txt)
+    assert counts.get("all-gather", 0) == 2, counts
+    assert counts.get("reduce-scatter", 0) == 2, counts
+    assert counts.get("all-to-all", 0) == 0, counts
+
+
+def test_collective_launch_counts_trip_weighted(mesh22):
+    """Launch counts inside a scan body multiply by the trip count, same
+    as the byte accounting."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis.hlo_stats import collective_launches
+
+    def body(x):
+        def f(c, _):
+            return jax.lax.psum(c, "data"), None
+        y, _ = jax.lax.scan(f, x, None, length=5)
+        return y
+
+    fn = jax.jit(jax.shard_map(body, mesh=mesh22, in_specs=P("data"),
+                               out_specs=P("data"), check_vma=False))
+    txt = fn.lower(jnp.zeros((64,), jnp.float32)).compile().as_text()
+    counts = collective_launches(txt)
+    assert counts.get("all-reduce", 0) == 5, counts

@@ -317,10 +317,14 @@ def test_train_step_bucketed_uniform_matches_monolithic(mesh22):
     l_buck, states, _ = _train(
         mesh22, dataclasses.replace(base, bucket_bytes=64 << 10))
     np.testing.assert_array_equal(l_mono, l_buck)
-    # state leaves became per-bucket tuples
+    # state leaves are per-encode-run tuples: under a UNIFORM policy every
+    # param's buckets fuse into one run, so the stored layout is one
+    # buffer per param — same as monolithic, the coalesced runtime's
+    # whole point (DESIGN.md §13; multi-leaf tuples appear only when the
+    # policy actually changes config mid-param, see the mixed test)
     tuples = [s for g in states.values() for s in g.values()
               if isinstance(s, tuple)]
-    assert tuples and any(len(t) > 1 for t in tuples)
+    assert tuples and all(len(t) == 1 for t in tuples)
 
 
 def test_train_step_mixed_policy_and_telemetry(mesh22):

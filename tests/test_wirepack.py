@@ -1,0 +1,456 @@
+"""Wire coalescer (ISSUE 5 tentpole): group-plan geometry, packed-exchange
+bit-exactness vs the per-bucket schedule, HLO-verified launch reduction,
+and the mixed-plan retrace regression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.hlo_stats import collective_launches
+from repro.core import buckets as BK
+from repro.core import codec as codec_lib
+from repro.core import wirepack as WP
+from repro.core.comm import all_gather_flat, dist_sync_buckets
+from repro.core.loco import SyncConfig, init_state
+from repro.core.quantizer import QuantConfig
+from repro.telemetry import wire as WIRE
+
+QB = QuantConfig(mode="block")
+LOCO4 = SyncConfig(strategy="loco", quant=QB)
+LOCO4K = SyncConfig(strategy="loco", quant=QB, use_kernels=True)
+LOCO8 = SyncConfig(strategy="loco", quant=dataclasses.replace(QB, bits=8))
+NAIVET = SyncConfig(strategy="naive4", quant=QuantConfig(bits=8, mode="tensor"))
+ONEBIT = SyncConfig(strategy="onebit")
+EF = SyncConfig(strategy="ef", quant=QB)
+FP = SyncConfig(strategy="fp")
+HIER = SyncConfig(strategy="loco", quant=QB, hierarchical=True)
+HIER4 = dataclasses.replace(
+    HIER, stage2=SyncConfig(strategy="naive4",
+                            quant=QuantConfig(bits=4, mode="block")))
+HIERK = dataclasses.replace(HIER, use_kernels=True)
+
+
+def make_plan(cfgs, c=512, D=2):
+    buckets, off = [], 0
+    for i, s in enumerate(cfgs):
+        buckets.append(BK.Bucket(index=i, offset=off, chunk_elems=c,
+                                 seg_elems=D * c, sync=s))
+        off += c
+    return BK.ParamPlan(group="g", name="p", tensor_class="body",
+                        chunklen=off, layers=1, buckets=tuple(buckets))
+
+
+def _stack_states(pplan, N):
+    return tuple(jnp.stack([init_state(b.sync, b.seg_elems)] * N)
+                 for b in pplan.buckets)
+
+
+def _run(mesh, dp_axes, pplan, g_nodes, states, coalesce):
+    """One bucketed sync on a real mesh -> (gathered ghat, new states)."""
+    def body(g, sts):
+        flat = tuple(s.reshape(-1) for s in sts)
+        sh, ns = dist_sync_buckets(g.reshape(-1), flat, pplan, dp_axes,
+                                   coalesce=coalesce)
+        return (all_gather_flat(sh, dp_axes)[None],
+                tuple(n[None] for n in ns))
+
+    spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+    sspec = tuple(spec for _ in pplan.buckets)
+    fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(spec, sspec),
+                               out_specs=(P(None), sspec), check_vma=False),
+                 static_argnames=())
+    return fn(g_nodes, states)
+
+
+# ---------------------------------------------------------------------------
+# static group plan
+# ---------------------------------------------------------------------------
+
+
+def test_group_plan_layout_flat():
+    """Signature grouping + contiguous byte offsets, byte-matched to the
+    codecs' wire shapes (the packed buffer carries exactly the bytes the
+    per-leaf exchange would have moved)."""
+    pplan = make_plan((LOCO4, NAIVET, ONEBIT, FP, LOCO8), D=4)
+    gp = WP.build_group_plan(pplan, 4, pods=1)
+    assert {(g.stage, g.kind) for g in gp.groups} == {
+        ("flat", "a2a"), ("flat", "gather"), ("flat", "reduce")}
+
+    a2a = gp.group("flat", "a2a")
+    off = 0
+    for l in a2a.leaves:
+        assert l.offset == off
+        off += l.nbytes
+    assert off == a2a.row_bytes
+
+    want_split = want_gather = 0
+    for b in pplan.buckets:
+        if b.sync.strategy == "fp":
+            continue
+        shapes = codec_lib.get_codec(b.sync).wire_shapes(b.seg_elems)
+        for leaf in shapes.values():
+            if leaf.comm == "split":
+                want_split += leaf.nbytes
+            elif leaf.comm == "gather":
+                want_gather += leaf.nbytes
+    assert a2a.row_bytes * a2a.peers == want_split
+    assert gp.group("flat", "gather").row_bytes == want_gather
+    rg = gp.group("flat", "reduce")
+    assert rg.row_bytes == 2 * 512 and rg.peers == 4
+    assert gp.launches(axes=1) == 3
+    assert gp.launches(axes=2) == 6
+
+
+def test_group_plan_layout_hier():
+    """Hierarchical buckets land in per-stage groups with the stage's peer
+    count; flat buckets of the same plan keep the full dp group."""
+    pplan = make_plan((HIER, LOCO4, FP), D=4)
+    gp = WP.build_group_plan(pplan, 4, pods=2)
+    sigs = {(g.stage, g.kind): g for g in gp.groups}
+    assert set(sigs) == {("hier1", "a2a"), ("hier2", "a2a"),
+                         ("flat", "a2a"), ("flat", "reduce")}
+    assert sigs[("hier1", "a2a")].peers == 2   # intra-pod Dd
+    assert sigs[("hier2", "a2a")].peers == 2   # pods
+    assert sigs[("flat", "a2a")].peers == 4    # full dp group
+    # flat groups cross both mesh axes, hier stages one each
+    assert gp.launches(axes=2) == 2 + 2 + 1 + 1
+
+
+def test_encode_runs_fusion():
+    """Adjacent same-config fusible buckets form one EncodeRun; tensor /
+    onebit / hier / config changes break runs (the fused encode must stay
+    bit-exact, so whole-segment-dependent codecs never fuse)."""
+    pplan = make_plan((LOCO4, LOCO4, LOCO8, LOCO8, NAIVET, NAIVET,
+                       ONEBIT, FP, FP, HIER, HIER), D=4)
+    runs = WP.encode_runs(pplan)
+    assert [r.buckets for r in runs] == [
+        (0, 1), (2, 3), (4,), (5,), (6,), (7, 8), (9,), (10,)]
+    assert runs[0].fused and runs[0].slot == 0
+    assert runs[0].chunk_total == 1024 and runs[0].offset == 0
+    # a uniform plan's group holds ONE leaf pair (monolithic-equivalent)
+    uni = make_plan((LOCO4,) * 6, D=4)
+    gp = WP.build_group_plan(uni, 4, pods=1)
+    (a2a,) = gp.groups
+    assert [l.name for l in a2a.leaves] == ["payload", "scales"]
+
+
+def test_group_plan_rejects_unsplittable_leaf():
+    """A leaf that does not divide over its peer group fails loudly at
+    plan-build time (the 512-aligned geometry normally guarantees it)."""
+    b = BK.Bucket(index=0, offset=0, chunk_elems=384, seg_elems=4 * 384,
+                  sync=LOCO4)
+    pplan = BK.ParamPlan(group="g", name="p", tensor_class="body",
+                         chunklen=384, layers=1, buckets=(b,))
+    with pytest.raises(ValueError, match="512-aligned"):
+        WP.build_group_plan(pplan, 4, pods=1)
+
+
+def test_pack_unpack_roundtrip_local():
+    """pack -> unpack is the identity on every member leaf (pure byte
+    views, no mesh needed)."""
+    pplan = make_plan((LOCO4, NAIVET, ONEBIT), D=4)
+    gp = WP.build_group_plan(pplan, 4, pods=1)
+    key = jax.random.PRNGKey(0)
+    wires = {}
+    for b in pplan.buckets:
+        codec = codec_lib.get_codec(b.sync)
+        g = jax.random.normal(jax.random.fold_in(key, b.index),
+                              (b.seg_elems,)) * 1e-3
+        wires[b.index], _ = codec.encode(g, codec.init_state(b.seg_elems))
+
+    a2a = gp.group("flat", "a2a")
+    buf = WP.pack_a2a(a2a, wires)
+    assert buf.dtype == jnp.uint8 and buf.shape == (4, a2a.row_bytes)
+    back = WP.unpack_a2a(a2a, buf)
+    for l in a2a.leaves:
+        got = back[l.bucket][l.name].reshape(-1)
+        want = wires[l.bucket][l.name].reshape(-1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    gg = gp.group("flat", "gather")
+    gbuf = WP.pack_gather(gg, wires)
+    assert gbuf.shape == (gg.row_bytes,)
+    shapes = {l.bucket: {l.name: wires[l.bucket][l.name].shape}
+              for l in gg.leaves}
+    # an all-gather of identical peers tiles the local bytes peers times
+    back = WP.unpack_gather(gg, jnp.tile(gbuf[None], (gg.peers, 1)), shapes)
+    for l in gg.leaves:
+        for p in range(gg.peers):
+            np.testing.assert_array_equal(
+                np.asarray(back[l.bucket][l.name][p]),
+                np.asarray(wires[l.bucket][l.name]))
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: coalesced == per-bucket schedule (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfgs", [
+    (LOCO4, LOCO8, NAIVET, FP),
+    (ONEBIT, EF, LOCO4, FP),
+    (LOCO4K, LOCO4, NAIVET),
+    (LOCO4, LOCO4, LOCO4, LOCO4),
+    (LOCO4, LOCO4, LOCO8, LOCO8, FP, FP),
+    (LOCO4K, LOCO4K, EF, EF),
+], ids=["quant-mix-fp", "onebit-ef", "kernels-cell", "fused-uniform",
+        "fused-runs", "fused-kernels"])
+def test_coalesced_matches_per_bucket_flat(mesh22, cfgs):
+    """Two sync rounds (the second with non-zero error states) produce
+    bit-identical shards AND states under the packed and the per-bucket
+    exchange, across strategies x quant modes x kernels cells."""
+    N = 2
+    pplan = make_plan(cfgs, D=N)
+    n = N * pplan.chunklen
+    g = jax.random.normal(jax.random.PRNGKey(3), (N, n)) * 1e-3
+    outs = {}
+    for co in (True, False):
+        st = _stack_states(pplan, N)
+        rounds = []
+        for r in range(2):
+            full, st = _run(mesh22, ("data",), pplan, g * (r + 1), st, co)
+            rounds.append(np.asarray(full[0]))
+        outs[co] = (rounds, st)
+    for a, b in zip(outs[True][0], outs[False][0]):
+        np.testing.assert_array_equal(a, b)
+    for sa, sb in zip(outs[True][1], outs[False][1]):
+        np.testing.assert_array_equal(
+            np.asarray(sa.astype(jnp.float32)),
+            np.asarray(sb.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("cfgs", [
+    (HIER, LOCO4, FP),
+    (HIER4, NAIVET, HIER),
+    (HIERK, LOCO4K, FP),
+], ids=["hier-flat-fp", "hier4-tensor", "hier-kernels"])
+def test_coalesced_matches_per_bucket_hier(mesh_pod, cfgs):
+    """Same contract on the 2-axis (pod, data) mesh: both hierarchical
+    stages ride packed per-stage collectives and stay bit-exact with the
+    sequential two-stage exchange."""
+    N = 4
+    pplan = make_plan(cfgs, D=N)
+    n = N * pplan.chunklen
+    g = jax.random.normal(jax.random.PRNGKey(11), (N, n)) * 1e-3
+    outs = {}
+    for co in (True, False):
+        st = _stack_states(pplan, N)
+        rounds = []
+        for r in range(2):
+            full, st = _run(mesh_pod, ("pod", "data"), pplan,
+                            g * (r + 1), st, co)
+            rounds.append(np.asarray(full[0]))
+        outs[co] = (rounds, st)
+    for a, b in zip(outs[True][0], outs[False][0]):
+        np.testing.assert_array_equal(a, b)
+    for sa, sb in zip(outs[True][1], outs[False][1]):
+        np.testing.assert_array_equal(
+            np.asarray(sa.astype(jnp.float32)),
+            np.asarray(sb.astype(jnp.float32)))
+
+
+def test_run_space_states_match_bucket_space(mesh22):
+    """dist_sync_runs over fused run-space states (the persistent layout
+    of the coalesced training runtime) is bit-exact with dist_sync_buckets
+    over the per-bucket states it was fused from — shard AND the split-back
+    states (the fuse/split round trip is exact peer-major stitching)."""
+    from repro.core import flatparam as FPm
+    from repro.core.comm import dist_sync_runs
+
+    N = 2
+    pplan = make_plan((LOCO4, LOCO4, LOCO8, NAIVET, FP), D=N)
+    n = N * pplan.chunklen
+    g = jax.random.normal(jax.random.PRNGKey(9), (N, n)) * 1e-3
+    bucket_states = _stack_states(pplan, N)
+
+    def body_runs(gg, sts):
+        flat = tuple(s.reshape(-1) for s in sts)
+        runs = FPm.fuse_run_states(pplan, flat, N)
+        sh, ns = dist_sync_runs(gg.reshape(-1), runs, pplan, ("data",))
+        back = FPm.split_run_states(pplan, ns, N)
+        return (all_gather_flat(sh, ("data",))[None],
+                tuple(b[None] for b in back))
+
+    spec = P("data")
+    sspec = tuple(spec for _ in pplan.buckets)
+    fn = jax.jit(jax.shard_map(body_runs, mesh=mesh22,
+                               in_specs=(spec, sspec),
+                               out_specs=(P(None), sspec), check_vma=False))
+    full_r, ns_r = fn(g, bucket_states)
+    full_b, ns_b = _run(mesh22, ("data",), pplan, g, bucket_states, True)
+    np.testing.assert_array_equal(np.asarray(full_r[0]),
+                                  np.asarray(full_b[0]))
+    for a, b in zip(ns_r, ns_b):
+        np.testing.assert_array_equal(
+            np.asarray(a.astype(jnp.float32)),
+            np.asarray(b.astype(jnp.float32)))
+
+
+def test_state_units_layout():
+    """state_units: the stored train-state granularity — one leaf per
+    encode run under coalesce (uniform plans collapse to one buffer per
+    param), per bucket on the escape hatch."""
+    from repro.core.flatparam import state_units
+
+    pplan = make_plan((LOCO4, LOCO4, LOCO8, NAIVET, FP), D=4)
+    units = state_units(pplan, True)
+    assert [(u.offset, u.chunk_elems) for u in units] == [
+        (0, 1024), (1024, 512), (1536, 512), (2048, 512)]
+    assert units[0].seg_elems == 4 * 1024
+    assert state_units(pplan, False) == pplan.buckets
+
+
+# ---------------------------------------------------------------------------
+# HLO-verified launch reduction
+# ---------------------------------------------------------------------------
+
+
+def test_launch_counts_drop_to_comm_groups(mesh22):
+    """Compiled-HLO collective counts: the coalesced schedule issues ONE
+    all-to-all for a 4-bucket uniform plan where the per-bucket schedule
+    issues one per bucket-leaf (the acceptance criterion, unit scale)."""
+    N = 2
+    pplan = make_plan((LOCO4,) * 4, D=N)
+    g = jax.random.normal(jax.random.PRNGKey(5), (N, N * pplan.chunklen))
+    for co, want_a2a in ((True, 1), (False, 8)):   # 4 buckets x 2 leaves
+        def body(gg, sts, _co=co):
+            flat = tuple(s.reshape(-1) for s in sts)
+            sh, _ = dist_sync_buckets(gg.reshape(-1), flat, pplan,
+                                      ("data",), coalesce=_co)
+            return sh[None]
+
+        st = _stack_states(pplan, N)
+        fn = jax.jit(jax.shard_map(
+            body, mesh=mesh22,
+            in_specs=(P("data"), tuple(P("data") for _ in pplan.buckets)),
+            out_specs=P("data"), check_vma=False))
+        counts = collective_launches(fn.lower(g, st).compile().as_text())
+        assert counts.get("all-to-all", 0) == want_a2a, (co, counts)
+
+
+def test_launch_counts_mixed_kinds(mesh22):
+    """fp buckets coalesce into ONE reduce-scatter and gather-leaf
+    metadata into ONE all-gather, alongside the packed all-to-all."""
+    N = 2
+    pplan = make_plan((LOCO4, NAIVET, FP, FP), D=N)
+    g = jax.random.normal(jax.random.PRNGKey(6), (N, N * pplan.chunklen))
+
+    def body(gg, sts):
+        flat = tuple(s.reshape(-1) for s in sts)
+        sh, _ = dist_sync_buckets(gg.reshape(-1), flat, pplan, ("data",))
+        return sh[None]
+
+    st = _stack_states(pplan, N)
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh22,
+        in_specs=(P("data"), tuple(P("data") for _ in pplan.buckets)),
+        out_specs=P("data"), check_vma=False))
+    counts = collective_launches(fn.lower(g, st).compile().as_text())
+    assert counts.get("all-to-all", 0) == 1, counts       # loco + naivet payloads
+    assert counts.get("reduce-scatter", 0) == 1, counts   # both fp buckets
+    assert counts.get("all-gather", 0) == 1, counts       # tensor-mode scale
+
+
+# ---------------------------------------------------------------------------
+# telemetry launch accounting (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_launches_accounting():
+    pp = make_plan((LOCO4, NAIVET, FP), D=4)
+    plan = BK.SyncPlan(params=(pp,))
+    got = WIRE.plan_launches(plan, pods=1)
+    # per bucket: loco 2 split leaves, naivet split+gather, fp 1 -> 5
+    # coalesced: one a2a + one gather + one reduce -> 3 groups, 3 launches
+    assert got == {"per_bucket": 5, "coalesced": 3, "comm_groups": 3}
+    rep = WIRE.plan_report(plan)
+    assert rep.launches_per_bucket == 5
+    assert rep.launches_coalesced == 3
+    assert rep.comm_groups == 3
+    assert sum(b.launches for b in rep.buckets) == 5
+    assert '"per_bucket": 5' in rep.to_json()
+    assert "launches/step" in WIRE.format_report(rep)
+
+
+def test_plan_launches_hier():
+    pp = make_plan((HIER, LOCO4, FP), D=4)
+    plan = BK.SyncPlan(params=(pp,))
+    got = WIRE.plan_launches(plan, pods=2)
+    # per bucket: hier = 2 stage-1 + 2 stage-2 leaves; flat loco = 2 leaves
+    # x 2 axes; fp = 2 axes -> 4 + 4 + 2 = 10
+    # coalesced: hier1 a2a + hier2 a2a (1 axis each) + flat a2a + reduce
+    # (2 axes each) -> 6 launches over 4 groups
+    assert got == {"per_bucket": 10, "coalesced": 6, "comm_groups": 4}
+
+
+# ---------------------------------------------------------------------------
+# mixed-plan retrace regression (the BENCH mixed_64k outlier hunt)
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_policy_no_retraces(mesh22, monkeypatch):
+    """The mixed_64k BENCH outlier was suspected to be per-config codec
+    retraces or dead fast-path dispatch.  Pin the actual contract: a plan
+    mixing per-bucket configs (a) encodes exactly once per ENCODE RUN per
+    trace — a uniform plan fuses to one encode like the monolithic path,
+    a 4-config plan to four, never more, (b) builds its custom_vjp
+    closure once across repeated jit traces, and (c) triggers ZERO
+    re-traces at steady state (executing the compiled step does not call
+    back into python)."""
+    from repro.core import hijack
+    from repro.core.hijack import gather_with_sync_buckets
+
+    calls: list[str] = []
+    orig = codec_lib.Codec.encode
+
+    def counting(self, g, state, key=None):
+        calls.append(self.cfg.strategy)
+        return orig(self, g, state, key)
+
+    monkeypatch.setattr(codec_lib.Codec, "encode", counting)
+
+    N, c = 2, 512
+    uniform = make_plan((LOCO4,) * 4, c=c, D=N)
+    mixed = make_plan((LOCO4, LOCO8, NAIVET, LOCO4), c=c, D=N)
+    x = jax.random.normal(jax.random.PRNGKey(2), (N * 4 * c,))
+
+    def build(pplan):
+        def step(w, sts, xx):
+            def loss(w, s):
+                out = gather_with_sync_buckets(w, s, pplan, ("data",))
+                return jnp.sum(out.astype(jnp.float32) * xx)
+            return jax.grad(loss, argnums=(0, 1))(
+                w, tuple(s.reshape(-1) for s in sts))
+
+        sspec = tuple(P("data") for _ in pplan.buckets)
+        return jax.jit(jax.shard_map(
+            step, mesh=mesh22, in_specs=(P("data"), sspec, P(None)),
+            out_specs=(P("data"), sspec), check_vma=False))
+
+    def trace_encodes(pplan):
+        hijack._make_bucketed_gather.cache_clear()
+        w = jnp.zeros((N * 4 * c,), jnp.bfloat16)
+        st = _stack_states(pplan, N)
+        calls.clear()
+        compiled = build(pplan).lower(w, st, x).compile()
+        n_trace = len(calls)
+        assert hijack._make_bucketed_gather.cache_info().misses == 1
+        # steady state: executing the compiled step never re-enters python
+        calls.clear()
+        g, ns = compiled(w, st, x)
+        jax.block_until_ready(g)
+        assert calls == []
+        return n_trace
+
+    n_uniform = trace_encodes(uniform)
+    n_mixed = trace_encodes(mixed)
+    assert n_uniform > 0
+    assert len(WP.encode_runs(uniform)) == 1
+    assert len(WP.encode_runs(mixed)) == 4
+    # encodes per trace scale with encode runs, not with anything hidden:
+    # the mixed plan costs exactly 4x the uniform plan's single fused
+    # encode per trace (k traces of the bwd closure cancel in the ratio)
+    assert n_mixed == 4 * n_uniform, (n_mixed, n_uniform)
