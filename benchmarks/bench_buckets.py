@@ -37,7 +37,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
 import dataclasses
-import json
 import statistics
 import sys
 import time
@@ -46,10 +45,10 @@ import jax
 import jax.numpy as jnp
 
 try:
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, write_bench_json
 except ModuleNotFoundError:  # invoked as `python benchmarks/bench_buckets.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, write_bench_json
 from repro.analysis.hlo_stats import collective_launches
 from repro.configs.base import ShapeConfig, get_arch, reduced
 from repro.core import policy as POL
@@ -78,6 +77,10 @@ def sweep_configs(quick: bool) -> dict[str, RunConfig]:
                                                   coalesce=False),
         "mixed_64k": dataclasses.replace(base, bucket_bytes=64 << 10,
                                          policy=mixed),
+        # in-graph compression-health metrics (DESIGN.md §14): must ride the
+        # existing collectives and stay within noise of the plain step
+        "bucket_64k_metrics": dataclasses.replace(base, bucket_bytes=64 << 10,
+                                                  telemetry=True),
     }
     if not quick:
         out.update({
@@ -187,8 +190,27 @@ def check(results: dict) -> None:
         # the old mixed_64k outlier (>1.5x) must stay gone
         assert mixed["step_ms_min"] / mono["step_ms_min"] <= 1.5, (
             mixed["step_ms_min"], mono["step_ms_min"])
+    met = results.get("bucket_64k_metrics")
+    mratio = None
+    if met is not None:
+        # in-graph metrics must not add collectives (they ride the loss
+        # reduction -- DESIGN.md §14) and must stay within noise of the
+        # plain step (min-based for the same host-load reason as above;
+        # the ISSUE 6 budget is 2% on the median, asserted at 5% on the
+        # min to keep CI robust and reported exactly)
+        assert met["launches"] == coal["launches"], (
+            "telemetry changed the collective schedule",
+            met["launches"], coal["launches"])
+        mratio = met["step_ms_min"] / coal["step_ms_min"]
+        assert mratio <= 1.05, (
+            f"metrics-enabled step is {mratio:.3f}x the plain step "
+            f"({met['step_ms_min']:.0f} vs {coal['step_ms_min']:.0f} ms min; "
+            f"medians {met['step_ms']:.0f} vs {coal['step_ms']:.0f})")
     print(f"# check ok: a2a launches {got} == {want} comm groups, "
-          f"coalesced/monolithic step {ratio:.3f}x")
+          f"coalesced/monolithic step {ratio:.3f}x"
+          + (f", metrics overhead {mratio:.3f}x "
+             f"(median {met['step_ms'] / coal['step_ms']:.3f}x)"
+             if mratio is not None else ""))
 
 
 def run(quick: bool = False, steps: int | None = None,
@@ -206,9 +228,7 @@ def run(quick: bool = False, steps: int | None = None,
             c.step(i, batch, timed=i >= 2)
     results = {c.name: c.row() for c in cells}
     check(results)
-    with open(out, "w") as f:
-        json.dump(results, f, indent=2)
-    print(f"# wrote {out}")
+    write_bench_json(out, "buckets", results)
     return results
 
 

@@ -33,10 +33,10 @@ import os
 import sys
 
 try:
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, write_bench_json
 except ModuleNotFoundError:  # invoked as `python benchmarks/bench_comm_model.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, write_bench_json
 
 GB = 1e9
 
@@ -199,9 +199,7 @@ def hier_projection(quick: bool = False, out: str = "BENCH_comm.json") -> dict:
         "two-stage exchange must cut inter-pod bytes", flat, hier)
     assert results["checks"]["hier_ici_not_worse_than_2x"], (
         "stage-1 ICI volume blew past 2x the flat wire", flat, hier)
-    with open(out, "w") as f:
-        json.dump(results, f, indent=2)
-    print(f"# wrote {out}")
+    write_bench_json(out, "comm_hier", results)
     return results
 
 

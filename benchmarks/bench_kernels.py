@@ -14,7 +14,6 @@ fused (mirrors the coverage table in EXPERIMENTS.md §Kernels).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -23,10 +22,10 @@ import jax
 import jax.numpy as jnp
 
 try:
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, write_bench_json
 except ModuleNotFoundError:  # invoked as `python benchmarks/bench_kernels.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, write_bench_json
 from repro.core import codec as codec_lib
 from repro.core.loco import SyncConfig
 from repro.core.quantizer import QuantConfig
@@ -120,10 +119,7 @@ def run(quick: bool = False):
         })
     out = {"n_elems": n, "peers": D, "backend": jax.default_backend(),
            "interpret": True, "cells": results}
-    with open("BENCH_kernels.json", "w") as f:
-        json.dump(out, f, indent=2)
-    print(f"wrote BENCH_kernels.json ({len(results)} cells)")
-    return out
+    return write_bench_json("BENCH_kernels.json", "kernels", out)
 
 
 if __name__ == "__main__":

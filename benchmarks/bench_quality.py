@@ -6,12 +6,11 @@ Claim validated (paper): 4-bit LoCo ~ 16-bit Adam final loss; naive 4-bit
 """
 from __future__ import annotations
 
-import json
 import os
 
 from repro.core.loco import SyncConfig
 from repro.core.quantizer import QuantConfig
-from benchmarks.common import csv_row, train_sim
+from benchmarks.common import csv_row, train_sim, write_bench_json
 
 STRATEGIES = {
     "adam16_fp": SyncConfig(strategy="fp"),
@@ -41,8 +40,9 @@ def run(steps=150, out_dir="experiments/bench"):
     csv_row("quality/gap_loco_vs_fp", 0.0, f"gap={loco - fp:+.4f}")
     csv_row("quality/gap_naive_vs_fp", 0.0, f"gap={naive - fp:+.4f}")
     os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "quality_curves.json"), "w") as f:
-        json.dump({k: r.losses.tolist() for k, r in results.items()}, f)
+    write_bench_json(os.path.join(out_dir, "quality_curves.json"),
+                     "quality_curves",
+                     {k: r.losses.tolist() for k, r in results.items()})
     return results
 
 

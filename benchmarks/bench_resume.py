@@ -26,7 +26,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
 import dataclasses
-import json
 import shutil
 import sys
 import time
@@ -36,10 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, write_bench_json
 except ModuleNotFoundError:  # invoked as `python benchmarks/bench_resume.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, write_bench_json
 from repro.checkpoint import checkpoint as CKPT
 from repro.configs.base import ShapeConfig, get_arch, reduced
 from repro.core import policy as POL
@@ -128,8 +127,7 @@ def main(argv=None):
         "drop_penalty_x": gap_d / max(gap_m, 1e-12),
         "wall_s": time.time() - t0,
     }
-    with open("BENCH_resume.json", "w") as f:
-        json.dump(out, f, indent=1)
+    write_bench_json("BENCH_resume.json", "resume", out)
     csv_row("resume_migrated_gap", gap_m * 1e6, f"{gap_m:.5f} nats")
     csv_row("resume_dropped_gap", gap_d * 1e6, f"{gap_d:.5f} nats")
     print(f"migrated tracks uninterrupted within {gap_m:.4f} nats; "

@@ -136,3 +136,24 @@ def train_sim(sync: SyncConfig, *, steps=150, n_nodes=4, batch_per_node=4,
 
 def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def write_bench_json(path: str, bench: str, results: dict, **extra) -> dict:
+    """Write one BENCH_*.json in the shared telemetry envelope.
+
+    Every benchmark artifact is a single ``bench``-kind record of the
+    telemetry/sink schema (schema_version + kind + t + bench name +
+    results dict), so the same validator covers training streams and
+    benchmark outputs.  The record is also schema-checked on write.
+    """
+    import json
+
+    from repro.telemetry import sink
+
+    rec = sink.envelope("bench", bench=bench, results=results, **extra)
+    errs = sink.validate_record(rec)
+    assert not errs, errs
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+    return rec

@@ -225,42 +225,56 @@ def _analyze_comp(name: str, comps: dict, memo: dict) -> HloStats:
             continue
         if op in _SKIP_OPS:
             continue
-        # ---- flops: dot ----------------------------------------------------
+        fl, b = _instr_cost(ins, shape_of)
         if op == "dot":
-            res = _shape_elems(ins.result_type)
-            out_n = res[-1][1] if res else 0
-            k = 1
-            mlc = _DOT_LHS_CONTRACT.search(ins.rest)
-            ops = _OPERAND_RE.findall(ins.rest.split("),")[0] + ")")
-            if mlc and ops:
-                lhs_type = shape_of.get(ops[0], "")
-                lhs_shapes = _SHAPE_RE.findall(lhs_type)
-                if lhs_shapes:
-                    dims = [int(d) for d in lhs_shapes[0][1].split(",")] if lhs_shapes[0][1] else []
-                    for ci in mlc.group(1).split(","):
-                        if ci != "" and int(ci) < len(dims):
-                            k *= dims[int(ci)]
-            fl = 2.0 * out_n * k
-            st.flops += fl
             key = ins.result_type.split(" ")[0]
             st.dot_flops_by_shape[key] = st.dot_flops_by_shape.get(key, 0.0) + fl
-        elif op == "convolution":
-            res = _shape_elems(ins.result_type)
-            out_n = res[-1][1] if res else 0
-            st.flops += 2.0 * out_n  # lower bound; convs are tiny here
-        # ---- bytes (HBM-traffic estimate; see module docstring) -------------
-        b = _shape_bytes(ins.result_type)
-        # CPU HLO wraps single elementwise ops as `wrapped_*` kLoop fusions;
-        # a TPU lowering would fuse those away -> result-only accounting.
-        wrapped_elementwise = op == "fusion" and ins.name.startswith("wrapped_")
-        if op in _MATERIALIZING and not wrapped_elementwise:
-            arg_txt = ins.rest.split(")")[0]
-            for opnd in _OPERAND_RE.findall(arg_txt):
-                if opnd in shape_of:
-                    b += _shape_bytes(shape_of[opnd])
+        st.flops += fl
         st.bytes += b
     memo[name] = st
     return st
+
+
+def _instr_cost(ins: Instr, shape_of: dict) -> tuple[float, float]:
+    """(flops, hbm_bytes) for one non-control, non-collective instruction.
+
+    Shared by the roofline accumulator (:func:`_analyze_comp`) and the
+    overlap estimator (:func:`_overlap_comp`) so both charge identical
+    per-instruction costs.
+    """
+    op = ins.opcode
+    fl = 0.0
+    # ---- flops: dot --------------------------------------------------------
+    if op == "dot":
+        res = _shape_elems(ins.result_type)
+        out_n = res[-1][1] if res else 0
+        k = 1
+        mlc = _DOT_LHS_CONTRACT.search(ins.rest)
+        ops = _OPERAND_RE.findall(ins.rest.split("),")[0] + ")")
+        if mlc and ops:
+            lhs_type = shape_of.get(ops[0], "")
+            lhs_shapes = _SHAPE_RE.findall(lhs_type)
+            if lhs_shapes:
+                dims = [int(d) for d in lhs_shapes[0][1].split(",")] if lhs_shapes[0][1] else []
+                for ci in mlc.group(1).split(","):
+                    if ci != "" and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+        fl = 2.0 * out_n * k
+    elif op == "convolution":
+        res = _shape_elems(ins.result_type)
+        out_n = res[-1][1] if res else 0
+        fl = 2.0 * out_n  # lower bound; convs are tiny here
+    # ---- bytes (HBM-traffic estimate; see module docstring) ----------------
+    b = _shape_bytes(ins.result_type)
+    # CPU HLO wraps single elementwise ops as `wrapped_*` kLoop fusions;
+    # a TPU lowering would fuse those away -> result-only accounting.
+    wrapped_elementwise = op == "fusion" and ins.name.startswith("wrapped_")
+    if op in _MATERIALIZING and not wrapped_elementwise:
+        arg_txt = ins.rest.split(")")[0]
+        for opnd in _OPERAND_RE.findall(arg_txt):
+            if opnd in shape_of:
+                b += _shape_bytes(shape_of[opnd])
+    return fl, b
 
 
 def analyze(hlo_text: str) -> HloStats:
@@ -281,3 +295,147 @@ def collective_launches(hlo_text: str) -> dict[str, float]:
     Validated against hand-countable modules in tests/test_analysis.py.
     """
     return dict(analyze(hlo_text).coll_counts)
+
+
+# ---------------------------------------------------------------------------
+# compute/collective overlap estimation (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# XLA emits asynchronous collectives as `-start`/`-done` instruction pairs;
+# everything scheduled between the pair can execute while the wire transfer
+# is in flight.  Walking each computation IN PROGRAM ORDER and accumulating
+# the roofline compute time (max(flops/PEAK_FLOPS, bytes/HBM_BW)) of the
+# instructions inside each open start..done window gives a static estimate
+# of how much of each collective's wire time is hideable:
+#
+#     hidden = sum over async collectives of min(t_wire, t_compute_in_window)
+#
+# Synchronous collectives (no -start form) contribute wire time with zero
+# hidden.  The fraction hidden/total is the schedule's overlap headroom --
+# the number hierarchical/coalesced exchange is trying to raise.  Times use
+# the same TPU-v5e roofline constants as analysis/roofline, so this is a
+# *model* estimate (consistent across configs), not a measurement.
+
+@dataclasses.dataclass
+class OverlapStats:
+    """Static overlap estimate for one compiled module (trip-weighted)."""
+
+    collective_s: float = 0.0   # total wire time of all collectives
+    hidden_s: float = 0.0       # part hideable under same-window compute
+    compute_s: float = 0.0      # total non-collective roofline time
+    n_async: float = 0.0        # collectives emitted as -start/-done pairs
+    n_sync: float = 0.0         # collectives emitted synchronously
+
+    @property
+    def exposed_s(self) -> float:
+        return max(0.0, self.collective_s - self.hidden_s)
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of collective wire time hideable under compute (0..1)."""
+        return self.hidden_s / self.collective_s if self.collective_s else 0.0
+
+    def add(self, other: "OverlapStats", w: float):
+        self.collective_s += w * other.collective_s
+        self.hidden_s += w * other.hidden_s
+        self.compute_s += w * other.compute_s
+        self.n_async += w * other.n_async
+        self.n_sync += w * other.n_sync
+
+    def to_json(self) -> dict:
+        return {"collective_s": self.collective_s, "hidden_s": self.hidden_s,
+                "exposed_s": self.exposed_s, "compute_s": self.compute_s,
+                "overlap_fraction": self.overlap_fraction,
+                "n_async": self.n_async, "n_sync": self.n_sync}
+
+
+def _overlap_comp(name: str, comps: dict, memo: dict,
+                  consts: tuple[float, float, float]) -> OverlapStats:
+    peak_flops, hbm_bw, ici_bw = consts
+    if name in memo:
+        return memo[name]
+    st = OverlapStats()
+    memo[name] = st  # placeholder to guard recursion
+    shape_of = {i.name: i.result_type for i in comps[name]}
+    # open async windows: start-instr name -> [wire_s, compute_s since start]
+    windows: dict[str, list[float]] = {}
+
+    def add_compute(t: float) -> None:
+        st.compute_s += t
+        for w in windows.values():
+            w[1] += t
+
+    for ins in comps[name]:
+        op = ins.opcode
+        base = op[:-len("-start")] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            opnds = _OPERAND_RE.findall(ins.rest)
+            w = windows.pop(opnds[0], None) if opnds else None
+            if w is not None:
+                st.hidden_s += min(w[0], w[1])
+            continue
+        if base in _COLLECTIVES:
+            t = _collective_wire(base, ins.result_type, ins.rest) / ici_bw
+            st.collective_s += t
+            if op.endswith("-start"):
+                windows[ins.name] = [t, 0.0]
+                st.n_async += 1
+            else:
+                st.n_sync += 1
+            continue
+        if op == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+            mc = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+            if mb and mc and mb.group(1) in comps:
+                trips = _trip_count(comps[mc.group(1)]) if mc.group(1) in comps else 1
+                child = _overlap_comp(mb.group(1), comps, memo, consts)
+                st.add(child, trips)
+                st.compute_s -= trips * child.compute_s  # add_compute re-adds
+                add_compute(trips * child.compute_s)
+            continue
+        if op == "call":
+            mt = re.search(r"to_apply=%?([\w.\-]+)", ins.rest)
+            if mt and mt.group(1) in comps:
+                child = _overlap_comp(mt.group(1), comps, memo, consts)
+                st.add(child, 1.0)
+                st.compute_s -= child.compute_s
+                add_compute(child.compute_s)
+            continue
+        if op == "conditional":
+            for mt in re.finditer(r"(?:branch_computations=\{|true_computation=|"
+                                  r"false_computation=)%?([\w.\-]+)", ins.rest):
+                if mt.group(1) in comps:
+                    child = _overlap_comp(mt.group(1), comps, memo, consts)
+                    st.add(child, 1.0)
+                    st.compute_s -= child.compute_s
+                    add_compute(child.compute_s)
+            continue
+        if op in _SKIP_OPS:
+            continue
+        fl, b = _instr_cost(ins, shape_of)
+        add_compute(max(fl / peak_flops, b / hbm_bw))
+    # windows never closed inside this computation (done elided/hoisted):
+    # credit what accumulated so far.
+    for w in windows.values():
+        st.hidden_s += min(w[0], w[1])
+    memo[name] = st
+    return st
+
+
+def overlap_stats(hlo_text: str, *, peak_flops: float | None = None,
+                  hbm_bw: float | None = None,
+                  ici_bw: float | None = None) -> OverlapStats:
+    """Compute/collective overlap estimate for a compiled HLO module.
+
+    Defaults to the TPU-v5e roofline constants (analysis/roofline).  Pass
+    explicit bandwidths to model other parts (tests use 1.0 each so times
+    equal raw flops/bytes).
+    """
+    if peak_flops is None or hbm_bw is None or ici_bw is None:
+        from repro.analysis import roofline as _RL
+        peak_flops = _RL.PEAK_FLOPS if peak_flops is None else peak_flops
+        hbm_bw = _RL.HBM_BW if hbm_bw is None else hbm_bw
+        ici_bw = _RL.ICI_BW if ici_bw is None else ici_bw
+    comps, entry = parse_computations(hlo_text)
+    memo: dict = {}
+    return _overlap_comp(entry, comps, memo, (peak_flops, hbm_bw, ici_bw))

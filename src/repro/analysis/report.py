@@ -69,19 +69,22 @@ def roofline_table(recs, mesh="16x16"):
 
 def collective_table(recs, mesh="16x16", shape="train_4k"):
     lines = [
-        "| arch | all-gather | all-reduce | all-to-all | reduce-scatter | total wire |",
-        "|---|---|---|---|---|---|",
+        "| arch | all-gather | all-reduce | all-to-all | reduce-scatter | total wire "
+        "| overlap |",
+        "|---|---|---|---|---|---|---|",
     ]
     for a in ARCH_ORDER:
         r = recs.get((a, shape, mesh))
         if not r or r["status"] != "ok":
             continue
         bk = r["collectives"]["bytes_by_kind"]
+        ov = r.get("overlap")
+        ovs = f"{ov['overlap_fraction']:.0%}" if ov else "n/a"
         lines.append(
             f"| {a} | " + " | ".join(
                 f"{bk.get(k, 0)/2**30:.2f}" for k in
                 ("all-gather", "all-reduce", "all-to-all", "reduce-scatter"))
-            + f" | {r['collectives']['wire_bytes']/2**30:.2f} GiB |")
+            + f" | {r['collectives']['wire_bytes']/2**30:.2f} GiB | {ovs} |")
     return "\n".join(lines)
 
 

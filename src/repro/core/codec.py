@@ -147,6 +147,39 @@ class Codec:
             return None
         return fastpath_for(self.cfg)
 
+    # ---- health-metric hooks (telemetry/metrics, DESIGN.md §14) ------------
+    # Both return {field: f32 sum} with keys from telemetry.metrics
+    # UNIT_FIELDS; every value must be a plain sum (psum-able).  They run
+    # inside the jitted step on already-materialized arrays — never on the
+    # wire payloads (those live only inside the custom_vjp backward) — and
+    # never dispatch Pallas fast paths.
+
+    def grad_metrics(self, seg: jax.Array) -> dict[str, jax.Array]:
+        """Quantizer-health probe over one fp32 gradient segment.
+
+        Re-quantizes ``seg`` with this codec's wire config to report
+        saturation/clip rates and log2-scale dynamic range.  A proxy for
+        the per-node encode (same config, same dynamic-range behavior),
+        since the actual payload cannot escape the backward.  Default: no
+        probe (strategies without a quantizer).
+        """
+        return {}
+
+    def state_metrics(self, state: jax.Array) -> dict[str, jax.Array]:
+        """Exact metrics of the stored error-feedback state."""
+        e = self.state_decode(state).astype(jnp.float32)
+        return {
+            "err_sq": jnp.sum(e * e),
+            "err_sat_cnt": self._state_sat_count(state),
+            "err_tot": jnp.float32(e.size),
+            "err_bad": jnp.sum(~jnp.isfinite(e)).astype(jnp.float32),
+        }
+
+    def _state_sat_count(self, state: jax.Array) -> jax.Array:
+        """Stored error values pinned at the error codec's bound (0 for
+        unbounded float storage)."""
+        return jnp.float32(0)
+
     def roundtrip(self, g: jax.Array, state: jax.Array,
                   key: jax.Array | None = None):
         """One-node encode -> decode: (dequantized contribution, new_state).
@@ -271,6 +304,28 @@ class _QuantizedCodec(Codec):
         contrib = jax.vmap(deq)(recv["payload"], recv["scales"])
         return jnp.mean(contrib, axis=0)
 
+    def grad_metrics(self, seg):
+        qc = self.cfg.quant
+        x = seg.astype(jnp.float32)
+        if qc.mode == "fixed":
+            q = Q.quant_fixed(x, qc)
+            scales = jnp.full((1,), qc.scale, jnp.float32)
+        elif qc.mode == "tensor":
+            q, scales = Q.quant_tensor(x, qc)
+        else:
+            q, scales = Q.quant_block(x, qc)
+        finite = jnp.isfinite(scales)
+        l2 = jnp.where(finite, jnp.log2(jnp.maximum(scales, 1e-30)), 0.0)
+        return {
+            "sat_cnt": jnp.sum((q == qc.qmax) | (q == qc.qmin))
+                          .astype(jnp.float32),
+            "sat_tot": jnp.float32(q.size),
+            "scale_l2_sum": jnp.sum(l2),
+            "scale_l2_sqsum": jnp.sum(l2 * l2),
+            "scale_cnt": jnp.float32(scales.size),
+            "scale_bad": jnp.sum(~finite).astype(jnp.float32),
+        }
+
     def _check_key(self, key):
         if self.cfg.quant.stochastic_rounding and key is None:
             raise ValueError(
@@ -296,6 +351,16 @@ class LocoCodec(_QuantizedCodec):
 
     def state_encode(self, e):
         return Q.error_encode(e, self.cfg.quant)
+
+    def _state_sat_count(self, state):
+        # fraction of stored errors clipped at the codec bound: outliers
+        # the compensation state cannot represent (f8 saturates at ±448
+        # pre-scale, int8 at ±127; bf16/none storage is unbounded).
+        bound = {"f8": 448.0, "int8": 127.0}.get(self.cfg.quant.error_codec)
+        if bound is None:
+            return jnp.float32(0)
+        v = jnp.abs(state.astype(jnp.float32))
+        return jnp.sum(v >= bound).astype(jnp.float32)
 
     def encode_ref(self, g, state, key=None):
         self._check_key(key)
@@ -382,3 +447,21 @@ class OnebitCodec(Codec):
         bits = Q.unpack_signs(recv["payload"]).astype(jnp.float32)
         contrib = (2.0 * bits - 1.0) * recv["scales"].reshape(D, 1)
         return jnp.mean(contrib, axis=0)
+
+    def grad_metrics(self, seg):
+        # sign compression has no clipping bound; "saturation" here is the
+        # positive-sign fraction (healthy gradients sit near 0.5 — a rate
+        # pinned at 0/1 means the segment collapsed to one sign).  The
+        # scale stats track the per-segment L1 scale's dynamic range.
+        x = seg.astype(jnp.float32)
+        scale = jnp.mean(jnp.abs(x))
+        finite = jnp.isfinite(scale)
+        l2 = jnp.where(finite, jnp.log2(jnp.maximum(scale, 1e-30)), 0.0)
+        return {
+            "sat_cnt": jnp.sum(x > 0).astype(jnp.float32),
+            "sat_tot": jnp.float32(x.size),
+            "scale_l2_sum": l2,
+            "scale_l2_sqsum": l2 * l2,
+            "scale_cnt": jnp.float32(1),
+            "scale_bad": jnp.float32(1) - finite.astype(jnp.float32),
+        }

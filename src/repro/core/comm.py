@@ -38,6 +38,7 @@ from repro.core import loco as loco_lib
 from repro.core import wirepack as WP
 from repro.core.buckets import ParamPlan
 from repro.core.loco import SyncConfig
+from repro.telemetry import profiler as PROF
 
 
 def axis_size(axes: tuple[str, ...]) -> int:
@@ -175,7 +176,8 @@ def dist_sync(
 
     if cfg.strategy == "fp":
         # 16-bit-style baseline: reduce-scatter mean (bf16 wire).
-        g_shard = psum_scatter_flat(g.astype(jnp.bfloat16), dp_axes)
+        with PROF.phase("exchange"):
+            g_shard = psum_scatter_flat(g.astype(jnp.bfloat16), dp_axes)
         return g_shard.astype(jnp.float32) / D, state
 
     if cfg.strategy == "ef21":
@@ -187,14 +189,18 @@ def dist_sync(
 
     codec = codec_lib.get_codec(cfg)
     # --- local compensate + quantize (steps 1-2 of Algorithm 1) -----------
-    wire, new_state = codec.encode(g, state, key)
+    with PROF.phase("encode"):
+        wire, new_state = codec.encode(g, state, key)
 
     # --- exchange of the low-bit wire pytree (step 3 / §3.3) --------------
-    recv = exchange_wire(wire, codec.wire_shapes(n), D, dp_axes,
-                         coalesce=coalesce)
+    with PROF.phase("exchange"):
+        recv = exchange_wire(wire, codec.wire_shapes(n), D, dp_axes,
+                             coalesce=coalesce)
 
     # --- receiver-side dequant + mean --------------------------------------
-    return codec.decode_mean(recv), new_state
+    with PROF.phase("decode"):
+        shard = codec.decode_mean(recv)
+    return shard, new_state
 
 
 # ---------------------------------------------------------------------------
@@ -383,94 +389,100 @@ def _dist_sync_coalesced(
     wires: dict[int, dict[str, jax.Array]] = {}
     fp_segs: dict[int, jax.Array] = {}
     new_states: list = [None] * len(states)
-    for ri, run in enumerate(runs):
-        cfg = run.sync
-        if cfg.strategy == "fp":
-            fp_segs[run.slot] = run_seg(run).astype(jnp.bfloat16)
+    with PROF.phase("encode"):
+        for ri, run in enumerate(runs):
+            cfg = run.sync
+            if cfg.strategy == "fp":
+                fp_segs[run.slot] = run_seg(run).astype(jnp.bfloat16)
+                if run_space:
+                    new_states[ri] = states[ri]
+                else:
+                    for pos in run.positions:
+                        new_states[pos] = states[pos]
+                continue
+            if cfg.strategy == "ef21":
+                raise NotImplementedError(
+                    "ef21 distributed path needs a receiver-side "
+                    "mean-estimate shard; use the post-grad reference "
+                    "(loco.sim_sync) for ef21, or strategy='ef'/'loco' "
+                    "here.")
+            if cfg.hierarchical:
+                _check_hier_codec(cfg)
+            codec = codec_lib.get_codec(cfg)
+            # fused runs never use rounding keys (stochastic rounding is
+            # not fusible), so key=None is exact there
+            kb = None if run.fused else keys[run.positions[0]]
             if run_space:
-                new_states[ri] = states[ri]
+                wire, ns = codec.encode(run_seg(run), states[ri], kb)
+                new_states[ri] = ns
+            elif run.fused:
+                wire, ns = codec.encode(run_seg(run),
+                                        _fused_state(codec, states, run, D),
+                                        None)
+                for pos, s in zip(run.positions,
+                                  _split_state(codec, ns, states, run, D)):
+                    new_states[pos] = s
             else:
-                for pos in run.positions:
-                    new_states[pos] = states[pos]
-            continue
-        if cfg.strategy == "ef21":
-            raise NotImplementedError(
-                "ef21 distributed path needs a receiver-side mean-estimate "
-                "shard; use the post-grad reference (loco.sim_sync) for "
-                "ef21, or strategy='ef'/'loco' here.")
-        if cfg.hierarchical:
-            _check_hier_codec(cfg)
-        codec = codec_lib.get_codec(cfg)
-        # fused runs never use rounding keys (stochastic rounding is not
-        # fusible), so key=None is exact there
-        kb = None if run.fused else keys[run.positions[0]]
-        if run_space:
-            wire, ns = codec.encode(run_seg(run), states[ri], kb)
-            new_states[ri] = ns
-        elif run.fused:
-            wire, ns = codec.encode(run_seg(run),
-                                    _fused_state(codec, states, run, D),
-                                    None)
-            for pos, s in zip(run.positions,
-                              _split_state(codec, ns, states, run, D)):
-                new_states[pos] = s
-        else:
-            pos = run.positions[0]
-            wire, ns = codec.encode(run_seg(run), states[pos], kb)
-            new_states[pos] = ns
-        if cfg.hierarchical:
-            seg_n = D * run.chunk_total
-            wire = {name: (_regroup_chunks(wire[name], Pp, Dd).reshape(-1)
-                           if leaf.comm == "split" else wire[name])
-                    for name, leaf in codec.wire_shapes(seg_n).items()}
-        wires[run.slot] = wire
+                pos = run.positions[0]
+                wire, ns = codec.encode(run_seg(run), states[pos], kb)
+                new_states[pos] = ns
+            if cfg.hierarchical:
+                seg_n = D * run.chunk_total
+                wire = {name: (_regroup_chunks(wire[name], Pp, Dd).reshape(-1)
+                               if leaf.comm == "split" else wire[name])
+                        for name, leaf in codec.wire_shapes(seg_n).items()}
+            wires[run.slot] = wire
 
     # --- one packed collective per comm group ------------------------------
     shards: dict[int, jax.Array] = {}
-    rg = gplan.group("flat", "reduce")
-    if rg is not None:
-        shard = psum_scatter_flat(WP.pack_reduce(rg, fp_segs), dp_axes)
-        for slot, sh in WP.unpack_reduce(rg, shard).items():
-            shards[slot] = sh.astype(jnp.float32) / D
-    recv_flat = _exchange_stage(gplan, "flat", wires, dp_axes)
-    recv_h1 = (_exchange_stage(gplan, "hier1", wires, (dp_axes[-1],))
-               if any_hier else {})
+    with PROF.phase("exchange"):
+        rg = gplan.group("flat", "reduce")
+        if rg is not None:
+            shard = psum_scatter_flat(WP.pack_reduce(rg, fp_segs), dp_axes)
+            for slot, sh in WP.unpack_reduce(rg, shard).items():
+                shards[slot] = sh.astype(jnp.float32) / D
+        recv_flat = _exchange_stage(gplan, "flat", wires, dp_axes)
+        recv_h1 = (_exchange_stage(gplan, "hier1", wires, (dp_axes[-1],))
+                   if any_hier else {})
 
     # --- decode flat runs; hier runs: pod mean -> stage-2 encode -----------
     wires2: dict[int, dict[str, jax.Array]] = {}
     hier_codec2: dict[int, "codec_lib.Codec"] = {}
-    for run in runs:
-        cfg = run.sync
-        if cfg.strategy == "fp":
-            continue
-        codec = codec_lib.get_codec(cfg)
-        seg_n = D * run.chunk_total
-        if not cfg.hierarchical:
-            recv = dict(recv_flat.get(run.slot, {}))
-            recv.update(_none_leaves(codec, seg_n, wires[run.slot], D))
-            shards[run.slot] = codec.decode_mean(recv)
-            continue
-        recv1 = dict(recv_h1.get(run.slot, {}))
-        recv1.update(_none_leaves(codec, seg_n, wires[run.slot], Dd))
-        pod_mean = codec.decode_mean(recv1)            # (seg / Dd,) fp32
-        cfg2 = loco_lib.validate_stage2(cfg)
-        codec2 = codec_lib.get_codec(cfg2)
-        n2 = pod_mean.shape[0]
-        wires2[run.slot], _ = codec2.encode(pod_mean, codec2.init_state(n2),
-                                            None)
-        hier_codec2[run.slot] = codec2
+    with PROF.phase("decode"):
+        for run in runs:
+            cfg = run.sync
+            if cfg.strategy == "fp":
+                continue
+            codec = codec_lib.get_codec(cfg)
+            seg_n = D * run.chunk_total
+            if not cfg.hierarchical:
+                recv = dict(recv_flat.get(run.slot, {}))
+                recv.update(_none_leaves(codec, seg_n, wires[run.slot], D))
+                shards[run.slot] = codec.decode_mean(recv)
+                continue
+            recv1 = dict(recv_h1.get(run.slot, {}))
+            recv1.update(_none_leaves(codec, seg_n, wires[run.slot], Dd))
+            pod_mean = codec.decode_mean(recv1)        # (seg / Dd,) fp32
+            cfg2 = loco_lib.validate_stage2(cfg)
+            codec2 = codec_lib.get_codec(cfg2)
+            n2 = pod_mean.shape[0]
+            wires2[run.slot], _ = codec2.encode(pod_mean,
+                                                codec2.init_state(n2), None)
+            hier_codec2[run.slot] = codec2
 
     # --- stage 2 (DCN): packed exchange across pods ------------------------
     if wires2:
-        recv_h2 = _exchange_stage(gplan, "hier2", wires2, (dp_axes[0],))
-        for run in runs:
-            if run.slot not in wires2:
-                continue
-            codec2 = hier_codec2[run.slot]
-            n2 = D * run.chunk_total // Dd
-            recv2 = dict(recv_h2.get(run.slot, {}))
-            recv2.update(_none_leaves(codec2, n2, wires2[run.slot], Pp))
-            shards[run.slot] = codec2.decode_mean(recv2)
+        with PROF.phase("exchange"):
+            recv_h2 = _exchange_stage(gplan, "hier2", wires2, (dp_axes[0],))
+        with PROF.phase("decode"):
+            for run in runs:
+                if run.slot not in wires2:
+                    continue
+                codec2 = hier_codec2[run.slot]
+                n2 = D * run.chunk_total // Dd
+                recv2 = dict(recv_h2.get(run.slot, {}))
+                recv2.update(_none_leaves(codec2, n2, wires2[run.slot], Pp))
+                shards[run.slot] = codec2.decode_mean(recv2)
 
     # runs are in chunk-space offset order, each shard spans its whole run
     return (jnp.concatenate([shards[run.slot] for run in runs]),
@@ -556,22 +568,30 @@ def hierarchical_sync(
 
     # --- stage 1 (ICI): own codec, intra-pod exchange ----------------------
     codec = codec_lib.get_codec(cfg)
-    wire, new_state = codec.encode(g, state, key)
-    # regroup split leaves into intra-pod row order, then run the ordinary
-    # wire exchange restricted to the data axis (gather/none leaves need no
-    # regrouping — they are per-node, not per-chunk).
-    shapes1 = codec.wire_shapes(n)
-    wire1 = {name: (_regroup_chunks(wire[name], Pp, Dd).reshape(-1)
-                    if leaf.comm == "split" else wire[name])
-             for name, leaf in shapes1.items()}
-    recv1 = exchange_wire(wire1, shapes1, Dd, (data_axis,), coalesce=coalesce)
-    pod_mean = codec.decode_mean(recv1)              # (Pp * c,) fp32
+    with PROF.phase("encode"):
+        wire, new_state = codec.encode(g, state, key)
+        # regroup split leaves into intra-pod row order, then run the
+        # ordinary wire exchange restricted to the data axis (gather/none
+        # leaves need no regrouping — they are per-node, not per-chunk).
+        shapes1 = codec.wire_shapes(n)
+        wire1 = {name: (_regroup_chunks(wire[name], Pp, Dd).reshape(-1)
+                        if leaf.comm == "split" else wire[name])
+                 for name, leaf in shapes1.items()}
+    with PROF.phase("exchange"):
+        recv1 = exchange_wire(wire1, shapes1, Dd, (data_axis,),
+                              coalesce=coalesce)
+    with PROF.phase("decode"):
+        pod_mean = codec.decode_mean(recv1)          # (Pp * c,) fp32
 
     # --- stage 2 (DCN): stateless re-encode across pods --------------------
     cfg2 = loco_lib.validate_stage2(cfg)
     codec2 = codec_lib.get_codec(cfg2)
     n2 = pod_mean.shape[0]
-    wire2, _ = codec2.encode(pod_mean, codec2.init_state(n2), None)
-    recv2 = exchange_wire(wire2, codec2.wire_shapes(n2), Pp, (pod_axis,),
-                          coalesce=coalesce)
-    return codec2.decode_mean(recv2), new_state
+    with PROF.phase("encode"):
+        wire2, _ = codec2.encode(pod_mean, codec2.init_state(n2), None)
+    with PROF.phase("exchange"):
+        recv2 = exchange_wire(wire2, codec2.wire_shapes(n2), Pp, (pod_axis,),
+                              coalesce=coalesce)
+    with PROF.phase("decode"):
+        shard = codec2.decode_mean(recv2)
+    return shard, new_state

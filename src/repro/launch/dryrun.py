@@ -89,6 +89,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # newer jax: one dict per program
+            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
         # trip-count-aware static analysis (cost_analysis counts scan bodies
         # once -- see analysis/hlo_stats.py)
@@ -140,6 +142,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             collectives=dict(counts={k: round(v) for k, v in st.coll_counts.items()},
                              bytes_by_kind={k: round(v) for k, v in st.coll_bytes.items()},
                              wire_bytes=round(st.wire_bytes)),
+            overlap=HS.overlap_stats(hlo).to_json(),
             roofline=terms,
             model_flops_per_device=model_flops_dev,
             useful_flops_ratio=(model_flops_dev / flops) if flops else None,
@@ -160,9 +163,11 @@ def _emit(rec: dict, out_dir: str | None) -> dict:
     extra = ""
     if status == "ok":
         r = rec["roofline"]
+        ov = rec.get("overlap", {})
         extra = (f" compile={rec['compile_s']}s peak={rec['memory']['peak_bytes']/2**30:.2f}GiB "
                  f"dom={r['dominant']} c/m/n={r['compute_s']:.4f}/{r['memory_s']:.4f}/"
-                 f"{r['collective_s']:.4f}s")
+                 f"{r['collective_s']:.4f}s"
+                 f" ovl={ov.get('overlap_fraction', 0.0):.0%}")
     elif status == "skipped":
         extra = " " + rec["reason"]
     else:

@@ -28,7 +28,8 @@ from repro.core import loco as loco_lib
 from repro.core import policy as POL
 from repro.core.flatparam import MeshTopo, ParamGroup
 from repro.core.loco import SyncConfig, maybe_reset
-from repro.telemetry import wire as WIRE
+from repro.telemetry import metrics as METRICS
+from repro.telemetry import profiler as PROF
 from repro.models import transformer as TF
 from repro.models.common import KVCache
 from repro.models.transformer import DecoderLM, DecodeState, head_layout, vocab_padded
@@ -74,7 +75,10 @@ class RunConfig:
     # with the per-bucket schedule; off = the legacy launch pattern
     # (escape hatch, `--no-coalesce`).
     coalesce: bool = True
-    # Log decoded error-feedback norms each step (adds a small reduction).
+    # In-graph compression-health metrics (telemetry/metrics, DESIGN.md
+    # §14): per-unit error norms / saturation rates / scale stats beside
+    # the loss.  Zero extra collectives — the packed metrics vector rides
+    # the loss reduction — and no retrace (static schema).
     telemetry: bool = False
 
     def wants_buckets(self) -> bool:
@@ -239,6 +243,10 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
     accum = local_batch // micro
     mask = {g.name: {i.name: jnp.float32(1.0 if i.decay else 0.0) for i in g.infos}
             for g in groups}
+    # static metrics schema: unit layout + key set fixed at build time, so
+    # the packed vector, finalize keys and out_specs agree without tracing
+    munits = (METRICS.metric_units(groups, sync, plan, topo, run.coalesce)
+              if run.telemetry else ())
 
     def reset_states(states_l, step):
         """Per-unit error reset: every state unit follows its own
@@ -300,22 +308,35 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
                     s2 = s2 / topo.tp
                 local_sq = local_sq + s2
         gnorm = jnp.sqrt(jax.lax.psum(local_sq, topo.dp_axes + (topo.tp_axis,)))
+        grads_sync = grads  # pre-clip synchronized grads (metrics probe)
         if run.clip_norm:
             cs = jnp.minimum(1.0, run.clip_norm / jnp.maximum(gnorm, 1e-12))
             grads = jax.tree.map(lambda g: g * cs, grads)
 
         lr = sched(step)
-        new_chunks_l, new_opt_l = opt.update(grads, opt_l, chunks_l, step, lr, mask)
+        with PROF.phase("apply"):
+            new_chunks_l, new_opt_l = opt.update(grads, opt_l, chunks_l,
+                                                 step, lr, mask)
         new_states_l = reset_states(states_l, step + 1)
 
-        loss = jax.lax.pmean(jnp.mean(losses), topo.dp_axes)
-        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        loss_local = jnp.mean(losses)
+        metrics = {"gnorm": gnorm, "lr": lr}
         if run.telemetry:
-            esq = WIRE.error_sq_norm_local(new_states_l, groups, sync, plan,
-                                           tp=topo.tp,
-                                           coalesce=run.coalesce)
-            metrics["err_norm"] = jnp.sqrt(
-                jax.lax.psum(esq, topo.dp_axes + (topo.tp_axis,)))
+            # The packed metrics vector rides the loss reduction: the loss
+            # is TP-replicated, so psum over dp+tp divided by dp*tp equals
+            # the metrics-off pmean over dp — same all-reduce count either
+            # way (the zero-extra-collectives contract, DESIGN.md §14).
+            with PROF.phase("metrics"):
+                mvec = METRICS.local_vector(munits, grads_sync, states_l,
+                                            chunks_l, new_chunks_l, groups,
+                                            topo.tp)
+                packed = jax.lax.psum(
+                    jnp.concatenate([loss_local[None], mvec]),
+                    topo.dp_axes + (topo.tp_axis,))
+                metrics["loss"] = packed[0] / (topo.dp * topo.tp)
+                metrics.update(METRICS.finalize(packed[1:], munits))
+        else:
+            metrics["loss"] = jax.lax.pmean(loss_local, topo.dp_axes)
         new_chunks = unsqueeze_like(new_chunks_l, chunks)
         new_states = unsqueeze_like(new_states_l, states)
         new_opt = tuple(unsqueeze_like(t, chunks) for t in new_opt_l)
@@ -331,8 +352,8 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
     else:
         batch_spec = {"tokens": P(dp, None)}
     metric_specs = {"loss": P(), "gnorm": P(), "lr": P()}
-    if run.telemetry:
-        metric_specs["err_norm"] = P()
+    for k in METRICS.metric_keys(munits) if run.telemetry else ():
+        metric_specs[k] = P()
     in_specs = (cspec, sspec, opt_spec, P(), batch_spec)
     out_specs = (cspec, sspec, opt_spec, metric_specs)
     sm = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
@@ -354,7 +375,7 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
         helpers=dict(model=model, groups=groups, topo=topo, opt=opt,
                      cspec=cspec, sspec=sspec, opt_spec=opt_spec,
                      batch_spec=batch_spec, local_batch=local_batch,
-                     micro=micro, accum=accum, plan=plan),
+                     micro=micro, accum=accum, plan=plan, munits=munits),
     )
 
 

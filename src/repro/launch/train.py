@@ -27,6 +27,8 @@ from repro.data.synthetic import DataConfig, make_batch_fn, make_whisper_batch_f
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.launch.steps import (RunConfig, make_init, make_train_step,
                                 state_fingerprint)
+from repro.telemetry import profiler as PROF
+from repro.telemetry import sink as SINK
 from repro.telemetry import wire as WIRE
 
 
@@ -72,7 +74,23 @@ def build_args(argv=None):
                          "the legacy one-collective-per-bucket-leaf "
                          "schedule)")
     ap.add_argument("--telemetry", action="store_true",
-                    help="log decoded error-feedback norms each step")
+                    help="compute the in-graph compression-health metrics "
+                         "(error norms, saturation/clip rates, scale stats, "
+                         "update ratios) inside the jitted step -- no extra "
+                         "collectives (DESIGN.md §14)")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="stream structured telemetry records to a JSONL "
+                         "file (header/step/warning/summary schema, "
+                         "repro.telemetry.sink); implies --telemetry")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="step record cadence for --metrics-jsonl "
+                         "(0 = follow --log-every)")
+    ap.add_argument("--profile-steps", default=None, metavar="N[:M]",
+                    help="capture a jax.profiler trace for the inclusive "
+                         "step window N:M (phase annotation via "
+                         "loco/encode|exchange|decode|apply scopes)")
+    ap.add_argument("--profile-dir", default="/tmp/loco_trace",
+                    help="output dir for --profile-steps traces")
     ap.add_argument("--optimizer", default="adam")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--schedule", default="cosine")
@@ -111,7 +129,7 @@ def make_run(args) -> RunConfig:
                      total_steps=args.steps, microbatch=args.microbatch,
                      bucket_bytes=int(args.bucket_mb * (1 << 20)),
                      policy=policy, coalesce=args.coalesce,
-                     telemetry=args.telemetry)
+                     telemetry=args.telemetry or bool(args.metrics_jsonl))
 
 
 def main(argv=None):
@@ -130,22 +148,21 @@ def main(argv=None):
     init_fn, _ = make_init(cfg, run, mesh)
     chunks, states, opt = init_fn(jax.random.PRNGKey(args.seed))
     bundle = make_train_step(cfg, run, mesh, shape)
+    topo = bundle.helpers["topo"]
     plan = bundle.helpers["plan"]
-    if plan is not None:
-        pods = bundle.helpers["topo"].pods
-        print(WIRE.format_report(WIRE.plan_report(plan, pods=pods)), flush=True)
+    wire_rep = WIRE.plan_report(plan, pods=topo.pods) if plan is not None else None
+    if wire_rep is not None:
+        print(WIRE.format_report(wire_rep), flush=True)
     dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
                     global_batch=args.global_batch, seed=args.seed)
     batch_fn = (make_whisper_batch_fn(dc, cfg.d_model, cfg.dec_len)
                 if cfg.enc_dec else make_batch_fn(dc))
 
+    # the *target* plan's fingerprint is built before any restore, so a
+    # layout change either reshards explicitly or fails loudly up front
+    ckpt_fp = state_fingerprint(run, bundle.helpers["groups"], topo, plan)
     start = 0
-    ckpt_fp = None
     if args.ckpt_dir:
-        # the *target* plan's fingerprint is built before any restore, so a
-        # layout change either reshards explicitly or fails loudly up front
-        ckpt_fp = state_fingerprint(run, bundle.helpers["groups"],
-                                    bundle.helpers["topo"], plan)
         latest = CKPT.latest_step(args.ckpt_dir)
         if latest is not None:
             state = CKPT.restore(args.ckpt_dir, latest,
@@ -156,23 +173,103 @@ def main(argv=None):
             start = latest
             print(f"restored step {latest}")
 
-    t0 = time.time()
+    sink = None
+    if args.metrics_jsonl:
+        sink = SINK.MetricsSink(args.metrics_jsonl, header=dict(
+            run={k: v for k, v in vars(args).items()},
+            fingerprint=ckpt_fp,
+            topo=dict(dp=topo.dp, tp=topo.tp, pods=topo.pods,
+                      dp_axes=list(topo.dp_axes), tp_axis=topo.tp_axis,
+                      devices=int(mesh.devices.size)),
+        ))
+        if wire_rep is not None:
+            sink.write(wire_rep.record())
+    metrics_every = args.metrics_every or args.log_every
+    trace = (PROF.TraceSession(args.profile_dir,
+                               PROF.parse_window(args.profile_steps))
+             if args.profile_steps else None)
+
+    def scalars(m):
+        host = {k: float(v) for k, v in m.items()}
+        return (host.pop("loss"), host.pop("gnorm"), host.pop("lr"), host)
+
+    # the first executed step pays tracing + XLA compilation; timing it with
+    # the rest would fold the compile into every throughput number, so block
+    # on it separately and start the run clock after it completes.
+    peak_err = 0.0
+    step_s: list[float] = []
+    compile_s = None
+    t_run = t0 = time.time()
+    m = None
     for step in range(start, args.steps):
+        if trace is not None:
+            trace.maybe_start(step)
+        t_step = time.time()
         batch = batch_fn(jnp.int32(step))
         chunks, states, opt, m = bundle.fn(chunks, states, opt, jnp.int32(step), batch)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            dt = time.time() - t0
-            tok_s = (step - start + 1) * args.global_batch * args.seq_len / max(dt, 1e-9)
-            extra = (f" err_norm={float(m['err_norm']):.3e}"
-                     if "err_norm" in m else "")
-            print(f"step {step:5d} loss={float(m['loss']):.4f} "
-                  f"gnorm={float(m['gnorm']):.3f} lr={float(m['lr']):.2e} "
-                  f"tok/s={tok_s:,.0f}{extra}", flush=True)
+        log_step = step % args.log_every == 0 or step == args.steps - 1
+        sink_step = sink is not None and (
+            step % metrics_every == 0 or step == args.steps - 1)
+        timed = sink is not None or trace is not None or compile_s is None
+        if timed:
+            jax.block_until_ready(m["loss"])
+            dt = time.time() - t_step
+            if compile_s is None:
+                compile_s = dt
+                t_run = time.time()
+                print(f"compiled + step {step} in {compile_s:.1f}s", flush=True)
+            else:
+                step_s.append(dt)
+        if trace is not None:
+            trace.maybe_stop(step)
+        if log_step or sink_step:
+            loss, gnorm, lr, extra_m = scalars(m)
+            peak_err = max(peak_err, extra_m.get("err_norm", 0.0))
+            if sink_step:
+                sink.step(step, loss=loss, gnorm=gnorm, lr=lr,
+                          step_ms=step_s[-1] * 1e3 if step_s else None,
+                          metrics=extra_m)
+            if log_step:
+                # post-compile throughput: the first executed step is the
+                # compile step and is excluded from the clock
+                n_run = step - start if compile_s is not None else step - start + 1
+                tok_s = (n_run * args.global_batch * args.seq_len
+                         / max(time.time() - t_run, 1e-9))
+                extra = (f" err_norm={extra_m['err_norm']:.3e}"
+                         if "err_norm" in extra_m else "")
+                print(f"step {step:5d} loss={loss:.4f} "
+                      f"gnorm={gnorm:.3f} lr={lr:.2e} "
+                      f"tok/s={tok_s:,.0f}{extra}", flush=True)
         if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
             CKPT.save(args.ckpt_dir, step + 1,
                       {"chunks": chunks, "states": states, "opt": opt},
                       fingerprint=ckpt_fp, keep=args.ckpt_keep)
-    print(f"done in {time.time()-t0:.1f}s")
+    if trace is not None:
+        trace.stop()
+    if m is None:  # restored at/after the final step: nothing ran
+        if sink is not None:
+            sink.close()
+        print("nothing to do (restored step >= --steps)")
+        return float("nan")
+    jax.block_until_ready(m["loss"])
+    n_steps = args.steps - start
+    n_run = max(n_steps - 1, 0)  # post-compile steps
+    run_dt = time.time() - t_run
+    tok_s = n_run * args.global_batch * args.seq_len / max(run_dt, 1e-9)
+    print(f"done: {n_steps} steps in {time.time()-t0:.1f}s "
+          f"(compile {compile_s:.1f}s + run {run_dt:.1f}s, "
+          f"{tok_s:,.0f} tok/s post-compile)", flush=True)
+    if sink is not None:
+        sink.summary(
+            steps=n_steps, compile_s=compile_s,
+            step_ms=SINK.percentiles([s * 1e3 for s in step_s]),
+            tokens_per_s=tok_s,
+            wire_mib_per_step=(wire_rep.total_wire / 2**20
+                               if wire_rep is not None else None),
+            peak_err_norm=peak_err,
+        )
+        sink.close()
+        print(f"telemetry: {sink.path}", flush=True)
     return float(m["loss"])
 
 

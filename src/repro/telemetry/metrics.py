@@ -1,0 +1,247 @@
+"""In-graph compression-health metrics for the jitted train step.
+
+The step function can only observe what survives the custom_vjp cotangent
+hijack: the *synchronized* gradient chunks and the updated error-feedback
+states.  The wire payloads themselves exist only inside the backward pass
+and cannot escape (the cotangent structure must mirror the primals), so
+this module derives runtime health from what IS materialized:
+
+* **error-state metrics** (exact): decoded squared error norms per state
+  unit — the same quantity ``wire.bucket_error_sq_norms`` computed ad hoc,
+  now schema'd per unit — plus the fraction of stored error values pinned
+  at the error codec's bound (f8 ±448 / int8 ±127) and non-finite counts.
+* **quantizer probe** (documented proxy): each unit's slice of the
+  synchronized gradient chunk is re-quantized locally with the unit's own
+  wire config (``Codec.grad_metrics``), yielding saturation/clip rates at
+  the int4/int8 bounds and log2-scale dynamic-range stats.  Pure local
+  compute over an already-materialized array — the scales track the same
+  dynamic range the per-node encode saw, without exporting payloads from
+  the backward.
+* **global ratios**: parameter / update squared norms for the
+  gradient-update norm ratio.
+
+Zero extra collectives, by construction: every metric is a psum-able sum
+(counts, sums, sums of squares), packed into ONE flat f32 vector that
+rides the SAME two all-reduces the metrics-off step already launches —
+the scalar grad-norm psum stays untouched, and the loss pmean widens into
+a vector psum carrying the metrics (the loss is TP-replicated, so
+``psum(loss, dp+tp) / (dp * tp)`` equals the old ``pmean(loss, dp)``).
+``analysis.hlo_stats.collective_launches`` is therefore identical with
+metrics on or off (pinned in tests/test_metrics.py, like PR 5 pinned the
+coalescer).  Rates and means are finalized *after* the psum.
+
+The schema is static: :func:`metric_units` derives one
+:class:`MetricUnit` per non-fp state unit from the plan (encode runs under
+``coalesce``, buckets otherwise; the whole chunk on the monolithic path),
+so the packed vector layout, the finalized key set and the shard_map
+out_specs agree without tracing — no retraces, no dynamic shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec as codec_lib
+from repro.core import flatparam as FP
+from repro.core.buckets import SyncPlan
+from repro.core.flatparam import MeshTopo
+from repro.core.loco import SyncConfig
+
+# Per-unit slots of the packed metrics vector.  All are plain sums over
+# the dp x tp device grid (TP-replicated params pre-scaled by 1/tp, the
+# grad-norm convention), so one vector psum reduces everything at once.
+UNIT_FIELDS = (
+    "sat_cnt",         # values at the quantizer's qmin/qmax bound
+    "sat_tot",         # values probed
+    "scale_l2_sum",    # sum of log2(scale) over probe scales
+    "scale_l2_sqsum",  # sum of log2(scale)^2
+    "scale_cnt",       # probe scales counted
+    "scale_bad",       # non-finite probe scales (NaN/Inf gradient detector)
+    "err_sq",          # decoded error-feedback squared norm
+    "err_sat_cnt",     # stored error values pinned at the codec bound
+    "err_tot",         # stored error values
+    "err_bad",         # non-finite decoded error values
+)
+GLOBAL_FIELDS = ("param_sq", "update_sq")
+NF = len(UNIT_FIELDS)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricUnit:
+    """Static description of one metered state unit (schema row)."""
+
+    key: str              # "group/param[unit]" — prefix of the metric keys
+    group: str
+    name: str
+    unit: int             # index into the per-param state tuple (-1 = bare)
+    offset: int           # chunk-space start of the probe slice
+    chunk_elems: int      # chunk-space length of the probe slice
+    sync: SyncConfig
+    tp_replicated: bool
+    stateful: bool
+
+
+def metric_units(groups, sync: SyncConfig, plan: "SyncPlan | None",
+                 topo: MeshTopo, coalesce: bool = True) -> tuple[MetricUnit, ...]:
+    """One schema row per non-fp state unit, in state-tuple order.
+
+    Unit granularity mirrors the stored state layout (``FP.state_units``):
+    encode runs under ``coalesce``, wire buckets otherwise, the whole
+    chunk on the monolithic path.  ``fp`` units have neither a wire codec
+    to probe nor an error state and are skipped (their state-tuple slots
+    stay, which is why each row records its tuple index).
+    """
+    out = []
+    for g in groups:
+        for info in g.infos:
+            if not info.loco:
+                continue
+            rep = info.tp_dim is None and topo.tp > 1
+            if plan is None:
+                if sync.strategy == "fp":
+                    continue
+                out.append(MetricUnit(
+                    key=f"{g.name}/{info.name}", group=g.name, name=info.name,
+                    unit=-1, offset=0,
+                    chunk_elems=info.chunklen(topo.tp, topo.dp),
+                    sync=sync, tp_replicated=rep,
+                    stateful=sync.needs_state()))
+                continue
+            pp = plan.lookup(g.name, info.name)
+            units = FP.state_units(pp, coalesce)
+            for ui, u in enumerate(units):
+                if u.sync.strategy == "fp":
+                    continue
+                key = (f"{g.name}/{info.name}" if len(units) == 1
+                       else f"{g.name}/{info.name}[{ui}]")
+                out.append(MetricUnit(
+                    key=key, group=g.name, name=info.name, unit=ui,
+                    offset=u.offset, chunk_elems=u.chunk_elems, sync=u.sync,
+                    tp_replicated=rep, stateful=u.sync.needs_state()))
+    return tuple(out)
+
+
+def _unit_state(u: MetricUnit, states_l):
+    s = states_l[u.group][u.name]
+    return s[u.unit] if u.unit >= 0 else s
+
+
+def _unit_local(u: MetricUnit, grads, states_l, tp: int) -> jax.Array:
+    """(NF,) f32 sums for one unit on this device (before psum)."""
+    seg = grads[u.group][u.name][..., u.offset:u.offset + u.chunk_elems]
+    codec = codec_lib.get_codec(u.sync)
+    vals = {f: jnp.float32(0) for f in UNIT_FIELDS}
+    vals.update(codec.grad_metrics(seg.reshape(-1)))
+    if u.stateful:
+        vals.update(codec.state_metrics(_unit_state(u, states_l)))
+    vec = jnp.stack([jnp.asarray(vals[f], jnp.float32) for f in UNIT_FIELDS])
+    if u.tp_replicated:
+        # identical on every TP rank: pre-scale so the dp x tp psum yields
+        # one copy (counts turn fractional but every derived rate is exact)
+        vec = vec / tp
+    return vec
+
+
+def _norm_sq_local(tree, groups, tp: int) -> jax.Array:
+    """TP-replication-aware local squared norm of a chunk-shaped tree."""
+    total = jnp.float32(0)
+    for g in groups:
+        for info in g.infos:
+            s2 = jnp.sum(tree[g.name][info.name].astype(jnp.float32) ** 2)
+            if info.tp_dim is None and tp > 1:
+                s2 = s2 / tp
+            total = total + s2
+    return total
+
+
+def local_vector(units: tuple[MetricUnit, ...], grads, states_l,
+                 chunks_l, new_chunks_l, groups, tp: int) -> jax.Array:
+    """The packed local metrics vector: ``len(units) * NF + 2`` f32 sums.
+
+    ``grads`` is the *pre-clip* synchronized gradient tree, ``states_l``
+    the post-scan (pre-reset) compressor states; the trailing globals are
+    the parameter and update squared norms.  The caller psums this (with
+    the loss prepended) over the dp and tp axes, then calls
+    :func:`finalize`.
+    """
+    rows = [_unit_local(u, grads, states_l, tp) for u in units]
+    upd = jax.tree.map(lambda a, b: a - b, new_chunks_l, chunks_l)
+    tail = jnp.stack([_norm_sq_local(chunks_l, groups, tp),
+                      _norm_sq_local(upd, groups, tp)])
+    return jnp.concatenate(rows + [tail]) if rows else tail
+
+
+def _unit_keys(u: MetricUnit) -> tuple[str, ...]:
+    ks = (f"{u.key}/sat_rate", f"{u.key}/scale_log2_mean",
+          f"{u.key}/scale_log2_std")
+    if u.stateful:
+        ks += (f"{u.key}/err_sq", f"{u.key}/err_sat_rate")
+    ks += (f"{u.key}/nonfinite",)
+    return ks
+
+
+GLOBAL_KEYS = ("err_norm", "sat_rate", "param_norm", "update_norm",
+               "update_ratio", "nonfinite")
+
+
+def metric_keys(units: tuple[MetricUnit, ...]) -> tuple[str, ...]:
+    """Every key :func:`finalize` emits, in order (drives the out_specs)."""
+    out: list[str] = []
+    for u in units:
+        out.extend(_unit_keys(u))
+    out.extend(GLOBAL_KEYS)
+    return tuple(out)
+
+
+def finalize(red: jax.Array, units: tuple[MetricUnit, ...]) -> dict:
+    """Globally-reduced packed vector -> flat {key: scalar} metrics tree."""
+    out: dict[str, jax.Array] = {}
+    sat_c = sat_t = err_sq = bad = jnp.float32(0)
+    for i, u in enumerate(units):
+        v = dict(zip(UNIT_FIELDS, red[i * NF:(i + 1) * NF]))
+        out[f"{u.key}/sat_rate"] = v["sat_cnt"] / jnp.maximum(v["sat_tot"], 1)
+        mean = v["scale_l2_sum"] / jnp.maximum(v["scale_cnt"], 1)
+        var = v["scale_l2_sqsum"] / jnp.maximum(v["scale_cnt"], 1) - mean ** 2
+        out[f"{u.key}/scale_log2_mean"] = mean
+        out[f"{u.key}/scale_log2_std"] = jnp.sqrt(jnp.maximum(var, 0.0))
+        if u.stateful:
+            out[f"{u.key}/err_sq"] = v["err_sq"]
+            out[f"{u.key}/err_sat_rate"] = (
+                v["err_sat_cnt"] / jnp.maximum(v["err_tot"], 1))
+        out[f"{u.key}/nonfinite"] = v["scale_bad"] + v["err_bad"]
+        sat_c += v["sat_cnt"]
+        sat_t += v["sat_tot"]
+        err_sq += v["err_sq"]
+        bad += v["scale_bad"] + v["err_bad"]
+    param_sq, update_sq = red[len(units) * NF], red[len(units) * NF + 1]
+    pn = jnp.sqrt(param_sq)
+    un = jnp.sqrt(update_sq)
+    out["err_norm"] = jnp.sqrt(err_sq)
+    out["sat_rate"] = sat_c / jnp.maximum(sat_t, 1)
+    out["param_norm"] = pn
+    out["update_norm"] = un
+    out["update_ratio"] = un / jnp.maximum(pn, 1e-12)
+    out["nonfinite"] = bad
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-unit error norms outside the step (checkpoint inspection, tests)
+# ---------------------------------------------------------------------------
+
+def error_sq_norms(states, pplan, coalesce: bool = True) -> tuple:
+    """Squared L2 norm of each state unit's decoded error (local device).
+
+    The schema'd home of what ``wire.bucket_error_sq_norms`` computed ad
+    hoc (that name now delegates here).
+    """
+    out = []
+    for s, u in zip(states, FP.state_units(pplan, coalesce)):
+        if u.sync.needs_state():
+            e = codec_lib.get_codec(u.sync).state_decode(s)
+            out.append(jnp.sum(e.astype(jnp.float32) ** 2))
+        else:
+            out.append(jnp.float32(0))
+    return tuple(out)

@@ -1,0 +1,79 @@
+"""Phase-level trace annotation for the sync path (DESIGN.md §14).
+
+Two complementary mechanisms:
+
+* :func:`phase` — a ``jax.named_scope`` wrapper applied at *trace* time
+  around the sync phases (``encode`` -> ``exchange`` -> ``decode`` in
+  core/comm, ``apply``/``metrics`` in launch/steps).  The scope names land
+  in the lowered HLO metadata (``op_name=".../loco/encode/..."``), so XLA
+  profiler traces and HLO dumps show the comm structure by name.  Opcode
+  and instruction-name text are unchanged, so ``analysis.hlo_stats``
+  parses annotated modules identically (pinned in tests/test_metrics.py).
+* :class:`TraceSession` + :func:`parse_window` — host-side capture of a
+  ``jax.profiler.start_trace`` dir for a step window (``--profile-steps
+  N:M`` in launch/train.py).  Capture failures degrade to a warning: a
+  missing profiler backend must never kill a training run.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+
+PHASES = ("encode", "exchange", "decode", "apply", "metrics")
+
+
+def phase(name: str):
+    """Named scope for one sync phase (trace-time; nestable)."""
+    return jax.named_scope(f"loco/{name}")
+
+
+def parse_window(spec: str) -> tuple[int, int]:
+    """``"N:M"`` (inclusive step window) or ``"N"`` (single step)."""
+    try:
+        if ":" in spec:
+            a, b = spec.split(":")
+            lo, hi = int(a), int(b)
+        else:
+            lo = hi = int(spec)
+    except ValueError:
+        raise ValueError(
+            f"--profile-steps expects 'N:M' or 'N', got {spec!r}") from None
+    if lo < 0 or hi < lo:
+        raise ValueError(f"--profile-steps window {spec!r} is empty")
+    return lo, hi
+
+
+class TraceSession:
+    """Start/stop ``jax.profiler`` tracing around a step window."""
+
+    def __init__(self, trace_dir: str, window: tuple[int, int]):
+        self.trace_dir = trace_dir
+        self.lo, self.hi = window
+        self.active = False
+
+    def maybe_start(self, step: int) -> None:
+        if self.active or step != self.lo:
+            return
+        try:
+            jax.profiler.start_trace(self.trace_dir)
+            self.active = True
+            print(f"profiler: tracing steps {self.lo}..{self.hi} "
+                  f"-> {self.trace_dir}", flush=True)
+        except Exception as e:  # missing backend, busy profiler, ...
+            warnings.warn(f"profiler start failed ({e}); continuing untraced")
+            self.lo = -1  # don't retry every step
+
+    def maybe_stop(self, step: int) -> None:
+        if self.active and step >= self.hi:
+            self.stop()
+
+    def stop(self) -> None:
+        if not self.active:
+            return
+        self.active = False
+        try:
+            jax.profiler.stop_trace()
+            print(f"profiler: trace written to {self.trace_dir}", flush=True)
+        except Exception as e:
+            warnings.warn(f"profiler stop failed ({e})")

@@ -1,0 +1,264 @@
+"""Structured JSONL metrics sink + the shared record envelope.
+
+One schema for every JSON artifact the repo emits (DESIGN.md §14).  Every
+record is a single JSON line carrying the common envelope::
+
+    {"schema_version": 1, "kind": "<kind>", "t": <unix seconds>, ...}
+
+Kinds
+-----
+* ``header``  -- once per run: config dict, the train-state fingerprint
+  (repro.state.build_fingerprint, PR 4), static plan geometry / wire
+  report, mesh topology.
+* ``step``    -- per logged step: step, loss/gnorm/lr, step_ms, and the
+  flat in-graph metrics tree (telemetry/metrics).
+* ``warning`` -- a health monitor fired: monitor name, message, value.
+* ``summary`` -- once at the end: compile seconds, post-compile step-time
+  percentiles, tokens/sec, wire MiB/step, peak error norm, warning count.
+* ``wire_report`` -- WireReport.to_json's envelope (static accounting).
+* ``bench``   -- benchmarks/common.write_bench_json's envelope.
+
+The validator is hand-rolled (no jsonschema dependency) and doubles as a
+CLI for CI::
+
+    python -m repro.telemetry.sink run.jsonl --expect-healthy
+
+which exits non-zero on any malformed record, and (with
+``--expect-healthy``) on any ``warning`` record in the stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import sys
+import time
+
+SCHEMA_VERSION = 1
+KINDS = ("header", "step", "warning", "summary", "wire_report", "bench")
+
+
+def envelope(kind: str, **fields) -> dict:
+    """The common record envelope every emitter shares."""
+    assert kind in KINDS, kind
+    return {"schema_version": SCHEMA_VERSION, "kind": kind,
+            "t": time.time(), **fields}
+
+
+# ---------------------------------------------------------------------------
+# health monitors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Thresholds for the loud-warning monitors.
+
+    ``err_norm_max`` is an absolute divergence ceiling; ``err_growth_max``
+    fires on relative growth vs the smallest error norm seen (a diverging
+    error-feedback state grows without bound while gradients do not).
+    ``sat_rate_max`` flags a quantizer pinned at its bounds (block-mode
+    absmax scaling puts >= 1/block of values at the bound by construction,
+    so a healthy rate is a few percent).  Non-finite values always warn.
+    """
+
+    err_norm_max: float = 1e4
+    err_growth_max: float = 50.0
+    sat_rate_max: float = 0.5
+
+
+class HealthMonitor:
+    """Stateful step-record checks; returns warning records to append."""
+
+    def __init__(self, cfg: HealthConfig | None = None):
+        self.cfg = cfg or HealthConfig()
+        self._err_min: float | None = None
+
+    def check(self, rec: dict) -> list[dict]:
+        cfg, out = self.cfg, []
+        m = rec.get("metrics", {})
+        scalars = {"loss": rec.get("loss"), "gnorm": rec.get("gnorm"), **m}
+        for k, v in scalars.items():
+            if isinstance(v, (int, float)) and not math.isfinite(v):
+                out.append(self._warn("nonfinite", f"{k} is {v}", v))
+        if m.get("nonfinite", 0):
+            out.append(self._warn(
+                "nonfinite_values",
+                f"{m['nonfinite']:.0f} non-finite scale/error values "
+                "in-graph (NaN/Inf gradient or diverged error state)",
+                m["nonfinite"]))
+        en = m.get("err_norm")
+        if isinstance(en, (int, float)) and math.isfinite(en) and en > 0:
+            if en > cfg.err_norm_max:
+                out.append(self._warn(
+                    "err_divergence",
+                    f"error-feedback norm {en:.3e} exceeds absolute "
+                    f"threshold {cfg.err_norm_max:.1e}", en))
+            if self._err_min is not None and en > cfg.err_growth_max * self._err_min:
+                out.append(self._warn(
+                    "err_growth",
+                    f"error-feedback norm {en:.3e} grew {en / self._err_min:.0f}x "
+                    f"over the run minimum {self._err_min:.3e}", en))
+            self._err_min = en if self._err_min is None else min(self._err_min, en)
+        sr = m.get("sat_rate")
+        if isinstance(sr, (int, float)) and sr > cfg.sat_rate_max:
+            out.append(self._warn(
+                "saturation",
+                f"quantizer saturation rate {sr:.2%} exceeds "
+                f"{cfg.sat_rate_max:.0%} (scale pinned at the clip bound)",
+                sr))
+        return out
+
+    @staticmethod
+    def _warn(monitor: str, message: str, value) -> dict:
+        print(f"TELEMETRY WARNING [{monitor}]: {message}",
+              file=sys.stderr, flush=True)
+        return envelope("warning", monitor=monitor, message=message,
+                        value=float(value))
+
+
+# ---------------------------------------------------------------------------
+# the sink
+# ---------------------------------------------------------------------------
+
+class MetricsSink:
+    """Append-only JSONL stream with periodic flush and a run finalizer."""
+
+    def __init__(self, path: str, header: dict | None = None,
+                 flush_every: int = 20,
+                 health: HealthConfig | None = None):
+        self.path = path
+        self._f = open(path, "a")
+        self._since_flush = 0
+        self.flush_every = flush_every
+        self.monitor = HealthMonitor(health)
+        self.n_warnings = 0
+        if header is not None:
+            self.write(envelope("header", **header))
+
+    def write(self, rec: dict) -> None:
+        self._f.write(json.dumps(rec) + "\n")
+        self._since_flush += 1
+        if self._since_flush >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> None:
+        self._f.flush()
+        self._since_flush = 0
+
+    def step(self, step: int, *, loss: float, gnorm: float, lr: float,
+             step_ms: float | None, metrics: dict) -> None:
+        rec = envelope("step", step=step, loss=loss, gnorm=gnorm, lr=lr,
+                       step_ms=step_ms, metrics=metrics)
+        self.write(rec)
+        for w in self.monitor.check(rec):
+            self.n_warnings += 1
+            self.write(w)
+
+    def summary(self, **fields) -> None:
+        self.write(envelope("summary", warnings=self.n_warnings, **fields))
+
+    def close(self) -> None:
+        self.flush()
+        self._f.close()
+
+
+def percentiles(xs: list[float], qs=(50, 90, 99)) -> dict[str, float]:
+    """Nearest-rank percentiles of a small sample (no numpy needed)."""
+    if not xs:
+        return {f"p{q}": float("nan") for q in qs}
+    s = sorted(xs)
+    return {f"p{q}": s[min(len(s) - 1, int(round(q / 100 * (len(s) - 1))))]
+            for q in qs}
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+_REQUIRED: dict[str, dict[str, type | tuple]] = {
+    "header": {"run": dict, "topo": dict},
+    "step": {"step": int, "loss": (int, float), "gnorm": (int, float),
+             "lr": (int, float), "metrics": dict},
+    "warning": {"monitor": str, "message": str, "value": (int, float)},
+    "summary": {"steps": int, "warnings": int},
+    "wire_report": {"total_wire_bytes": int},
+    "bench": {"bench": str, "results": dict},
+}
+
+
+def validate_record(rec) -> list[str]:
+    """Schema errors of one decoded record ([] = valid)."""
+    if not isinstance(rec, dict):
+        return ["record is not a JSON object"]
+    errs = []
+    if rec.get("schema_version") != SCHEMA_VERSION:
+        errs.append(f"schema_version={rec.get('schema_version')!r} "
+                    f"(expected {SCHEMA_VERSION})")
+    kind = rec.get("kind")
+    if kind not in KINDS:
+        return errs + [f"unknown kind {kind!r}"]
+    if not isinstance(rec.get("t"), (int, float)):
+        errs.append("missing/non-numeric t")
+    for field, ty in _REQUIRED[kind].items():
+        v = rec.get(field)
+        if v is None or (not isinstance(v, ty)) or isinstance(v, bool):
+            errs.append(f"{kind}.{field}: expected {ty}, got {type(v).__name__}")
+    if kind == "step":
+        m = rec.get("metrics")
+        if isinstance(m, dict):
+            for k, v in m.items():
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    errs.append(f"step.metrics[{k!r}] is not a number")
+    return errs
+
+
+def validate_stream(path: str) -> dict:
+    """Validate a JSONL file; returns {kinds: {kind: n}, errors: [...]}."""
+    kinds: dict[str, int] = {}
+    errors: list[str] = []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"line {i}: invalid JSON ({e})")
+                continue
+            for e in validate_record(rec):
+                errors.append(f"line {i}: {e}")
+            if isinstance(rec, dict):
+                kinds[rec.get("kind", "?")] = kinds.get(rec.get("kind", "?"), 0) + 1
+    return {"kinds": kinds, "errors": errors}
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Validate a telemetry JSONL stream against the sink schema.")
+    ap.add_argument("path")
+    ap.add_argument("--expect-healthy", action="store_true",
+                    help="also fail if the stream contains warning records")
+    args = ap.parse_args(argv)
+    res = validate_stream(args.path)
+    print(f"{args.path}: " + ", ".join(
+        f"{n} {k}" for k, n in sorted(res["kinds"].items())))
+    for e in res["errors"]:
+        print(f"  SCHEMA ERROR: {e}", file=sys.stderr)
+    if res["errors"]:
+        return 1
+    if args.expect_healthy and res["kinds"].get("warning", 0):
+        print(f"  {res['kinds']['warning']} warning record(s) in a run "
+              "expected healthy", file=sys.stderr)
+        return 2
+    if not res["kinds"].get("step"):
+        print("  no step records in stream", file=sys.stderr)
+        return 3
+    print("  schema OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -232,8 +232,12 @@ class WireReport:
             out[b.tensor_class] = out.get(b.tensor_class, 0) + b.wire
         return out
 
-    def to_json(self) -> str:
-        return json.dumps({
+    def record(self) -> dict:
+        """Schema'd ``wire_report`` record (telemetry/sink envelope)."""
+        from repro.telemetry import sink
+
+        return {
+            **sink.envelope("wire_report"),
             "total_wire_bytes": self.total_wire,
             "fp32_bytes": self.fp32_bytes,
             "bf16_bytes": self.bf16_bytes,
@@ -249,7 +253,10 @@ class WireReport:
             "launches": {"per_bucket": self.launches_per_bucket,
                          "coalesced": self.launches_coalesced,
                          "comm_groups": self.comm_groups},
-        }, indent=2)
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.record(), indent=2)
 
 
 def bucket_wire(param: str, tclass: str, b: Bucket, layers: int,
@@ -351,11 +358,14 @@ def decoded_error(state, cfg: SyncConfig):
 
 
 def bucket_error_sq_norms(states, pplan: ParamPlan, coalesce: bool = True):
-    """Squared L2 norm of each state unit's decoded error (local device)."""
-    from repro.core.flatparam import state_units
+    """Squared L2 norm of each state unit's decoded error (local device).
 
-    return tuple(jnp.sum(decoded_error(s, u.sync) ** 2)
-                 for s, u in zip(states, state_units(pplan, coalesce)))
+    Delegates to :func:`repro.telemetry.metrics.error_sq_norms`, the
+    schema'd home of the per-unit error accounting (DESIGN.md §14).
+    """
+    from repro.telemetry import metrics
+
+    return metrics.error_sq_norms(states, pplan, coalesce)
 
 
 def error_sq_norm_local(states_l, groups, cfg: SyncConfig,

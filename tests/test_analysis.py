@@ -117,3 +117,97 @@ def test_collective_launch_counts_trip_weighted(mesh22):
     txt = fn.lower(jnp.zeros((64,), jnp.float32)).compile().as_text()
     counts = collective_launches(txt)
     assert counts.get("all-reduce", 0) == 5, counts
+
+
+# ---------------------------------------------------------------------------
+# compute/collective overlap estimator (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+_ASYNC_HLO = """\
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[1024], p1: f32[16]) -> f32[1024] {
+  %p0 = f32[1024] parameter(0)
+  %p1 = f32[16] parameter(1)
+  %ars = f32[1024] all-reduce-start(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %t = f32[16] add(%p1, %p1)
+  %ard = f32[1024] all-reduce-done(%ars)
+  ROOT %out = f32[1024] add(%ard, %ard)
+}
+"""
+
+
+def test_overlap_async_window_partial():
+    """Hand-countable async module at unit bandwidths: the all-reduce
+    moves 2 * 4096 * 3/4 = 6144 wire bytes; the only compute inside the
+    start..done window is a 64-byte elementwise add, so exactly 64 byte-
+    seconds are hideable."""
+    from repro.analysis.hlo_stats import overlap_stats
+
+    st = overlap_stats(_ASYNC_HLO, peak_flops=1.0, hbm_bw=1.0, ici_bw=1.0)
+    assert st.collective_s == 6144.0
+    assert st.n_async == 1 and st.n_sync == 0
+    assert st.hidden_s == 64.0  # the f32[16] add's result bytes
+    np.testing.assert_allclose(st.overlap_fraction, 64.0 / 6144.0)
+    assert st.exposed_s == 6144.0 - 64.0
+
+
+def test_overlap_async_fully_hidden():
+    """Enough compute inside the window caps hidden at the wire time."""
+    from repro.analysis.hlo_stats import overlap_stats
+
+    hlo = _ASYNC_HLO.replace("f32[16]", "f32[8192]")
+    st = overlap_stats(hlo, peak_flops=1.0, hbm_bw=1.0, ici_bw=1.0)
+    assert st.collective_s == 6144.0
+    assert st.hidden_s == 6144.0  # min(wire, 32768-byte add)
+    assert st.overlap_fraction == 1.0
+
+
+def test_overlap_sync_collective_exposes_everything():
+    """A synchronous collective (no -start/-done pair) hides nothing even
+    with compute adjacent to it."""
+    from repro.analysis.hlo_stats import overlap_stats
+
+    hlo = _ASYNC_HLO.replace(
+        "%ars = f32[1024] all-reduce-start(%p0)",
+        "%ars = f32[1024] all-reduce(%p0)").replace(
+        "%ard = f32[1024] all-reduce-done(%ars)",
+        "%ard = f32[1024] add(%ars, %ars)")
+    st = overlap_stats(hlo, peak_flops=1.0, hbm_bw=1.0, ici_bw=1.0)
+    assert st.collective_s == 6144.0
+    assert st.n_sync == 1 and st.n_async == 0
+    assert st.hidden_s == 0.0
+    assert st.overlap_fraction == 0.0
+
+
+def test_overlap_consistent_with_analyze(mesh22):
+    """On a real compiled module the estimator's totals must agree with
+    analyze(): same wire time (at ICI bandwidth), same launch count, and
+    a fraction inside [0, 1]."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis.hlo_stats import analyze, overlap_stats
+    from repro.analysis.roofline import ICI_BW
+
+    def body(x):
+        def f(c, _):
+            return jax.lax.psum(c * 2.0, "data"), None
+        y, _ = jax.lax.scan(f, x, None, length=3)
+        return y
+
+    fn = jax.jit(jax.shard_map(body, mesh=mesh22, in_specs=P("data"),
+                               out_specs=P("data"), check_vma=False))
+    txt = fn.lower(jnp.zeros((1024,), jnp.float32)).compile().as_text()
+    st = overlap_stats(txt)
+    a = analyze(txt)
+    np.testing.assert_allclose(st.collective_s, a.wire_bytes / ICI_BW,
+                               rtol=1e-9)
+    assert st.n_async + st.n_sync == sum(a.coll_counts.values())
+    assert 0.0 <= st.overlap_fraction <= 1.0
+    assert st.compute_s > 0.0

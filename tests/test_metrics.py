@@ -1,0 +1,423 @@
+"""Telemetry subsystem: in-graph metrics vs numpy oracles, the
+zero-extra-collectives contract, the JSONL sink schema, and the health
+monitors (DESIGN.md §14)."""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ShapeConfig, get_arch, reduced
+from repro.core import codec as codec_lib
+from repro.core.loco import SyncConfig
+from repro.core.quantizer import QuantConfig
+from repro.launch.steps import RunConfig, make_init, make_train_step
+from repro.telemetry import metrics as M
+from repro.telemetry import profiler as PROF
+from repro.telemetry import sink as SINK
+
+CFG = reduced(get_arch("llama2-400m"))
+SHAPE = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+
+
+# ---------------------------------------------------------------------------
+# numpy oracles for the quantizer-health probe
+# ---------------------------------------------------------------------------
+
+def _np_quant(x, sync: SyncConfig):
+    """Numpy mirror of the probe quantization (all-f32, like the jnp path)."""
+    qc = sync.quant
+    x = np.asarray(x, np.float32)
+    qmax, qmin = qc.qmax, qc.qmin
+    if qc.mode == "fixed":
+        q = np.clip(np.round(x * np.float32(qc.scale)), qmin, qmax)
+        scales = np.full((1,), qc.scale, np.float32)
+    elif qc.mode == "tensor":
+        absmax = np.max(np.abs(x))
+        scales = (np.float32(qmax) / np.maximum(absmax, np.float32(1e-30))
+                  ).reshape(1).astype(np.float32)
+        q = np.clip(np.round(x * scales[0]), qmin, qmax)
+    else:
+        xb = x.reshape(-1, qc.block)
+        absmax = np.max(np.abs(xb), axis=1, keepdims=True)
+        scales = (np.float32(qmax) / np.maximum(absmax, np.float32(1e-30))
+                  ).astype(np.float32)
+        q = np.clip(np.round(xb * scales), qmin, qmax).reshape(-1)
+        scales = scales.reshape(-1)
+    return q, scales
+
+
+CELLS = {
+    "loco4_block": SyncConfig(strategy="loco", quant=QuantConfig(mode="block")),
+    "loco8_block": SyncConfig(strategy="loco",
+                              quant=QuantConfig(bits=8, mode="block")),
+    "loco4_fixed": SyncConfig(strategy="loco",
+                              quant=QuantConfig(mode="fixed", scale=2.0**7)),
+    "loco4_tensor": SyncConfig(strategy="loco", quant=QuantConfig(mode="tensor")),
+    "ef4_block": SyncConfig(strategy="ef", quant=QuantConfig(mode="block")),
+    "naive4_block": SyncConfig(strategy="naive4", quant=QuantConfig(mode="block")),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CELLS))
+def test_grad_metrics_vs_numpy_oracle(name):
+    sync = CELLS[name]
+    rng = np.random.default_rng(0)
+    # normal bulk + outliers so fixed mode actually clips
+    x = rng.normal(size=2048).astype(np.float32) * 1e-2
+    x[::97] *= 50.0
+    got = {k: float(v) for k, v in
+           codec_lib.get_codec(sync).grad_metrics(jnp.asarray(x)).items()}
+
+    q, scales = _np_quant(x, sync)
+    qc = sync.quant
+    sat = int(np.sum((q == qc.qmax) | (q == qc.qmin)))
+    l2 = np.log2(np.maximum(scales, np.float32(1e-30)))
+    assert got["sat_cnt"] == sat, (got["sat_cnt"], sat)
+    assert got["sat_tot"] == x.size
+    assert got["scale_cnt"] == scales.size
+    assert got["scale_bad"] == 0
+    np.testing.assert_allclose(got["scale_l2_sum"], l2.sum(), rtol=1e-5)
+    np.testing.assert_allclose(got["scale_l2_sqsum"], (l2 * l2).sum(), rtol=1e-5)
+
+
+def test_grad_metrics_onebit_sign_balance():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=1024).astype(np.float32)
+    sync = SyncConfig(strategy="onebit")
+    got = {k: float(v) for k, v in
+           codec_lib.get_codec(sync).grad_metrics(jnp.asarray(x)).items()}
+    assert got["sat_cnt"] == int(np.sum(x > 0))
+    assert got["sat_tot"] == x.size
+    l1 = np.float32(np.mean(np.abs(x)))
+    np.testing.assert_allclose(got["scale_l2_sum"], np.log2(l1), rtol=1e-5)
+    assert got["scale_cnt"] == 1
+
+
+def test_grad_metrics_flags_nonfinite_gradient():
+    sync = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+    x = np.ones(512, np.float32)
+    x[3] = np.nan
+    got = codec_lib.get_codec(sync).grad_metrics(jnp.asarray(x))
+    assert float(got["scale_bad"]) >= 1  # NaN absmax -> non-finite scale
+
+
+# ---------------------------------------------------------------------------
+# state metrics: exact error-feedback accounting
+# ---------------------------------------------------------------------------
+
+def test_state_metrics_f8_saturation_and_nan():
+    sync = SyncConfig(strategy="loco", quant=QuantConfig(mode="block",
+                                                         error_codec="f8"))
+    codec = codec_lib.get_codec(sync)
+    # two values pinned at the f8 bound, one NaN, rest in range
+    stored = jnp.asarray([448.0, -448.0, 16.0, -2.0, 0.0, 1.0, 8.0,
+                          float("nan")], jnp.float32).astype(jnp.float8_e4m3fn)
+    got = {k: float(v) for k, v in codec.state_metrics(stored).items()}
+    assert got["err_sat_cnt"] == 2
+    assert got["err_tot"] == 8
+    assert got["err_bad"] == 1
+    dec = np.asarray(codec.state_decode(stored), np.float32)
+    assert math.isnan(got["err_sq"]) == bool(np.isnan((dec * dec).sum()))
+
+
+def test_state_metrics_int8_saturation():
+    sync = SyncConfig(strategy="loco", quant=QuantConfig(mode="block",
+                                                         error_codec="int8"))
+    codec = codec_lib.get_codec(sync)
+    stored = jnp.asarray([127, -127, 3, 0, -5, 126], jnp.int8)
+    got = {k: float(v) for k, v in codec.state_metrics(stored).items()}
+    assert got["err_sat_cnt"] == 2
+    assert got["err_tot"] == 6
+    assert got["err_bad"] == 0
+    oracle = np.sum((np.asarray(stored, np.float32)
+                     / np.float32(sync.quant.error_scale)) ** 2)
+    np.testing.assert_allclose(got["err_sq"], oracle, rtol=1e-6)
+
+
+def test_state_metrics_unbounded_storage_never_saturates():
+    sync = SyncConfig(strategy="ef", quant=QuantConfig(mode="block"))
+    codec = codec_lib.get_codec(sync)
+    stored = jnp.full((16,), 1e4, jnp.bfloat16)
+    got = codec.state_metrics(stored)
+    assert float(got["err_sat_cnt"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# schema plumbing: units, keys, finalize
+# ---------------------------------------------------------------------------
+
+def _bundle(mesh, telemetry, **over):
+    over.setdefault("bucket_bytes", 64 << 10)
+    run = RunConfig(sync=SyncConfig(strategy="loco",
+                                    quant=QuantConfig(mode="block")),
+                    optimizer="adam", microbatch=1,
+                    telemetry=telemetry, **over)
+    return run, make_train_step(CFG, run, mesh, SHAPE)
+
+
+def test_metric_units_schema(mesh22):
+    run, bundle = _bundle(mesh22, telemetry=True)
+    munits = M.metric_units(bundle.helpers["groups"], run.sync,
+                            bundle.helpers["plan"], bundle.helpers["topo"],
+                            run.coalesce)
+    assert munits, "plan should yield metric units"
+    keys = M.metric_keys(munits)
+    assert len(keys) == len(set(keys)), "metric keys must be unique"
+    assert keys[-len(M.GLOBAL_KEYS):] == M.GLOBAL_KEYS
+    for u in munits:
+        assert u.sync.strategy != "fp"
+        assert u.chunk_elems > 0
+        assert f"{u.key}/sat_rate" in keys
+    # finalize on a synthetic reduced vector emits exactly those keys
+    red = jnp.ones((len(munits) * M.NF + len(M.GLOBAL_FIELDS),), jnp.float32)
+    out = M.finalize(red, munits)
+    assert tuple(out) == keys
+
+
+def test_finalize_rates():
+    u = M.MetricUnit(key="g/p", group="g", name="p", unit=0, offset=0,
+                     chunk_elems=8,
+                     sync=SyncConfig(strategy="loco",
+                                     quant=QuantConfig(mode="block")),
+                     tp_replicated=False, stateful=True)
+    vals = dict(sat_cnt=5.0, sat_tot=20.0, scale_l2_sum=12.0,
+                scale_l2_sqsum=40.0, scale_cnt=4.0, scale_bad=0.0,
+                err_sq=9.0, err_sat_cnt=1.0, err_tot=10.0, err_bad=0.0)
+    red = jnp.asarray([vals[f] for f in M.UNIT_FIELDS] + [16.0, 4.0])
+    out = {k: float(v) for k, v in M.finalize(red, (u,)).items()}
+    assert out["g/p/sat_rate"] == 0.25
+    assert out["g/p/scale_log2_mean"] == 3.0
+    np.testing.assert_allclose(out["g/p/scale_log2_std"], 1.0, atol=1e-6)
+    assert out["g/p/err_sq"] == 9.0
+    np.testing.assert_allclose(out["g/p/err_sat_rate"], 0.1, rtol=1e-6)
+    assert out["err_norm"] == 3.0
+    assert out["sat_rate"] == 0.25
+    assert out["param_norm"] == 4.0
+    assert out["update_norm"] == 2.0
+    assert out["update_ratio"] == 0.5
+    assert out["nonfinite"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the step-level contract: same collectives, no retraces, oracle err_norm
+# ---------------------------------------------------------------------------
+
+def test_metrics_add_no_collectives(mesh22):
+    """The packed metrics vector rides the existing loss reduction: the
+    compiled step's trip-weighted collective launch counts are IDENTICAL
+    with telemetry on and off (the PR 6 analog of PR 5's launch pin)."""
+    from repro.analysis.hlo_stats import collective_launches
+
+    _, b_off = _bundle(mesh22, telemetry=False)
+    _, b_on = _bundle(mesh22, telemetry=True)
+    hlo_off = b_off.fn.lower(*b_off.input_shapes).compile().as_text()
+    hlo_on = b_on.fn.lower(*b_on.input_shapes).compile().as_text()
+    off = {k: round(v) for k, v in collective_launches(hlo_off).items()}
+    on = {k: round(v) for k, v in collective_launches(hlo_on).items()}
+    assert on == off, (on, off)
+
+
+def test_metrics_values_match_state_oracle(mesh22, monkeypatch):
+    """Run real steps with telemetry on: the in-graph err_norm (psum of
+    local decoded sums) must equal the norm recomputed on the host from
+    the returned global states, the metrics must stay finite, and the
+    step must trace exactly once (no retraces at steady state)."""
+    calls = []
+    orig = M.local_vector
+
+    def counting(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(M, "local_vector", counting)
+
+    run, bundle = _bundle(mesh22, telemetry=True)
+    init_fn, _ = make_init(CFG, run, mesh22)
+    chunks, states, opt = init_fn(jax.random.PRNGKey(0))
+    from repro.data.synthetic import DataConfig, make_batch_fn
+    bf = make_batch_fn(DataConfig(vocab=CFG.vocab, seq_len=SHAPE.seq_len,
+                                  global_batch=SHAPE.global_batch, seed=0))
+    for i in range(3):
+        chunks, states, opt, m = bundle.fn(chunks, states, opt,
+                                           jnp.int32(i), bf(jnp.int32(i)))
+    assert len(calls) == 1, f"metrics built {len(calls)} times (retrace)"
+
+    munits = M.metric_units(bundle.helpers["groups"], run.sync,
+                            bundle.helpers["plan"], bundle.helpers["topo"],
+                            run.coalesce)
+    # host-side oracle from the returned global states
+    err_sq = 0.0
+    for u in munits:
+        if not u.stateful:
+            continue
+        s = states[u.group][u.name]
+        s = s[u.unit] if u.unit >= 0 else s
+        e = np.asarray(codec_lib.get_codec(u.sync).state_decode(s), np.float32)
+        err_sq += float((e.astype(np.float64) ** 2).sum())
+        np.testing.assert_allclose(float(m[f"{u.key}/err_sq"]),
+                                   (e * e).sum(), rtol=1e-4)
+    np.testing.assert_allclose(float(m["err_norm"]), np.sqrt(err_sq), rtol=1e-4)
+    for k, v in m.items():
+        assert np.isfinite(float(v)), (k, float(v))
+    assert float(m["nonfinite"]) == 0.0
+    assert 0.0 <= float(m["sat_rate"]) <= 1.0
+    assert float(m["update_ratio"]) > 0.0
+
+
+def test_monolithic_metric_units(mesh22):
+    """The unbucketed legacy path still gets schema'd units (one per
+    loco-synced param, probing the whole chunk)."""
+    run, bundle = _bundle(mesh22, telemetry=True, bucket_bytes=0)
+    assert bundle.helpers["plan"] is None
+    munits = bundle.helpers["munits"]
+    assert munits and all(u.unit == -1 and u.offset == 0 for u in munits)
+    out = bundle.fn.lower(*bundle.input_shapes).compile().as_text()
+    assert out  # compiles
+
+
+def test_named_scope_keeps_hlo_parseable(mesh22):
+    """loco/<phase> named scopes only touch HLO metadata: the analyzer
+    sees the same collective launches with and without annotation."""
+    from repro.analysis.hlo_stats import collective_launches
+
+    def plain(x):
+        return jax.lax.psum(x, "data")
+
+    def scoped(x):
+        with PROF.phase("exchange"):
+            return jax.lax.psum(x, "data")
+
+    def compile_(f):
+        fn = jax.jit(jax.shard_map(f, mesh=mesh22, in_specs=P("data"),
+                                   out_specs=P(None), check_vma=False))
+        return fn.lower(jnp.zeros((64,), jnp.float32)).compile().as_text()
+
+    a, b = compile_(plain), compile_(scoped)
+    assert collective_launches(a) == collective_launches(b)
+    assert "loco/exchange" in b  # the annotation did land in metadata
+
+
+# ---------------------------------------------------------------------------
+# profiler window parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_window():
+    assert PROF.parse_window("5") == (5, 5)
+    assert PROF.parse_window("3:9") == (3, 9)
+    with pytest.raises(ValueError):
+        PROF.parse_window("9:3")
+    with pytest.raises(ValueError):
+        PROF.parse_window("abc")
+
+
+# ---------------------------------------------------------------------------
+# sink: schema, validator CLI, health monitors
+# ---------------------------------------------------------------------------
+
+def test_envelope_and_validate():
+    rec = SINK.envelope("step", step=3, loss=1.0, gnorm=2.0, lr=1e-3,
+                        step_ms=10.0, metrics={"err_norm": 0.5})
+    assert SINK.validate_record(rec) == []
+    bad = dict(rec, schema_version=99)
+    assert SINK.validate_record(bad)
+    bad = dict(rec, kind="nope")
+    assert any("unknown kind" in e for e in SINK.validate_record(bad))
+    bad = dict(rec, metrics={"x": "not-a-number"})
+    assert any("not a number" in e for e in SINK.validate_record(bad))
+    bad = {k: v for k, v in rec.items() if k != "loss"}
+    assert any("step.loss" in e for e in SINK.validate_record(bad))
+
+
+def test_percentiles():
+    xs = [float(i) for i in range(1, 101)]
+    p = SINK.percentiles(xs)
+    # nearest-rank: index round(q/100 * (n-1))
+    assert p["p50"] in (50.0, 51.0)
+    assert p["p90"] == 90.0 and p["p99"] == 99.0
+    assert SINK.percentiles([7.0]) == {"p50": 7.0, "p90": 7.0, "p99": 7.0}
+    assert math.isnan(SINK.percentiles([])["p50"])
+
+
+def test_health_monitor_fires(capsys):
+    mon = SINK.HealthMonitor()
+    # healthy record: silent
+    assert mon.check({"loss": 1.0, "gnorm": 2.0,
+                      "metrics": {"err_norm": 1.0, "sat_rate": 0.01}}) == []
+    # NaN loss
+    w = mon.check({"loss": float("nan"), "metrics": {}})
+    assert [x["monitor"] for x in w] == ["nonfinite"]
+    # in-graph nonfinite counter
+    w = mon.check({"loss": 1.0, "metrics": {"nonfinite": 3.0}})
+    assert [x["monitor"] for x in w] == ["nonfinite_values"]
+    # error growth vs the running min (1.0 from the healthy record above)
+    w = mon.check({"loss": 1.0, "metrics": {"err_norm": 100.0}})
+    assert "err_growth" in [x["monitor"] for x in w]
+    # absolute divergence + saturation
+    w = mon.check({"loss": 1.0, "metrics": {"err_norm": 1e5, "sat_rate": 0.9}})
+    kinds = [x["monitor"] for x in w]
+    assert "err_divergence" in kinds and "saturation" in kinds
+    assert "TELEMETRY WARNING" in capsys.readouterr().err
+
+
+def test_sink_roundtrip_and_cli(tmp_path, capsys):
+    path = str(tmp_path / "run.jsonl")
+    sink = SINK.MetricsSink(path, header={"run": {"arch": "t"},
+                                          "topo": {"dp": 2}})
+    for i in range(3):
+        sink.step(i, loss=1.0, gnorm=2.0, lr=1e-3, step_ms=5.0,
+                  metrics={"err_norm": 1.0})
+    sink.summary(steps=3, tokens_per_s=100.0)
+    sink.close()
+    res = SINK.validate_stream(path)
+    assert res["errors"] == []
+    assert res["kinds"] == {"header": 1, "step": 3, "summary": 1}
+    assert SINK.main([path, "--expect-healthy"]) == 0
+
+    # a warning record flips --expect-healthy to exit 2
+    sink = SINK.MetricsSink(path)
+    sink.step(3, loss=float("nan"), gnorm=1.0, lr=1e-3, step_ms=5.0,
+              metrics={})
+    sink.close()
+    assert sink.n_warnings == 1
+    assert SINK.main([path, "--expect-healthy"]) == 2
+    assert SINK.main([path]) == 0  # schema itself is still valid
+
+    # malformed line -> exit 1; no steps -> exit 3
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"schema_version": 1, "kind": "step"}\n')
+    assert SINK.main([str(bad)]) == 1
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text(json.dumps(SINK.envelope("header", run={}, topo={})) + "\n")
+    assert SINK.main([str(empty)]) == 3
+    capsys.readouterr()
+
+
+def test_wire_report_record_schema(mesh22):
+    """WireReport emits the shared envelope (satellite: one JSON schema)."""
+    from repro.telemetry import wire as WIRE
+
+    run, bundle = _bundle(mesh22, telemetry=False)
+    plan = bundle.helpers["plan"]
+    rep = WIRE.plan_report(plan, pods=bundle.helpers["topo"].pods)
+    rec = rep.record()
+    assert SINK.validate_record(rec) == []
+    assert rec["kind"] == "wire_report"
+    legacy = json.loads(rep.to_json())  # same record modulo the timestamp
+    assert {k: v for k, v in legacy.items() if k != "t"} == \
+           {k: v for k, v in rec.items() if k != "t"}
+
+
+def test_bench_envelope_schema(tmp_path):
+    import sys
+    sys.path.insert(0, ".")
+    from benchmarks.common import write_bench_json
+
+    rec = write_bench_json(str(tmp_path / "b.json"), "unit_test",
+                           {"cell": {"x": 1}})
+    assert SINK.validate_record(rec) == []
+    on_disk = json.loads((tmp_path / "b.json").read_text())
+    assert on_disk["bench"] == "unit_test"
