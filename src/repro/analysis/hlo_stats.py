@@ -349,30 +349,95 @@ class OverlapStats:
                 "n_async": self.n_async, "n_sync": self.n_sync}
 
 
+@dataclasses.dataclass
+class _PipeEnds:
+    """Async windows that CROSS a computation boundary.
+
+    A software-pipelined schedule (the overlap schedule of DESIGN.md §15,
+    or XLA's own collective pipelining) opens a ``*-start`` in one loop
+    iteration and closes it with the ``*-done`` at the top of the next, so
+    neither end of the window is visible to a single program-order walk of
+    the body.  ``opens`` records the dangling starts as
+    ``(wire_s, tail_compute_s)`` pairs (compute accumulated from the start
+    to the end of the computation); ``dones`` records the unmatched dones'
+    prefix compute (accumulated from the top of the computation to the
+    done).  The ``while`` handler FIFO-pairs a body's opens with its dones
+    to credit the iteration-crossing windows, threads the first done to
+    the caller's open windows and re-opens the last start in the caller.
+    """
+
+    opens: list = dataclasses.field(default_factory=list)
+    dones: list = dataclasses.field(default_factory=list)
+
+
 def _overlap_comp(name: str, comps: dict, memo: dict,
-                  consts: tuple[float, float, float]) -> OverlapStats:
+                  consts: tuple[float, float, float]
+                  ) -> tuple[OverlapStats, _PipeEnds]:
     peak_flops, hbm_bw, ici_bw = consts
     if name in memo:
         return memo[name]
-    st = OverlapStats()
-    memo[name] = st  # placeholder to guard recursion
+    st, ends = OverlapStats(), _PipeEnds()
+    memo[name] = (st, ends)  # placeholder to guard recursion
     shape_of = {i.name: i.result_type for i in comps[name]}
     # open async windows: start-instr name -> [wire_s, compute_s since start]
     windows: dict[str, list[float]] = {}
+    prefix = 0.0  # compute since the top of this computation
 
     def add_compute(t: float) -> None:
+        nonlocal prefix
         st.compute_s += t
+        prefix += t
         for w in windows.values():
             w[1] += t
+
+    def close_window(key: str) -> None:
+        w = windows.pop(key)
+        st.hidden_s += min(w[0], w[1])
+
+    def consume_ends(child_ends: _PipeEnds, trips: float,
+                     total_compute: float) -> None:
+        """Account a child computation's boundary-crossing windows.
+
+        For each (open, done) FIFO pair the window spans one iteration
+        boundary: in flight over the open's tail compute plus the done's
+        prefix compute, once per crossing (``trips - 1``).  The first
+        iteration's done instead closes the oldest window open HERE (the
+        window it actually completes, having accrued its prefix on top);
+        the last iteration's start has its done after the loop, so it
+        re-opens in this computation with only its tail accrued.  Windows
+        open here that the child does NOT close span the whole child:
+        they accrue ``total_compute`` (= trips x body compute).  Unpaired
+        opens (done elided entirely) still hide their tail each full
+        iteration.  call/conditional use trips=1: pass-through.
+        """
+        npair = min(len(child_ends.opens), len(child_ends.dones))
+        for i, (wire, tail) in enumerate(child_ends.opens):
+            cross = tail + child_ends.dones[i] if i < npair else tail
+            st.hidden_s += max(0.0, trips - 1) * min(wire, cross)
+        for p in child_ends.dones:
+            # iteration 0's done targets a window opened before the child
+            if windows:
+                w = windows.pop(next(iter(windows)))
+                st.hidden_s += min(w[0], w[1] + p)
+            else:
+                ends.dones.append(prefix + p)
+        add_compute(total_compute)  # surviving pre-child windows span it
+        for i, (wire, tail) in enumerate(child_ends.opens):
+            windows[f"{name}#pipe{len(windows)}#{i}"] = [wire, tail]
 
     for ins in comps[name]:
         op = ins.opcode
         base = op[:-len("-start")] if op.endswith("-start") else op
         if op.endswith("-done"):
             opnds = _OPERAND_RE.findall(ins.rest)
-            w = windows.pop(opnds[0], None) if opnds else None
-            if w is not None:
-                st.hidden_s += min(w[0], w[1])
+            if opnds and opnds[0] in windows:
+                close_window(opnds[0])
+            elif windows:
+                # operand is a tuple-element of a while/call result: the
+                # matching start crossed in via consume_ends -- FIFO.
+                close_window(next(iter(windows)))
+            else:
+                ends.dones.append(prefix)
             continue
         if base in _COLLECTIVES:
             t = _collective_wire(base, ins.result_type, ins.rest) / ici_bw
@@ -388,38 +453,38 @@ def _overlap_comp(name: str, comps: dict, memo: dict,
             mc = re.search(r"condition=%?([\w.\-]+)", ins.rest)
             if mb and mc and mb.group(1) in comps:
                 trips = _trip_count(comps[mc.group(1)]) if mc.group(1) in comps else 1
-                child = _overlap_comp(mb.group(1), comps, memo, consts)
+                child, cends = _overlap_comp(mb.group(1), comps, memo, consts)
                 st.add(child, trips)
-                st.compute_s -= trips * child.compute_s  # add_compute re-adds
-                add_compute(trips * child.compute_s)
+                st.compute_s -= trips * child.compute_s  # consume_ends re-adds
+                consume_ends(cends, trips, trips * child.compute_s)
             continue
         if op == "call":
             mt = re.search(r"to_apply=%?([\w.\-]+)", ins.rest)
             if mt and mt.group(1) in comps:
-                child = _overlap_comp(mt.group(1), comps, memo, consts)
+                child, cends = _overlap_comp(mt.group(1), comps, memo, consts)
                 st.add(child, 1.0)
                 st.compute_s -= child.compute_s
-                add_compute(child.compute_s)
+                consume_ends(cends, 1.0, child.compute_s)
             continue
         if op == "conditional":
             for mt in re.finditer(r"(?:branch_computations=\{|true_computation=|"
                                   r"false_computation=)%?([\w.\-]+)", ins.rest):
                 if mt.group(1) in comps:
-                    child = _overlap_comp(mt.group(1), comps, memo, consts)
+                    child, cends = _overlap_comp(mt.group(1), comps, memo, consts)
                     st.add(child, 1.0)
                     st.compute_s -= child.compute_s
-                    add_compute(child.compute_s)
+                    consume_ends(cends, 1.0, child.compute_s)
             continue
         if op in _SKIP_OPS:
             continue
         fl, b = _instr_cost(ins, shape_of)
         add_compute(max(fl / peak_flops, b / hbm_bw))
-    # windows never closed inside this computation (done elided/hoisted):
-    # credit what accumulated so far.
+    # windows never closed inside this computation: their done (if any)
+    # lives in a caller or a later iteration -- export, don't credit here.
     for w in windows.values():
-        st.hidden_s += min(w[0], w[1])
-    memo[name] = st
-    return st
+        ends.opens.append((w[0], w[1]))
+    memo[name] = (st, ends)
+    return st, ends
 
 
 def overlap_stats(hlo_text: str, *, peak_flops: float | None = None,
@@ -438,4 +503,11 @@ def overlap_stats(hlo_text: str, *, peak_flops: float | None = None,
         ici_bw = _RL.ICI_BW if ici_bw is None else ici_bw
     comps, entry = parse_computations(hlo_text)
     memo: dict = {}
-    return _overlap_comp(entry, comps, memo, (peak_flops, hbm_bw, ici_bw))
+    st, ends = _overlap_comp(entry, comps, memo, (peak_flops, hbm_bw, ici_bw))
+    res = OverlapStats()
+    res.add(st, 1.0)
+    # windows still dangling at ENTRY's end (done truly elided): credit
+    # whatever compute accumulated while they were in flight.
+    for wire, acc in ends.opens:
+        res.hidden_s += min(wire, acc)
+    return res

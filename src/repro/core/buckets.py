@@ -84,6 +84,14 @@ class Bucket:
     seg_elems: int    # global segment length D * c_b (= local grad slice)
     sync: SyncConfig  # policy-resolved wire config for this bucket
 
+    @property
+    def chunk_end(self) -> int:
+        """Chunk-space end offset — the readiness bound of this bucket:
+        once the backward has produced gradient columns ``[0, chunk_end)``
+        every contribution to this bucket exists (used by the overlap
+        schedule's readiness table, wirepack.build_overlap_schedule)."""
+        return self.offset + self.chunk_elems
+
 
 @dataclasses.dataclass(frozen=True)
 class ParamPlan:

@@ -277,6 +277,7 @@ def dist_sync_buckets(
     dp_axes: tuple[str, ...],
     key: jax.Array | None = None,
     coalesce: bool = True,
+    overlap: bool = False,
 ) -> tuple[jax.Array, tuple[jax.Array, ...]]:
     """Synchronize a full local gradient bucket by bucket.
 
@@ -298,8 +299,21 @@ def dist_sync_buckets(
     kept as escape hatch and parity oracle): the encoded bytes, their
     destinations, and every ``decode_mean`` input are identical — only the
     launch count changes, O(comm groups) instead of O(buckets x leaves).
+
+    With ``overlap`` the coalesced schedule is additionally *pipelined*
+    (:func:`repro.core.wirepack.build_overlap_schedule`): the plan's runs
+    split into readiness-ordered stages whose packed collectives fire as
+    soon as their slice of the gradient exists, with encode(stage k+1)
+    pinned into exchange(stage k)'s async window by a
+    ``lax.optimization_barrier`` — still bit-exact (see
+    :func:`_dist_sync_overlapped`).  ``overlap`` requires ``coalesce``.
     """
     assert len(states) == len(plan.buckets), (len(states), len(plan.buckets))
+    if overlap and not coalesce:
+        raise ValueError(
+            "overlap pipelines the *packed* exchange; overlap=True requires "
+            "coalesce=True (the per-bucket legacy schedule has no packed "
+            "stages to pipeline)")
     D = axis_size(dp_axes)
     C = plan.chunklen
     assert g.shape[0] == D * C, (g.shape, D, C)
@@ -319,7 +333,7 @@ def dist_sync_buckets(
             new_states.append(ns)
         return jnp.concatenate(shards), tuple(new_states)
     return _dist_sync_coalesced(gm, states, plan, dp_axes, keys,
-                                run_space=False)
+                                run_space=False, overlap=overlap)
 
 
 def dist_sync_runs(
@@ -328,6 +342,8 @@ def dist_sync_runs(
     plan: ParamPlan,
     dp_axes: tuple[str, ...],
     key: jax.Array | None = None,
+    overlap: bool = False,
+    piece_space: bool = False,
 ) -> tuple[jax.Array, tuple[jax.Array, ...]]:
     """:func:`dist_sync_buckets` with RUN-space compressor states.
 
@@ -341,14 +357,28 @@ def dist_sync_runs(
     parameter, so the scan-carry copies, cotangent plumbing and reset ops
     that used to scale with bucket count collapse to the monolithic
     path's.  This is what finally makes fine-grained bucket plans free.
+
+    ``piece_space`` (requires ``overlap``) declares that ``run_states``
+    already follows the pipelined schedule's piece layout
+    (:func:`repro.core.wirepack.state_pieces`) and the new states are
+    returned in that same layout — the training hot path carries piece
+    leaves through the accumulation scan so no per-microbatch state
+    slicing/stitching happens at all (DESIGN.md §15).  With
+    ``piece_space=False`` and ``overlap=True`` the conversion runs
+    in-graph here, bit-identically but without that saving.
     """
+    if piece_space and not overlap:
+        raise ValueError(
+            "piece_space is the pipelined schedule's state layout; "
+            "piece_space=True requires overlap=True")
     D = axis_size(dp_axes)
     C = plan.chunklen
     assert g.shape[0] == D * C, (g.shape, D, C)
     gm = g.astype(jnp.float32).reshape(D, C)
     keys = _bucket_keys(key, plan)
     return _dist_sync_coalesced(gm, run_states, plan, dp_axes, keys,
-                                run_space=True)
+                                run_space=True, overlap=overlap,
+                                piece_space=piece_space)
 
 
 def _dist_sync_coalesced(
@@ -358,6 +388,8 @@ def _dist_sync_coalesced(
     dp_axes: tuple[str, ...],
     keys: tuple,
     run_space: bool,
+    overlap: bool = False,
+    piece_space: bool = False,
 ) -> tuple[jax.Array, tuple[jax.Array, ...]]:
     """Shared coalesced schedule.  ``states`` (and the returned new
     states) are per-run when ``run_space`` else per-bucket — the per-bucket
@@ -372,6 +404,19 @@ def _dist_sync_coalesced(
         Dd = jax.lax.axis_size(dp_axes[1])
     else:
         Pp, Dd = 1, D
+    if overlap:
+        sched = WP.build_overlap_schedule(plan, D, pods=Pp)
+        if sched.pipelined:
+            convert = run_space and not piece_space
+            if convert:
+                states = WP.overlap_state_pieces(plan, states, D, pods=Pp)
+            out, ns = _dist_sync_overlapped(gm, states, plan, dp_axes, keys,
+                                            run_space, sched, Pp, Dd)
+            if convert:
+                ns = WP.merge_state_pieces(plan, ns, D, pods=Pp)
+            return out, ns
+        # degenerate single-stage schedule: identical to the flat path
+        # (and the piece layout coincides with the run layout)
     gplan = WP.build_group_plan(plan, D, pods=Pp)
     runs = WP.encode_runs(plan)
 
@@ -486,6 +531,212 @@ def _dist_sync_coalesced(
 
     # runs are in chunk-space offset order, each shard spans its whole run
     return (jnp.concatenate([shards[run.slot] for run in runs]),
+            tuple(new_states))
+
+
+def _dist_sync_overlapped(
+    gm: jax.Array,
+    states: tuple[jax.Array, ...],
+    plan: ParamPlan,
+    dp_axes: tuple[str, ...],
+    keys: tuple,
+    run_space: bool,
+    sched: "WP.OverlapSchedule",
+    Pp: int,
+    Dd: int,
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Pipelined coalesced schedule: software-pipeline the stages of
+    :func:`repro.core.wirepack.build_overlap_schedule`.
+
+    Per iteration the loop encodes stage ``k``, then pins ``encode(k)``
+    *before* ``decode(k-1)`` with a ``lax.optimization_barrier`` tying
+    stage ``k``'s pack buffers to stage ``k-1``'s received buffers.  The
+    barrier gives decode(k-1) a data dependency on encode(k)'s output, so
+    a latency-hiding scheduler must run encode(k) inside exchange(k-1)'s
+    async window — and both stages' pack buffers are live across the
+    barrier, so XLA cannot alias one into the other (the double-buffering
+    invariant; see DESIGN.md §15).  Exchange(k) consumes the barriered
+    recv, serializing at pipeline depth 2: at most two pack buffers exist
+    at any point.
+
+    Bit-exactness vs the flat schedule is structural, not numerical luck:
+    every piece's encoded bytes equal the corresponding slice of the flat
+    schedule's buffers (fusible codecs are elementwise per 256-block and
+    pieces cut on 512-aligned bucket edges; non-fusible runs stay atomic),
+    collectives move bytes verbatim, each ``decode_mean`` consumes
+    bit-identical inputs, and the final concat is in chunk-offset order —
+    only instruction order and buffer lifetimes change.
+    """
+    D = gm.shape[0]
+    runs = WP.encode_runs(plan)
+    stages = sched.stages
+    new_states: list = [None] * len(states)
+    # run-space mode carries PIECE-space states (WP.state_pieces): one
+    # leaf per stage piece of a split stateful run, one per run otherwise.
+    # Encode reads each carry leaf whole and writes its successor whole —
+    # no in-scan state slicing or stitching (the caller (de)composes the
+    # run-space buffers once per step; see dist_sync_runs / DESIGN.md §15).
+    if run_space:
+        layout = WP.state_pieces(plan, D, pods=Pp)
+        whole_idx = {s.run_index: i for i, s in enumerate(layout)
+                     if s.col_off is None}
+        piece_idx = {(s.run_index, s.col_off): i
+                     for i, s in enumerate(layout) if s.col_off is not None}
+        assert len(states) == len(layout), (len(states), len(layout))
+
+    def piece_seg(p):
+        return jax.lax.slice_in_dim(gm, p.offset, p.offset + p.chunk_total,
+                                    axis=1).reshape(-1)
+
+    def state_index(p):
+        """Carry index of one piece's state leaf (run-space mode)."""
+        si = piece_idx.get((p.run_index, p.col_off))
+        return whole_idx[p.run_index] if si is None else si
+
+    def encode_stage(stage):
+        """Encode one stage's pieces into fresh pack inputs.  Returns
+        (wires, fp_segs) — a buffer set private to this stage, which is
+        what makes the double buffering explicit."""
+        wires: dict[int, dict[str, jax.Array]] = {}
+        fp_segs: dict[int, jax.Array] = {}
+        for p in stage.pieces:
+            cfg = p.sync
+            ri = p.run_index
+            if cfg.strategy == "fp":
+                fp_segs[p.slot] = piece_seg(p).astype(jnp.bfloat16)
+                if run_space:
+                    si = state_index(p)
+                    new_states[si] = states[si]
+                else:
+                    for pos in p.positions:
+                        new_states[pos] = states[pos]
+                continue
+            if cfg.strategy == "ef21":
+                raise NotImplementedError(
+                    "ef21 distributed path needs a receiver-side "
+                    "mean-estimate shard; use the post-grad reference "
+                    "(loco.sim_sync) for ef21, or strategy='ef'/'loco' "
+                    "here.")
+            if cfg.hierarchical:
+                _check_hier_codec(cfg)
+            codec = codec_lib.get_codec(cfg)
+            # same key rule as the flat schedule: fused runs never round
+            # stochastically, and partial pieces only come from fused runs
+            kb = None if runs[ri].fused else keys[p.positions[0]]
+            if run_space:
+                si = state_index(p)
+                if codec.needs_state():
+                    # the carry may hold the state widened (f8 -> f16,
+                    # exact; see WP.carry_state_dtypes) — narrow for the
+                    # codec, widen the successor back.  Both converts are
+                    # elementwise, so they fuse into the encode.
+                    st = states[si].astype(codec.state_dtype())
+                    wire, ns = codec.encode(piece_seg(p), st, kb)
+                    new_states[si] = ns.astype(states[si].dtype)
+                else:
+                    wire, _ = codec.encode(piece_seg(p), states[si], kb)
+                    new_states[si] = states[si]
+            elif p.fused:
+                wire, ns = codec.encode(piece_seg(p),
+                                        _fused_state(codec, states, p, D),
+                                        None)
+                for pos, s in zip(p.positions,
+                                  _split_state(codec, ns, states, p, D)):
+                    new_states[pos] = s
+            else:
+                pos = p.positions[0]
+                wire, ns = codec.encode(piece_seg(p), states[pos], kb)
+                new_states[pos] = ns
+            if cfg.hierarchical:
+                seg_n = D * p.chunk_total
+                wire = {name: (_regroup_chunks(wire[name], Pp, Dd)
+                               .reshape(-1)
+                               if leaf.comm == "split" else wire[name])
+                        for name, leaf in codec.wire_shapes(seg_n).items()}
+            wires[p.slot] = wire
+        return wires, fp_segs
+
+    def exchange_stage(stage, wires, fp_segs):
+        """Issue one stage's packed collectives; returns its recv set."""
+        gplan = stage.gplan
+        red = None
+        rg = gplan.group("flat", "reduce")
+        if rg is not None:
+            red = psum_scatter_flat(WP.pack_reduce(rg, fp_segs), dp_axes)
+        recv_flat = _exchange_stage(gplan, "flat", wires, dp_axes)
+        recv_h1 = {}
+        if any(g.stage == "hier1" for g in gplan.groups):
+            recv_h1 = _exchange_stage(gplan, "hier1", wires, (dp_axes[-1],))
+        return red, recv_flat, recv_h1
+
+    def complete_stage(stage, wires, rx, shards):
+        """Decode one stage from its received buffers (incl. the hier
+        stage-2 leg, which exchanges within the stage like the flat path
+        does within the plan)."""
+        red, recv_flat, recv_h1 = rx
+        gplan = stage.gplan
+        rg = gplan.group("flat", "reduce")
+        if rg is not None:
+            for slot, sh in WP.unpack_reduce(rg, red).items():
+                shards[slot] = sh.astype(jnp.float32) / D
+        wires2: dict[int, dict[str, jax.Array]] = {}
+        hier_codec2: dict[int, "codec_lib.Codec"] = {}
+        for p in stage.pieces:
+            cfg = p.sync
+            if cfg.strategy == "fp":
+                continue
+            codec = codec_lib.get_codec(cfg)
+            seg_n = D * p.chunk_total
+            if not cfg.hierarchical:
+                recv = dict(recv_flat.get(p.slot, {}))
+                recv.update(_none_leaves(codec, seg_n, wires[p.slot], D))
+                shards[p.slot] = codec.decode_mean(recv)
+                continue
+            recv1 = dict(recv_h1.get(p.slot, {}))
+            recv1.update(_none_leaves(codec, seg_n, wires[p.slot], Dd))
+            pod_mean = codec.decode_mean(recv1)
+            cfg2 = loco_lib.validate_stage2(cfg)
+            codec2 = codec_lib.get_codec(cfg2)
+            n2 = pod_mean.shape[0]
+            wires2[p.slot], _ = codec2.encode(pod_mean,
+                                              codec2.init_state(n2), None)
+            hier_codec2[p.slot] = codec2
+        if wires2:
+            recv_h2 = _exchange_stage(gplan, "hier2", wires2, (dp_axes[0],))
+            for p in stage.pieces:
+                if p.slot not in wires2:
+                    continue
+                codec2 = hier_codec2[p.slot]
+                n2 = D * p.chunk_total // Dd
+                recv2 = dict(recv_h2.get(p.slot, {}))
+                recv2.update(_none_leaves(codec2, n2, wires2[p.slot], Pp))
+                shards[p.slot] = codec2.decode_mean(recv2)
+
+    shards: dict[int, jax.Array] = {}
+    with PROF.phase("encode", group=0):
+        wires_k, fp_k = encode_stage(stages[0])
+    with PROF.phase("exchange", group=0):
+        rx = exchange_stage(stages[0], wires_k, fp_k)
+    prev_stage, prev_wires = stages[0], wires_k
+    for k in range(1, len(stages)):
+        with PROF.phase("encode", group=k):
+            wires_k, fp_k = encode_stage(stages[k])
+        # the double-buffer pin: decode(k-1) gains a dependency on
+        # encode(k), exchange(k) on recv(k-1) — encode(k) runs inside
+        # exchange(k-1)'s async window, both pack buffers stay live.
+        (wires_k, fp_k), rx = jax.lax.optimization_barrier(
+            ((wires_k, fp_k), rx))
+        with PROF.phase("decode", group=k - 1):
+            complete_stage(prev_stage, prev_wires, rx, shards)
+        with PROF.phase("exchange", group=k):
+            rx = exchange_stage(stages[k], wires_k, fp_k)
+        prev_stage, prev_wires = stages[k], wires_k
+    with PROF.phase("decode", group=len(stages) - 1):
+        complete_stage(prev_stage, prev_wires, rx, shards)
+
+    # stages partition chunk space contiguously in offset order
+    return (jnp.concatenate([shards[p.slot]
+                             for st in stages for p in st.pieces]),
             tuple(new_states))
 
 

@@ -278,6 +278,8 @@ def materialize(
     compute_dtype=jnp.bfloat16,
     pplan: ParamPlan | None = None,
     coalesce: bool = True,
+    overlap: bool = False,
+    piece_space: bool = False,
 ) -> jax.Array:
     """fp32 chunk -> logical bf16 TP-local tensor (FSDP gather w/ LoCo bwd).
 
@@ -286,13 +288,20 @@ def materialize(
     RUN-space tuple (:func:`fuse_run_states`) and the exchange is the
     packed one-collective-per-comm-group schedule; otherwise ``state`` is
     the per-bucket tuple and every bucket issues its own collectives.
-    Bit-exact either way (DESIGN.md §13).
+    ``overlap`` pipelines the packed schedule's stages (DESIGN.md §15); it
+    changes neither the state layout nor any value.  ``piece_space``
+    (overlap-only) declares ``state`` already carries the schedule's
+    per-piece leaves (:func:`repro.core.wirepack.state_pieces`) so the
+    backward skips the in-graph run<->piece conversion.  Bit-exact every
+    way (DESIGN.md §13, §15).
     """
     w = chunk.astype(compute_dtype)
     if info.loco and pplan is not None and coalesce:
         # run-space states (fuse_run_states): the packed schedule with one
         # state leaf per encode run
-        flat = gather_with_sync_runs(w, state, pplan, topo.dp_axes)
+        flat = gather_with_sync_runs(w, state, pplan, topo.dp_axes,
+                                     overlap=overlap,
+                                     piece_space=piece_space)
     elif info.loco and pplan is not None:
         flat = gather_with_sync_buckets(w, state, pplan, topo.dp_axes,
                                         coalesce=False)
@@ -338,7 +347,8 @@ class TrainStore:
 
     def __init__(self, groups, chunks, states, cfg: SyncConfig, topo: MeshTopo,
                  compute_dtype=jnp.bfloat16, plan: SyncPlan | None = None,
-                 coalesce: bool = True):
+                 coalesce: bool = True, overlap: bool = False,
+                 piece_space: bool = False):
         self.groups = {g.name: g for g in groups}
         self.chunks = chunks  # {group: {name: (L?, 1, chunk)}} local views
         self.states = states  # {group: {name: (L?, 1, 1.., padlen) | tuple}} local
@@ -347,6 +357,8 @@ class TrainStore:
         self.compute_dtype = compute_dtype
         self.plan = plan      # None = monolithic sync per param
         self.coalesce = coalesce  # packed per-comm-group exchange (§13)
+        self.overlap = overlap    # pipelined stage schedule (§15)
+        self.piece_space = piece_space  # states carried in piece layout (§15)
 
     def _pplan(self, gname: str, info: ParamInfo) -> ParamPlan | None:
         if self.plan is None or not info.loco:
@@ -364,7 +376,9 @@ class TrainStore:
             out[info.name] = materialize(c, s, info, self.cfg, self.topo,
                                          self.compute_dtype,
                                          pplan=self._pplan(gname, info),
-                                         coalesce=self.coalesce)
+                                         coalesce=self.coalesce,
+                                         overlap=self.overlap,
+                                         piece_space=self.piece_space)
         return out
 
     # ---- stacked groups: xs for lax.scan ------------------------------------
@@ -383,7 +397,9 @@ class TrainStore:
             out[info.name] = materialize(c, s, info, self.cfg, self.topo,
                                          self.compute_dtype,
                                          pplan=self._pplan(gname, info),
-                                         coalesce=self.coalesce)
+                                         coalesce=self.coalesce,
+                                         overlap=self.overlap,
+                                         piece_space=self.piece_space)
         return out
 
 

@@ -84,7 +84,7 @@ def gather_with_sync(
 
 @lru_cache(maxsize=None)
 def _make_bucketed_gather(plan: ParamPlan, dp_axes: tuple[str, ...],
-                          coalesce: bool = True):
+                          coalesce: bool = True, overlap: bool = False):
     """custom_vjp gather whose backward runs the per-bucket schedule.
 
     The compressor state is a *tuple* of per-bucket buffers; the tuple rides
@@ -94,8 +94,9 @@ def _make_bucketed_gather(plan: ParamPlan, dp_axes: tuple[str, ...],
 
     ``coalesce`` selects the packed one-collective-per-comm-group exchange
     (default; bit-exact with the per-bucket schedule, see DESIGN.md §13);
-    the flag is part of the cache key so a ``--no-coalesce`` run never
-    reuses a packed closure.
+    ``overlap`` additionally pipelines the packed stages (DESIGN.md §15).
+    Both flags are part of the cache key so a ``--no-coalesce`` /
+    ``--no-overlap`` run never reuses the wrong closure.
     """
     for b in plan.buckets:
         _reject_stochastic_rounding(b.sync)
@@ -109,7 +110,8 @@ def _make_bucketed_gather(plan: ParamPlan, dp_axes: tuple[str, ...],
 
     def bwd(states, g_full):
         g_shard, new_states = dist_sync_buckets(g_full, states, plan, dp_axes,
-                                                coalesce=coalesce)
+                                                coalesce=coalesce,
+                                                overlap=overlap)
         new_states = tuple(ns.astype(s.dtype)
                            for ns, s in zip(new_states, states))
         return g_shard.astype(g_full.dtype), new_states
@@ -124,6 +126,7 @@ def gather_with_sync_buckets(
     plan: ParamPlan,
     dp_axes: tuple[str, ...],
     coalesce: bool = True,
+    overlap: bool = False,
 ) -> jax.Array:
     """FSDP all-gather whose backward runs the bucketed sync schedule.
 
@@ -135,17 +138,27 @@ def gather_with_sync_buckets(
         assert jnp.issubdtype(st.dtype, jnp.floating), (
             f"bucket {b.index} state must be a float dtype for the "
             "cotangent to carry the updated state (see gather_with_sync)")
-    return _make_bucketed_gather(plan, tuple(dp_axes),
-                                 coalesce)(w_chunk, tuple(states))
+    return _make_bucketed_gather(plan, tuple(dp_axes), coalesce,
+                                 overlap)(w_chunk, tuple(states))
 
 
 @lru_cache(maxsize=None)
-def _make_run_gather(plan: ParamPlan, dp_axes: tuple[str, ...]):
+def _make_run_gather(plan: ParamPlan, dp_axes: tuple[str, ...],
+                     overlap: bool = False, piece_space: bool = False):
     """custom_vjp gather whose backward runs the coalesced schedule with
     RUN-space states (one buffer per encode run — see
     :func:`repro.core.flatparam.fuse_run_states`).  The training hot path
     uses this form: the state pytree that rides the scan carries and the
-    cotangent shrinks from len(buckets) to len(runs) leaves."""
+    cotangent shrinks from len(buckets) to len(runs) leaves.
+
+    ``overlap`` (cache-keyed, like ``coalesce`` above) selects the
+    pipelined stage schedule; the state layout is identical either way, so
+    flipping it never reshapes checkpoints or retriggers retraces beyond
+    the one new closure.  ``piece_space`` declares that the caller carries
+    states in the schedule's piece layout (see
+    :func:`repro.core.wirepack.state_pieces`) so the backward skips the
+    in-graph run<->piece conversion — the training scan uses this to keep
+    the per-microbatch graph free of low-bit slice/concat ops."""
     for b in plan.buckets:
         _reject_stochastic_rounding(b.sync)
 
@@ -158,7 +171,8 @@ def _make_run_gather(plan: ParamPlan, dp_axes: tuple[str, ...]):
 
     def bwd(run_states, g_full):
         g_shard, new_states = dist_sync_runs(g_full, run_states, plan,
-                                             dp_axes)
+                                             dp_axes, overlap=overlap,
+                                             piece_space=piece_space)
         new_states = tuple(ns.astype(s.dtype)
                            for ns, s in zip(new_states, run_states))
         return g_shard.astype(g_full.dtype), new_states
@@ -172,6 +186,8 @@ def gather_with_sync_runs(
     run_states: tuple[jax.Array, ...],
     plan: ParamPlan,
     dp_axes: tuple[str, ...],
+    overlap: bool = False,
+    piece_space: bool = False,
 ) -> jax.Array:
     """FSDP all-gather whose backward runs the coalesced bucketed schedule
     over run-space compressor states (bit-exact with
@@ -180,7 +196,8 @@ def gather_with_sync_runs(
         assert jnp.issubdtype(st.dtype, jnp.floating), (
             "run state must be a float dtype for the cotangent to carry "
             "the updated state (see gather_with_sync)")
-    return _make_run_gather(plan, tuple(dp_axes))(w_chunk, tuple(run_states))
+    return _make_run_gather(plan, tuple(dp_axes), overlap,
+                            piece_space)(w_chunk, tuple(run_states))
 
 
 @lru_cache(maxsize=None)

@@ -178,8 +178,7 @@ def encode_runs(plan: ParamPlan) -> tuple[EncodeRun, ...]:
 
     for pos, b in enumerate(plan.buckets):
         if cur and not (fusible(b.sync) and b.sync == cur[-1][1].sync
-                        and b.offset == cur[-1][1].offset
-                        + cur[-1][1].chunk_elems):
+                        and b.offset == cur[-1][1].chunk_end):
             flush()
         cur.append((pos, b))
         if not fusible(b.sync):
@@ -244,15 +243,14 @@ def _leaf_entries(cfg, n: int) -> list[tuple[str, "codec_lib.WireLeaf"]]:
     return list(codec_lib.get_codec(cfg).wire_shapes(n).items())
 
 
-@lru_cache(maxsize=None)
-def build_group_plan(plan: ParamPlan, D: int, pods: int = 1) -> WireGroupPlan:
-    """Group one parameter's buckets by exchange signature.
+def _plan_groups(qualname: str, segs, D: int, pods: int) -> WireGroupPlan:
+    """Shared group-layout walk over encode segments.
 
-    ``D`` is the dp-group size (``seg_elems / chunk_elems`` of every
-    bucket); ``pods`` the inter-pod axis size (1 = flat mesh).  Raises if
-    any leaf's bytes don't divide evenly over its peer group — the packed
-    row layout requires integral per-peer rows, which the 512-aligned
-    bucket geometry guarantees for every registered codec.
+    ``segs`` is any offset-ordered iterable of segment descriptors carrying
+    ``slot`` / ``sync`` / ``chunk_total`` — :class:`EncodeRun` for the flat
+    whole-plan layout, :class:`StagePiece` for one overlap stage's slice of
+    it.  Both produce byte-identical group geometry for the same segments,
+    which is what keeps the overlapped exchange bit-exact.
     """
     dd = D // max(pods, 1)
     builders: dict[tuple, list[PackedLeaf]] = {}
@@ -267,7 +265,7 @@ def build_group_plan(plan: ParamPlan, D: int, pods: int = 1) -> WireGroupPlan:
             elems=elems, dtype=jnp.dtype(dtype).name))
         offs[sig] = off + nbytes
 
-    for run in encode_runs(plan):
+    for run in segs:
         cfg = run.sync
         seg = D * run.chunk_total
         if cfg.strategy == "fp":
@@ -286,7 +284,7 @@ def build_group_plan(plan: ParamPlan, D: int, pods: int = 1) -> WireGroupPlan:
                 erow, erem = divmod(math.prod(leaf.shape), peers1)
                 if rem or erem:
                     raise ValueError(
-                        f"{plan.qualname}[{run.slot}].{name}: leaf of "
+                        f"{qualname}[{run.slot}].{name}: leaf of "
                         f"{leaf.nbytes} bytes does not split over "
                         f"{peers1} peers; bucket edges must stay "
                         "512-aligned (see buckets.ALIGN)")
@@ -305,7 +303,7 @@ def build_group_plan(plan: ParamPlan, D: int, pods: int = 1) -> WireGroupPlan:
                     row, rem = divmod(leaf.nbytes, pods)
                     if rem:
                         raise ValueError(
-                            f"{plan.qualname}[{run.slot}].stage2.{name}: "
+                            f"{qualname}[{run.slot}].stage2.{name}: "
                             f"{leaf.nbytes} bytes do not split over "
                             f"{pods} pods")
                     add("hier2", "a2a", pods, run.slot, name,
@@ -321,6 +319,327 @@ def build_group_plan(plan: ParamPlan, D: int, pods: int = 1) -> WireGroupPlan:
                   row_bytes=offs[sig], leaves=tuple(leaves))
         for sig, leaves in builders.items())
     return WireGroupPlan(groups=groups)
+
+
+@lru_cache(maxsize=None)
+def build_group_plan(plan: ParamPlan, D: int, pods: int = 1) -> WireGroupPlan:
+    """Group one parameter's buckets by exchange signature.
+
+    ``D`` is the dp-group size (``seg_elems / chunk_elems`` of every
+    bucket); ``pods`` the inter-pod axis size (1 = flat mesh).  Raises if
+    any leaf's bytes don't divide evenly over its peer group — the packed
+    row layout requires integral per-peer rows, which the 512-aligned
+    bucket geometry guarantees for every registered codec.
+    """
+    return _plan_groups(plan.qualname, encode_runs(plan), D, pods)
+
+
+# ---------------------------------------------------------------------------
+# overlap schedule: the backward-readiness table + per-stage group plans
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StagePiece:
+    """One overlap stage's slice of an encode run.
+
+    Non-fusible runs (``tensor``/``onebit`` scales, stochastic rounding,
+    hierarchical buckets) are *atomic*: their whole-segment statistics make
+    a split lossy, so a piece always covers the full run.  Fusible runs may
+    split at bucket boundaries: ``block``/``fixed`` quantization, the error
+    codecs and the receiver mean are elementwise per 256-block and bucket
+    edges are 512-aligned, so ``encode(concat) == concat(encode)`` — each
+    piece encodes/decodes bit-identically to its slice of the fused run
+    (the same property that justifies fusing in the first place, pinned in
+    tests/test_wirepack.py).
+
+    Duck-types :class:`EncodeRun` (``slot``/``positions``/``chunk_elems``/
+    ``sync``/``chunk_total``/``fused``) so the pack layout and the
+    bucket-space state stitch (:func:`fuse_run_state`) apply unchanged.
+    ``col_off``/``run_total`` locate the piece inside its parent run's
+    peer-major chunk columns for run-space state slicing.
+    """
+
+    run_index: int                # index into encode_runs(plan)
+    slot: int                     # first member bucket index (wire key)
+    buckets: tuple[int, ...]
+    positions: tuple[int, ...]
+    offset: int                   # chunk-space start
+    chunk_elems: tuple[int, ...]
+    col_off: int                  # chunk offset inside the parent run
+    run_total: int                # parent run chunk_total
+    sync: SyncConfig
+
+    @property
+    def chunk_total(self) -> int:
+        return sum(self.chunk_elems)
+
+    @property
+    def fused(self) -> bool:
+        return len(self.buckets) > 1
+
+    @property
+    def whole(self) -> bool:
+        """Piece covers its entire parent run (state passes through as-is)."""
+        return self.col_off == 0 and self.chunk_total == self.run_total
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleStage:
+    """One pipeline stage: the pieces whose collectives fire together.
+
+    ``ready`` is the stage's readiness bound — the chunk-space end offset
+    of its last piece.  The backward produces a flat parameter's gradient
+    columns in chunk order (stacked groups lay layers out contiguously, so
+    chunk offsets track the scan's layer order); once the gradient covers
+    ``[0, ready)`` every contribution to this stage's packed buffers
+    exists and its collectives may be issued.
+    """
+
+    index: int
+    ready: int
+    pieces: tuple[StagePiece, ...]
+    gplan: WireGroupPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapSchedule:
+    """Readiness-ordered stage partition of one parameter's sync.
+
+    Stages partition chunk space contiguously in offset order; each stage
+    owns a :class:`WireGroupPlan` over its own pieces, so the overlapped
+    schedule issues ``sum(stage launches)`` collectives where the flat
+    schedule issues one set — the price of pipelining.  The *contents* on
+    the wire are identical: per-piece packed bytes are byte-slices of the
+    flat schedule's buffers with the same destinations.
+    """
+
+    stages: tuple[ScheduleStage, ...]
+    chunklen: int
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def pipelined(self) -> bool:
+        return len(self.stages) > 1
+
+    @property
+    def readiness(self) -> tuple[int, ...]:
+        """The readiness table: per-stage chunk-space completion offsets."""
+        return tuple(st.ready for st in self.stages)
+
+    def launches(self, axes: int = 1) -> int:
+        return sum(st.gplan.launches(axes) for st in self.stages)
+
+    @property
+    def comm_groups(self) -> int:
+        return sum(len(st.gplan.groups) for st in self.stages)
+
+
+@lru_cache(maxsize=None)
+def build_overlap_schedule(plan: ParamPlan, D: int, pods: int = 1,
+                           max_stages: int = 2) -> OverlapSchedule:
+    """Partition a plan's encode runs into pipeline stages.
+
+    Atomic units are buckets (fusible runs) or whole runs (non-fusible);
+    units are dealt greedily onto ``max_stages`` stages cut at the ideal
+    chunk-space boundaries ``i * chunklen / S``, so stage byte volumes are
+    as balanced as the bucket geometry allows.  A plan whose units can't
+    fill two stages (single bucket, or one atomic run) degenerates to one
+    stage — the caller falls back to the flat schedule, which is the same
+    computation.
+    """
+    runs = encode_runs(plan)
+    units: list[tuple[int, tuple, tuple, int, tuple]] = []
+    for ri, run in enumerate(runs):
+        if fusible(run.sync):
+            off = run.offset
+            for b, p, c in zip(run.buckets, run.positions, run.chunk_elems):
+                units.append((ri, (b,), (p,), off, (c,)))
+                off += c
+        else:
+            units.append((ri, run.buckets, run.positions, run.offset,
+                          run.chunk_elems))
+
+    S = max(1, min(max_stages, len(units)))
+    per_stage: list[list] = [[] for _ in range(S)]
+    s = 0
+    for u in units:
+        per_stage[s].append(u)
+        end = u[3] + sum(u[4])
+        while s < S - 1 and end * S >= (s + 1) * plan.chunklen:
+            s += 1
+
+    stages: list[ScheduleStage] = []
+    for stage_units in per_stage:
+        if not stage_units:
+            continue
+        pieces: list[StagePiece] = []
+        for ri, bks, poss, off, ces in stage_units:
+            if pieces and pieces[-1].run_index == ri:
+                prev = pieces[-1]
+                pieces[-1] = dataclasses.replace(
+                    prev, buckets=prev.buckets + bks,
+                    positions=prev.positions + poss,
+                    chunk_elems=prev.chunk_elems + ces)
+            else:
+                pieces.append(StagePiece(
+                    run_index=ri, slot=bks[0], buckets=bks, positions=poss,
+                    offset=off, chunk_elems=ces,
+                    col_off=off - runs[ri].offset,
+                    run_total=runs[ri].chunk_total, sync=runs[ri].sync))
+        gplan = _plan_groups(plan.qualname, pieces, D, pods)
+        last = pieces[-1]
+        stages.append(ScheduleStage(
+            index=len(stages), ready=last.offset + last.chunk_total,
+            pieces=tuple(pieces), gplan=gplan))
+    return OverlapSchedule(stages=tuple(stages), chunklen=plan.chunklen)
+
+
+@dataclasses.dataclass(frozen=True)
+class StateLeaf:
+    """One leaf of the overlap scan's PIECE-space state carry.
+
+    ``col_off is None`` means the leaf is a whole run's buffer (the run is
+    stateless, or the schedule never splits it); otherwise the leaf holds
+    the run's peer-major columns ``[col_off, col_off + chunk)``.
+    """
+
+    run_index: int
+    col_off: int | None
+    chunk: int
+
+
+@lru_cache(maxsize=None)
+def state_pieces(plan: ParamPlan, D: int, pods: int = 1) -> tuple[StateLeaf, ...]:
+    """The piece-space state layout of one param's overlap schedule.
+
+    The overlapped backward encodes per :class:`StagePiece`, so a stateful
+    run split across stages reads/writes two disjoint column ranges of its
+    run-space buffer per microbatch.  Re-slicing and re-stitching that
+    buffer inside the accumulation scan is pure waste — worse, XLA:CPU
+    emits f8 slice/concatenate roots through a scalar path that drags the
+    whole fused encode with it (DESIGN.md §15).  So the scan instead
+    carries one leaf per *piece* and the run-space buffer is only
+    (de)composed once per step, outside the scan
+    (:func:`overlap_state_pieces` / :func:`merge_state_pieces`).
+
+    Layout: runs in offset order; a run contributes one whole leaf unless
+    it is stateful AND split by the schedule, in which case it contributes
+    one leaf per piece in column order.  Piece boundaries come from the
+    greedy deal in :func:`build_overlap_schedule`, which depends only on
+    bucket geometry — not on ``D``/``pods`` — so producer and consumer may
+    derive the layout with different pod counts and still agree.
+    """
+    sched = build_overlap_schedule(plan, D, pods)
+    runs = encode_runs(plan)
+    by_run: dict[int, list[StagePiece]] = {}
+    for st in sched.stages:
+        for p in st.pieces:
+            by_run.setdefault(p.run_index, []).append(p)
+    out: list[StateLeaf] = []
+    for ri, run in enumerate(runs):
+        ps = sorted(by_run.get(ri, []), key=lambda p: p.col_off)
+        if len(ps) <= 1 or not run.sync.needs_state():
+            out.append(StateLeaf(ri, None, run.chunk_total))
+        else:
+            out.extend(StateLeaf(ri, p.col_off, p.chunk_total) for p in ps)
+    return tuple(out)
+
+
+def carry_state_dtypes(run: EncodeRun):
+    """(carry, stored) dtypes of one stateful run's scan-carry leaves.
+
+    The piece-space carry stores float8 error states widened to float16:
+    XLA:CPU's dynamic-update-slice emitter takes a scalar path for f8
+    roots, and the layer-scan backward writes every leaf through exactly
+    such a dus — with the whole fused encode dragged into the scalar loop
+    (measured 3.5x on the dus+encode fusion).  f8e4m3fn is an exact
+    subset of f16, so widen -> encode-on-f8 -> widen round-trips
+    bit-exactly.  Other state dtypes (bf16/f32) vectorize fine and stay
+    as-is."""
+    sdt = codec_lib.get_codec(run.sync).state_dtype()
+    cdt = jnp.float16 if sdt == jnp.float8_e4m3fn else sdt
+    return cdt, sdt
+
+
+def _byte_cols(x: jax.Array) -> jax.Array:
+    """uint8 view for pure byte movement (multi-byte dtypes gain a
+    trailing byte axis; earlier axes keep their indices).  Slice/concat
+    roots over f8 element types scalarize on XLA:CPU and de-vectorize any
+    producer fused into them; a u8 view keeps byte shuffles byte
+    shuffles.  Bitcasts are value-preserving, so bit-exactness holds."""
+    if x.dtype == jnp.uint8:
+        return x
+    return jax.lax.bitcast_convert_type(x, jnp.uint8)
+
+
+def _from_byte_cols(x: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`_byte_cols` (collapses the trailing byte axis)."""
+    if dtype == jnp.uint8:
+        return x
+    return jax.lax.bitcast_convert_type(x, dtype)
+
+
+def overlap_state_pieces(plan: ParamPlan, run_states, dp: int,
+                         pods: int = 1) -> tuple[jax.Array, ...]:
+    """Run-space state leaves -> the overlap scan's piece-space carry.
+
+    ``run_states[ri]`` is run ri's ``(L?, dp * c_run)`` peer-major buffer
+    (:func:`repro.core.flatparam.fuse_run_states`); the result follows
+    :func:`state_pieces`.  Bit-exact inverse: :func:`merge_state_pieces`.
+    """
+    runs = encode_runs(plan)
+    out = []
+    for sp in state_pieces(plan, dp, pods):
+        rs = run_states[sp.run_index]
+        run = runs[sp.run_index]
+        if sp.col_off is None:
+            if run.sync.needs_state():
+                cdt, _ = carry_state_dtypes(run)
+                rs = rs.astype(cdt)
+            out.append(rs)
+            continue
+        cdt, _ = carry_state_dtypes(run)
+        lead = rs.shape[:-1]
+        cols = _byte_cols(rs.reshape(*lead, dp, run.chunk_total))
+        ax = len(lead) + 1
+        sl = jax.lax.slice_in_dim(cols, sp.col_off, sp.col_off + sp.chunk,
+                                  axis=ax)
+        piece = _from_byte_cols(sl, rs.dtype).reshape(*lead, dp * sp.chunk)
+        out.append(piece.astype(cdt))
+    return tuple(out)
+
+
+def merge_state_pieces(plan: ParamPlan, piece_states, dp: int,
+                       pods: int = 1) -> tuple[jax.Array, ...]:
+    """Exact inverse of :func:`overlap_state_pieces`."""
+    runs = encode_runs(plan)
+    out: list = [None] * len(runs)
+    parts: dict[int, list] = {}
+    for sp, leaf in zip(state_pieces(plan, dp, pods), piece_states):
+        run = runs[sp.run_index]
+        if sp.col_off is None:
+            if run.sync.needs_state():
+                _, sdt = carry_state_dtypes(run)
+                leaf = leaf.astype(sdt)
+            out[sp.run_index] = leaf
+        else:
+            parts.setdefault(sp.run_index, []).append((sp.col_off, leaf))
+    for ri, ps in parts.items():
+        # stitch in the carry dtype — never f8 (see carry_state_dtypes), so
+        # the concatenate vectorizes — and narrow with one convert at the
+        # end; an f8 *convert* root is fine, only concat/slice/dus roots
+        # scalarize on XLA:CPU.
+        ps.sort(key=lambda t: t[0])
+        lead = ps[0][1].shape[:-1]
+        cols = [l.reshape(*lead, dp, l.shape[-1] // dp) for _, l in ps]
+        ax = len(lead) + 1
+        m = jnp.concatenate(cols, axis=ax)
+        _, sdt = carry_state_dtypes(runs[ri])
+        out[ri] = m.astype(sdt).reshape(*lead, dp * runs[ri].chunk_total)
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------

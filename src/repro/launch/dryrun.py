@@ -121,6 +121,29 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         n_dev = mesh.devices.size
         model_flops_dev = model_flops_global / n_dev
 
+        ov_rec: dict = HS.overlap_stats(hlo).to_json()
+        if shape.kind == "train":
+            # report BOTH sync schedules (legacy flat vs backward-
+            # overlapped, DESIGN.md §15), not just whichever the primary
+            # module compiled with.  The second compile is skipped when
+            # the overlap schedule has nothing to pipeline (no bucket
+            # plan, or single-stage) -- the schedules then coincide.
+            import dataclasses as _dc
+            from repro.launch.steps import groups_inflight as _gi
+            this = "overlapped" if (run.coalesce and run.overlap) else "legacy"
+            other = "legacy" if this == "overlapped" else "overlapped"
+            depth = _gi(_dc.replace(run, coalesce=True, overlap=True),
+                        bundle.helpers["plan"], bundle.helpers["topo"])
+            if depth > 1:
+                alt = _dc.replace(run, coalesce=True,
+                                  overlap=(this == "legacy"))
+                alt_hlo = (make_train_step(cfg, alt, mesh, shape).fn
+                           .lower(*bundle.input_shapes).compile().as_text())
+                ov_rec = {this: ov_rec,
+                          other: HS.overlap_stats(alt_hlo).to_json()}
+            else:
+                ov_rec = {this: ov_rec, other: ov_rec}
+
         rec.update(
             status="ok",
             lower_s=round(t_lower, 1),
@@ -142,7 +165,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             collectives=dict(counts={k: round(v) for k, v in st.coll_counts.items()},
                              bytes_by_kind={k: round(v) for k, v in st.coll_bytes.items()},
                              wire_bytes=round(st.wire_bytes)),
-            overlap=HS.overlap_stats(hlo).to_json(),
+            overlap=ov_rec,
             roofline=terms,
             model_flops_per_device=model_flops_dev,
             useful_flops_ratio=(model_flops_dev / flops) if flops else None,
@@ -164,10 +187,15 @@ def _emit(rec: dict, out_dir: str | None) -> dict:
     if status == "ok":
         r = rec["roofline"]
         ov = rec.get("overlap", {})
+        if "overlapped" in ov and "legacy" in ov:  # per-schedule (train)
+            ovs = (f"{ov['overlapped'].get('overlap_fraction', 0.0):.0%}"
+                   f"/{ov['legacy'].get('overlap_fraction', 0.0):.0%}")
+        else:
+            ovs = f"{ov.get('overlap_fraction', 0.0):.0%}"
         extra = (f" compile={rec['compile_s']}s peak={rec['memory']['peak_bytes']/2**30:.2f}GiB "
                  f"dom={r['dominant']} c/m/n={r['compute_s']:.4f}/{r['memory_s']:.4f}/"
                  f"{r['collective_s']:.4f}s"
-                 f" ovl={ov.get('overlap_fraction', 0.0):.0%}")
+                 f" ovl={ovs}")
     elif status == "skipped":
         extra = " " + rec["reason"]
     else:
@@ -185,9 +213,22 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--sync", default="loco")
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="enable the bucketed scheduler for train shapes "
+                         "with this fp32 bucket target (MiB)")
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false",
+                    help="compile the primary train module on the legacy "
+                         "flat schedule (the overlap record still reports "
+                         "both schedules)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
+
+    overrides: dict = {}
+    if args.bucket_mb is not None:
+        overrides["bucket_bytes"] = int(args.bucket_mb * 2**20)
+    if not args.overlap:
+        overrides["overlap"] = False
 
     from repro.configs.all_archs import ASSIGNED
 
@@ -205,7 +246,8 @@ def main():
             if os.path.exists(os.path.join(args.out, name)):
                 print(f"[dryrun] {a} {s} exists, skip")
                 continue
-        dryrun_one(a, s, multi_pod=mp, sync_strategy=args.sync, out_dir=args.out)
+        dryrun_one(a, s, multi_pod=mp, sync_strategy=args.sync,
+                   out_dir=args.out, run_overrides=overrides or None)
 
 
 if __name__ == "__main__":

@@ -75,6 +75,16 @@ class RunConfig:
     # with the per-bucket schedule; off = the legacy launch pattern
     # (escape hatch, `--no-coalesce`).
     coalesce: bool = True
+    # Backward-overlapped stage schedule (core/wirepack
+    # build_overlap_schedule, DESIGN.md §15): split each coalesced plan
+    # into readiness-ordered pipeline stages whose packed collectives fire
+    # as their gradient slice completes, with encode(k+1) barrier-pinned
+    # into exchange(k)'s async window over double-buffered pack buffers.
+    # Bit-exact with the flat schedule and layout-neutral (checkpoints,
+    # state units and fingerprints are identical); off = today's
+    # single-sync-region schedule (escape hatch, `--no-overlap`).  Only
+    # affects coalesced bucketed plans — monolithic runs are unchanged.
+    overlap: bool = True
     # In-graph compression-health metrics (telemetry/metrics, DESIGN.md
     # §14): per-unit error norms / saturation rates / scale stats beside
     # the loss.  Zero extra collectives — the packed metrics vector rides
@@ -164,8 +174,31 @@ def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None",
         for p in plan.params:
             try:
                 WP.build_group_plan(p, topo.dp, pods=max(topo.pods, 1))
+                if run.overlap:
+                    WP.build_overlap_schedule(p, topo.dp,
+                                              pods=max(topo.pods, 1))
             except ValueError as e:
                 raise ValueError(f"{p.qualname}: {e}") from None
+
+
+def groups_inflight(run: RunConfig, plan: "BK.SyncPlan | None",
+                    topo: MeshTopo) -> int:
+    """Static pipeline depth of this run's sync schedule.
+
+    1 for the flat schedule (every group fires in one sync region); under
+    ``run.overlap`` the double-buffered loop keeps at most two stages'
+    pack buffers in flight, so the depth is min(2, max stages) over the
+    plan's params.  Reported on the JSONL step record (telemetry/sink).
+    """
+    from repro.core import wirepack as WP
+
+    if plan is None or not (run.coalesce and run.overlap):
+        return 1
+    depth = 1
+    for p in plan.params:
+        sched = WP.build_overlap_schedule(p, topo.dp, pods=max(topo.pods, 1))
+        depth = max(depth, min(2, sched.n_stages))
+    return depth
 
 
 def build_model(cfg: ArchConfig, tp: int, sp: bool = False):
@@ -228,6 +261,8 @@ class StepBundle:
 
 
 def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -> StepBundle:
+    from repro.core import wirepack as WP
+
     topo = MeshTopo.from_mesh(mesh)
     model = build_model(cfg, topo.tp, sp=run.sequence_parallel)
     groups = model.groups()
@@ -268,14 +303,60 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
             out[g.name] = og
         return out
 
+    # Piece-space scan carry (DESIGN.md §15): under the pipelined schedule
+    # the carry threads one state leaf per schedule piece instead of per
+    # encode run, so each microbatch's backward reads/writes every leaf
+    # whole.  The run<->piece conversion then happens once per step out
+    # here — XLA:CPU scalarizes slice/concat over sub-byte element types
+    # (float8 error states), so keeping those ops out of the scan body is
+    # what makes overlap pay for itself.  Bit-exact either way.
+    piece_carry = (plan is not None and run.coalesce and run.overlap
+                   and needs_state)
+    pods = max(topo.pods, 1)
+
+    def _map_plan_states(states_l, fn):
+        out = {}
+        for g in groups:
+            og = {}
+            for info in g.infos:
+                s = states_l[g.name][info.name]
+                if plan is not None and info.loco:
+                    og[info.name] = fn(plan.lookup(g.name, info.name), s)
+                else:
+                    og[info.name] = s
+            out[g.name] = og
+        return out
+
+    def to_piece_states(states_l):
+        return _map_plan_states(
+            states_l,
+            lambda pp, s: WP.overlap_state_pieces(pp, s, topo.dp, pods=pods))
+
+    def from_piece_states(states_l):
+        return _map_plan_states(
+            states_l,
+            lambda pp, s: WP.merge_state_pieces(pp, s, topo.dp, pods=pods))
+
+    def pieces_by_run(states_l):
+        def fn(pp, leaves):
+            by = [[] for _ in WP.encode_runs(pp)]
+            for sp, leaf in zip(WP.state_pieces(pp, topo.dp, pods=pods),
+                                leaves):
+                by[sp.run_index].append(leaf)
+            return tuple(tuple(b) for b in by)
+        return _map_plan_states(states_l, fn)
+
     def body(chunks, states, opt_state, step, batch):
         chunks_l = squeeze_chunks(chunks, groups)
         states_l = squeeze_states(states, groups)
         opt_l = tuple(squeeze_chunks(t, groups) for t in opt_state)
+        if piece_carry:
+            states_l = to_piece_states(states_l)
 
         def loss_fn(c, s, mb):
             store = FP.TrainStore(groups, c, s, sync, topo, plan=plan,
-                                  coalesce=run.coalesce)
+                                  coalesce=run.coalesce, overlap=run.overlap,
+                                  piece_space=piece_carry)
             return model.loss_fn(store, mb, remat=run.remat)
 
         def micro_body(carry, mb):
@@ -297,6 +378,14 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
             (states_l, gacc), losses = carry, jnp.stack(losses_l)
         else:
             (states_l, gacc), losses = jax.lax.scan(micro_body, (states_l, gacc0), mbs)
+        metric_states = states_l
+        if piece_carry:
+            # metrics read the scan's raw piece leaves (grouped per run) so
+            # each is a single-reader reduction; the stitched run-space
+            # buffer would be refused into every unit's metric fusion and
+            # recomputed U times (see telemetry.metrics._state_metric_sums)
+            metric_states = pieces_by_run(states_l)
+            states_l = from_piece_states(states_l)
         grads = jax.tree.map(lambda g: g / accum, gacc)
 
         # ---- global grad-norm clip (TP replication-aware) -------------------
@@ -327,7 +416,7 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
             # the metrics-off pmean over dp — same all-reduce count either
             # way (the zero-extra-collectives contract, DESIGN.md §14).
             with PROF.phase("metrics"):
-                mvec = METRICS.local_vector(munits, grads_sync, states_l,
+                mvec = METRICS.local_vector(munits, grads_sync, metric_states,
                                             chunks_l, new_chunks_l, groups,
                                             topo.tp)
                 packed = jax.lax.psum(
@@ -375,7 +464,8 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
         helpers=dict(model=model, groups=groups, topo=topo, opt=opt,
                      cspec=cspec, sspec=sspec, opt_spec=opt_spec,
                      batch_spec=batch_spec, local_batch=local_batch,
-                     micro=micro, accum=accum, plan=plan, munits=munits),
+                     micro=micro, accum=accum, plan=plan, munits=munits,
+                     groups_inflight=groups_inflight(run, plan, topo)),
     )
 
 

@@ -73,6 +73,20 @@ def build_args(argv=None):
                          "group per step (bit-exact; --no-coalesce keeps "
                          "the legacy one-collective-per-bucket-leaf "
                          "schedule)")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="pipeline the coalesced bucketed sync: readiness-"
+                         "ordered stages with encode(k+1) barrier-pinned "
+                         "into exchange(k)'s async window over double-"
+                         "buffered pack buffers (bit-exact; --no-overlap "
+                         "keeps the single-sync-region schedule)")
+    ap.add_argument("--xla-lhs", default=None, choices=["tpu", "gpu"],
+                    help="enable XLA's latency-hiding scheduler for the "
+                         "named backend (appends the backend-specific flag "
+                         "to XLA_FLAGS before first jax use). Strictly "
+                         "opt-in: the flag set is backend-specific and an "
+                         "unknown flag aborts XLA startup, so CPU runs "
+                         "must not set this")
     ap.add_argument("--telemetry", action="store_true",
                     help="compute the in-graph compression-health metrics "
                          "(error norms, saturation/clip rates, scale stats, "
@@ -129,11 +143,36 @@ def make_run(args) -> RunConfig:
                      total_steps=args.steps, microbatch=args.microbatch,
                      bucket_bytes=int(args.bucket_mb * (1 << 20)),
                      policy=policy, coalesce=args.coalesce,
+                     overlap=args.overlap,
                      telemetry=args.telemetry or bool(args.metrics_jsonl))
+
+
+_LHS_FLAGS = {
+    "tpu": "--xla_tpu_enable_latency_hiding_scheduler=true",
+    "gpu": "--xla_gpu_enable_latency_hiding_scheduler=true",
+}
+
+
+def _enable_lhs(backend: str) -> None:
+    """Append the backend's latency-hiding-scheduler flag to XLA_FLAGS.
+
+    Must run before the first jax device use (XLA reads the env once); the
+    overlapped schedule produces the async windows, this flag makes the
+    backend scheduler actually stretch them over compute.
+    """
+    import os
+
+    flag = _LHS_FLAGS[backend]
+    cur = os.environ.get("XLA_FLAGS", "")
+    if flag not in cur:
+        os.environ["XLA_FLAGS"] = f"{cur} {flag}".strip()
+        print(f"XLA_FLAGS += {flag}", flush=True)
 
 
 def main(argv=None):
     args = build_args(argv)
+    if args.xla_lhs:
+        _enable_lhs(args.xla_lhs)
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -228,7 +267,8 @@ def main(argv=None):
             if sink_step:
                 sink.step(step, loss=loss, gnorm=gnorm, lr=lr,
                           step_ms=step_s[-1] * 1e3 if step_s else None,
-                          metrics=extra_m)
+                          metrics=extra_m,
+                          groups_inflight=bundle.helpers["groups_inflight"])
             if log_step:
                 # post-compile throughput: the first executed step is the
                 # compile step and is excluded from the clock

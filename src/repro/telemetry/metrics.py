@@ -128,6 +128,24 @@ def _unit_state(u: MetricUnit, states_l):
     return s[u.unit] if u.unit >= 0 else s
 
 
+def _state_metric_sums(codec, st) -> dict:
+    """State metrics of one unit, given either its whole state buffer or —
+    from the overlapped step — the raw piece-space carry leaves (a tuple,
+    possibly widened f8->f16; exact, see ``WP.carry_state_dtypes``).
+
+    Every state-metric field is an elementwise sum, so per-piece metrics
+    simply add up; consuming the scan's own leaves keeps each leaf a
+    single-reader reduction instead of forcing the run-space stitch to be
+    refused (and recomputed) into every unit's metric fusion.
+    """
+    parts = st if isinstance(st, (tuple, list)) else (st,)
+    acc: dict = {}
+    for p in parts:
+        for k, v in codec.state_metrics(p).items():
+            acc[k] = acc[k] + v if k in acc else v
+    return acc
+
+
 def _unit_local(u: MetricUnit, grads, states_l, tp: int) -> jax.Array:
     """(NF,) f32 sums for one unit on this device (before psum)."""
     seg = grads[u.group][u.name][..., u.offset:u.offset + u.chunk_elems]
@@ -135,7 +153,7 @@ def _unit_local(u: MetricUnit, grads, states_l, tp: int) -> jax.Array:
     vals = {f: jnp.float32(0) for f in UNIT_FIELDS}
     vals.update(codec.grad_metrics(seg.reshape(-1)))
     if u.stateful:
-        vals.update(codec.state_metrics(_unit_state(u, states_l)))
+        vals.update(_state_metric_sums(codec, _unit_state(u, states_l)))
     vec = jnp.stack([jnp.asarray(vals[f], jnp.float32) for f in UNIT_FIELDS])
     if u.tp_replicated:
         # identical on every TP rank: pre-scale so the dp x tp psum yields

@@ -23,9 +23,18 @@ import jax
 PHASES = ("encode", "exchange", "decode", "apply", "metrics")
 
 
-def phase(name: str):
-    """Named scope for one sync phase (trace-time; nestable)."""
-    return jax.named_scope(f"loco/{name}")
+def phase(name: str, group: int | None = None):
+    """Named scope for one sync phase (trace-time; nestable).
+
+    ``group`` tags the scope with an overlap-schedule stage index
+    (``loco/encode/g0``, ``loco/exchange/g1``, ...), so profiler traces of
+    the pipelined schedule (DESIGN.md §15) show which stage each
+    encode/exchange/decode region belongs to — the interleaving
+    ``encode/g1`` inside ``exchange/g0``'s window is the overlap itself.
+    """
+    if group is None:
+        return jax.named_scope(f"loco/{name}")
+    return jax.named_scope(f"loco/{name}/g{group}")
 
 
 def parse_window(spec: str) -> tuple[int, int]:

@@ -146,9 +146,14 @@ class MetricsSink:
         self._since_flush = 0
 
     def step(self, step: int, *, loss: float, gnorm: float, lr: float,
-             step_ms: float | None, metrics: dict) -> None:
+             step_ms: float | None, metrics: dict,
+             groups_inflight: int | None = None) -> None:
         rec = envelope("step", step=step, loss=loss, gnorm=gnorm, lr=lr,
                        step_ms=step_ms, metrics=metrics)
+        if groups_inflight is not None:
+            # static pipeline depth of the sync schedule (DESIGN.md §15):
+            # 1 = flat single-sync-region, 2 = double-buffered overlap
+            rec["groups_inflight"] = groups_inflight
         self.write(rec)
         for w in self.monitor.check(rec):
             self.n_warnings += 1

@@ -157,10 +157,18 @@ def plan_launches(plan: SyncPlan, pods: int = 1) -> dict[str, int]:
     ``coalesced``:  launches under the wire coalescer — one per comm group
     per mesh axis it crosses (:mod:`repro.core.wirepack`).
     ``comm_groups``: packed buffers per step (launches without the
-    per-axis factor).  All three are trip-weighted by stacked-group
-    ``layers``, matching the byte convention of :func:`plan_report`.
+    per-axis factor).
+    ``overlapped``: launches under the backward-overlapped schedule
+    (DESIGN.md §15) — each pipeline stage issues its own packed
+    collectives, so a comm group cut by a stage boundary launches once
+    per stage it spans (>= ``coalesced``, == when cuts fall on group
+    boundaries).  ``pipeline_stages`` is the deepest per-param stage
+    count (1 = nothing to pipeline).  All counts are trip-weighted by
+    stacked-group ``layers``, matching the byte convention of
+    :func:`plan_report`.
     """
-    per_bucket = coalesced = groups = 0
+    per_bucket = coalesced = groups = overlapped = 0
+    stages = 1
     for pp in plan.params:
         per_bucket += pp.layers * sum(bucket_launches(b, pods)
                                       for b in pp.buckets)
@@ -168,8 +176,12 @@ def plan_launches(plan: SyncPlan, pods: int = 1) -> dict[str, int]:
         gp = WP.build_group_plan(pp, D, pods=max(pods, 1))
         coalesced += pp.layers * gp.launches(axes=_axes(pods))
         groups += pp.layers * len(gp.groups)
+        sched = WP.build_overlap_schedule(pp, D, pods=max(pods, 1))
+        overlapped += pp.layers * sched.launches(axes=_axes(pods))
+        stages = max(stages, sched.n_stages)
     return {"per_bucket": per_bucket, "coalesced": coalesced,
-            "comm_groups": groups}
+            "comm_groups": groups, "overlapped": overlapped,
+            "pipeline_stages": stages}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,11 +218,14 @@ class WireReport:
     dcn_bytes: int = 0   # inter-pod bytes per device per step
     bf16_dcn_bytes: int = 0  # the 16-bit baseline's inter-pod share
     # collective launches per step (see plan_launches): the un-coalesced
-    # per-bucket-leaf count, the coalesced per-comm-group count, and the
-    # number of packed comm groups.
+    # per-bucket-leaf count, the coalesced per-comm-group count, the
+    # number of packed comm groups, and the per-stage count of the
+    # backward-overlapped schedule with its pipeline depth.
     launches_per_bucket: int = 0
     launches_coalesced: int = 0
     comm_groups: int = 0
+    launches_overlapped: int = 0
+    pipeline_stages: int = 1
 
     @property
     def ratio_vs_bf16(self) -> float:
@@ -252,7 +267,9 @@ class WireReport:
             "n_buckets": len(self.buckets),
             "launches": {"per_bucket": self.launches_per_bucket,
                          "coalesced": self.launches_coalesced,
-                         "comm_groups": self.comm_groups},
+                         "comm_groups": self.comm_groups,
+                         "overlapped": self.launches_overlapped,
+                         "pipeline_stages": self.pipeline_stages},
         }
 
     def to_json(self) -> str:
@@ -311,7 +328,9 @@ def plan_report(plan: SyncPlan, pods: int = 1) -> WireReport:
         bf16_dcn_bytes=bf16_dcn,
         launches_per_bucket=launches["per_bucket"],
         launches_coalesced=launches["coalesced"],
-        comm_groups=launches["comm_groups"])
+        comm_groups=launches["comm_groups"],
+        launches_overlapped=launches["overlapped"],
+        pipeline_stages=launches["pipeline_stages"])
 
 
 def format_report(rep: WireReport, max_rows: int = 12) -> str:
@@ -324,7 +343,8 @@ def format_report(rep: WireReport, max_rows: int = 12) -> str:
         f"buckets: {len(rep.buckets)}",
         f"  launches/step: {rep.launches_coalesced} coalesced "
         f"({rep.comm_groups} comm groups; {rep.launches_per_bucket} "
-        "per-bucket uncoalesced)",
+        f"per-bucket uncoalesced; {rep.launches_overlapped} overlapped "
+        f"across {rep.pipeline_stages} pipeline stages)",
     ]
     if rep.pods > 1:
         lines.append(

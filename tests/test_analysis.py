@@ -186,6 +186,93 @@ def test_overlap_sync_collective_exposes_everything():
     assert st.overlap_fraction == 0.0
 
 
+_PIPELINED_HLO = """\
+HloModule pipe
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%cond (s: (s32[], f32[1024], f32[64])) -> pred[] {
+  %s = (s32[], f32[1024], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (s: (s32[], f32[1024], f32[64])) -> (s32[], f32[1024], f32[64]) {
+  %s = (s32[], f32[1024], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %g = f32[1024] get-tuple-element(%s), index=1
+  %x = f32[64] get-tuple-element(%s), index=2
+  %xc = f32[64] add(%x, %x)
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  %prev = f32[1024] all-reduce-done(%g)
+  %next = f32[1024] all-reduce-start(%prev), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = (s32[], f32[1024], f32[64]) tuple(%ip, %next, %xc)
+}
+
+ENTRY %main (p0: f32[1024], p1: f32[64]) -> f32[1024] {
+  %p0 = f32[1024] parameter(0)
+  %p1 = f32[64] parameter(1)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[1024], f32[64]) tuple(%zero, %p0, %p1)
+  %w = (s32[], f32[1024], f32[64]) while(%init), condition=%cond, body=%body
+  %gf = f32[1024] get-tuple-element(%w), index=1
+  %pc = f32[64] add(%p1, %p1)
+  ROOT %fin = f32[1024] all-reduce-done(%gf)
+}
+"""
+
+
+def test_overlap_pipelined_cross_computation_windows():
+    """Software-pipelined schedule (the overlap schedule of DESIGN.md §15,
+    and XLA collective pipelining): each iteration's -start closes with the
+    -done at the TOP of the next iteration, and the last start's done sits
+    after the loop.  No window opens and closes in one program-order walk,
+    so these starts were previously dropped from the hidden total.
+
+    Hand count at unit bandwidths: body compute before the done is the
+    f32[64] add (256) + s32[] add (4) = 260 byte-seconds; wire per
+    all-reduce is 2 * 4096 * 3/4 = 6144.  Three iteration crossings hide
+    min(6144, 0 + 260) each; the last start re-opens in ENTRY, accrues the
+    f32[64] add (256) there, and is closed FIFO by the epilogue done."""
+    from repro.analysis.hlo_stats import overlap_stats
+
+    st = overlap_stats(_PIPELINED_HLO, peak_flops=1.0, hbm_bw=1.0,
+                       ici_bw=1.0)
+    assert st.collective_s == 4 * 6144.0
+    assert st.n_async == 4 and st.n_sync == 0
+    assert st.hidden_s == 3 * 260.0 + 256.0
+    assert st.overlap_fraction > 0
+
+
+def test_overlap_pipelined_start_last_done_first_hides_nothing():
+    """The degenerate body order {done; compute; start} has the window in
+    flight only across the iteration boundary with no compute between the
+    start (last op) and the next done (first op): crossings hide zero, and
+    only the ENTRY epilogue compute is credited to the final window."""
+    from repro.analysis.hlo_stats import overlap_stats
+
+    hlo = _PIPELINED_HLO.replace("""  %xc = f32[64] add(%x, %x)
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  %prev = f32[1024] all-reduce-done(%g)
+  %next = f32[1024] all-reduce-start(%prev), replica_groups={{0,1,2,3}}, to_apply=%add
+""", """  %prev = f32[1024] all-reduce-done(%g)
+  %xc = f32[64] add(%x, %x)
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  %next = f32[1024] all-reduce-start(%prev), replica_groups={{0,1,2,3}}, to_apply=%add
+""")
+    st = overlap_stats(hlo, peak_flops=1.0, hbm_bw=1.0, ici_bw=1.0)
+    assert st.collective_s == 4 * 6144.0
+    assert st.hidden_s == 256.0  # epilogue window only
+
+
 def test_overlap_consistent_with_analyze(mesh22):
     """On a real compiled module the estimator's totals must agree with
     analyze(): same wire time (at ICI bandwidth), same launch count, and

@@ -1,0 +1,448 @@
+"""Backward-overlapped bucket scheduling (ISSUE 7 tentpole).
+
+Schedule geometry (readiness table, atomic runs, stage balance), the
+overlapped-vs-legacy bit-exactness contract over the strategy x quant x
+hier sweep (reusing test_wirepack's config cells), HLO launch accounting
+of the staged schedule, and the retrace regression pinning that readiness
+tables keep the PR 5 no-retrace contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.hlo_stats import collective_launches
+from repro.core import wirepack as WP
+from repro.core.comm import all_gather_flat, dist_sync_buckets
+from test_wirepack import (EF, FP, HIER, HIER4, HIERK, LOCO4, LOCO4K, LOCO8,
+                           NAIVET, ONEBIT, _stack_states, make_plan)
+
+
+def _run(mesh, dp_axes, pplan, g_nodes, states, overlap):
+    """One bucketed sync on a real mesh -> (gathered ghat, new states)."""
+    def body(g, sts):
+        flat = tuple(s.reshape(-1) for s in sts)
+        sh, ns = dist_sync_buckets(g.reshape(-1), flat, pplan, dp_axes,
+                                   overlap=overlap)
+        return (all_gather_flat(sh, dp_axes)[None],
+                tuple(n[None] for n in ns))
+
+    spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+    sspec = tuple(spec for _ in pplan.buckets)
+    fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(spec, sspec),
+                               out_specs=(P(None), sspec), check_vma=False))
+    return fn(g_nodes, states)
+
+
+# ---------------------------------------------------------------------------
+# schedule geometry: the readiness table
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_partitions_chunk_space():
+    """Stages partition chunk space contiguously; the readiness table is
+    ascending and ends at chunklen; pieces cut only on bucket edges."""
+    pplan = make_plan((LOCO4,) * 4, D=2)
+    sched = WP.build_overlap_schedule(pplan, 2)
+    assert sched.n_stages == 2 and sched.pipelined
+    assert sched.readiness == (1024, 2048)
+    # a uniform plan's single fused run splits into one piece per stage
+    (p0,) = sched.stages[0].pieces
+    (p1,) = sched.stages[1].pieces
+    assert p0.buckets == (0, 1) and p1.buckets == (2, 3)
+    assert p0.run_index == p1.run_index == 0
+    assert (p0.col_off, p1.col_off) == (0, 1024)
+    assert p0.run_total == p1.run_total == 2048
+    assert not p0.whole and not p1.whole
+    # contiguous cover: piece offsets chain across stages
+    assert p1.offset == p0.offset + p0.chunk_total
+
+
+def test_schedule_atomic_nonfusible_runs():
+    """tensor/onebit/hier runs never split: their whole-segment statistics
+    make a cut lossy, so each stays one piece in exactly one stage."""
+    pplan = make_plan((NAIVET, ONEBIT, LOCO4, LOCO4), D=2)
+    sched = WP.build_overlap_schedule(pplan, 2)
+    pieces = [p for st in sched.stages for p in st.pieces]
+    by_slot = {p.slot: p for p in pieces}
+    assert by_slot[0].whole and by_slot[0].buckets == (0,)   # naivet
+    assert by_slot[1].whole and by_slot[1].buckets == (1,)   # onebit
+    # the fusible loco pair may land split or together, but covers both
+    assert sum(len(p.buckets) for p in pieces) == 4
+
+
+def test_schedule_degenerate_single_stage():
+    """A single-bucket plan (or one atomic run) can't pipeline: one stage,
+    pipelined=False — the runtime falls back to the flat schedule."""
+    for cfgs in [(LOCO4,), (NAIVET,)]:
+        sched = WP.build_overlap_schedule(make_plan(cfgs, D=2), 2)
+        assert sched.n_stages == 1 and not sched.pipelined
+
+
+def test_schedule_launch_accounting():
+    """Per-stage group plans: the overlapped schedule pays one launch per
+    comm group per stage; group geometry within a stage matches what
+    build_group_plan produces for those segments."""
+    pplan = make_plan((LOCO4, NAIVET, FP, FP), D=2)
+    sched = WP.build_overlap_schedule(pplan, 2)
+    assert sched.n_stages == 2
+    s0, s1 = sched.stages
+    # greedy cut at chunklen/2: stage 0 = loco + naivet, stage 1 = fp pair
+    assert [p.slot for p in s0.pieces] == [0, 1]
+    # the fp pair is one fused run -> one merged piece covering both buckets
+    assert [p.buckets for p in s1.pieces] == [(2, 3)]
+    assert {(g.stage, g.kind) for g in s0.gplan.groups} == {
+        ("flat", "a2a"), ("flat", "gather")}
+    assert {(g.stage, g.kind) for g in s1.gplan.groups} == {
+        ("flat", "reduce")}
+    assert sched.comm_groups == 3
+    assert sched.launches(axes=1) == 3
+    flat = WP.build_group_plan(pplan, 2)
+    # same signatures overall; the overlap only splits them across stages
+    assert {(g.stage, g.kind) for st in sched.stages
+            for g in st.gplan.groups} == {(g.stage, g.kind)
+                                          for g in flat.groups}
+    # telemetry accounting: a uniform plan's single a2a group is cut by
+    # the stage boundary, so the overlapped schedule pays one extra launch
+    from repro.core import buckets as BK
+    from repro.telemetry import wire as WIRE
+    got = WIRE.plan_launches(BK.SyncPlan(params=(make_plan((LOCO4,) * 4,
+                                                           D=2),)))
+    assert got["coalesced"] == 1 and got["overlapped"] == 2
+    assert got["pipeline_stages"] == 2
+
+
+def test_schedule_readiness_uses_bucket_ends():
+    """ready bounds are bucket chunk_end values (the readiness table is
+    computed from bucket<->param spans, not byte heuristics)."""
+    pplan = make_plan((LOCO4, LOCO8, LOCO4, LOCO8), D=2)
+    sched = WP.build_overlap_schedule(pplan, 2)
+    ends = {b.chunk_end for b in pplan.buckets}
+    for r in sched.readiness:
+        assert r in ends
+    assert sched.readiness[-1] == pplan.chunklen
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: overlapped == legacy schedule (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfgs", [
+    (LOCO4, LOCO8, NAIVET, FP),
+    (ONEBIT, EF, LOCO4, FP),
+    (LOCO4K, LOCO4, NAIVET),
+    (LOCO4, LOCO4, LOCO4, LOCO4),
+    (LOCO4, LOCO4, LOCO8, LOCO8, FP, FP),
+    (LOCO4K, LOCO4K, EF, EF),
+], ids=["quant-mix-fp", "onebit-ef", "kernels-cell", "fused-uniform",
+        "fused-runs", "fused-kernels"])
+def test_overlap_matches_legacy_flat(mesh22, cfgs):
+    """Two sync rounds (the second with non-zero error states) produce
+    bit-identical shards AND states under the pipelined and the flat
+    schedule, across strategies x quant modes x kernels cells."""
+    N = 2
+    pplan = make_plan(cfgs, D=N)
+    n = N * pplan.chunklen
+    g = jax.random.normal(jax.random.PRNGKey(3), (N, n)) * 1e-3
+    outs = {}
+    for ov in (True, False):
+        st = _stack_states(pplan, N)
+        rounds = []
+        for r in range(2):
+            full, st = _run(mesh22, ("data",), pplan, g * (r + 1), st, ov)
+            rounds.append(np.asarray(full[0]))
+        outs[ov] = (rounds, st)
+    for a, b in zip(outs[True][0], outs[False][0]):
+        np.testing.assert_array_equal(a, b)
+    for sa, sb in zip(outs[True][1], outs[False][1]):
+        np.testing.assert_array_equal(
+            np.asarray(sa.astype(jnp.float32)),
+            np.asarray(sb.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("cfgs", [
+    (HIER, LOCO4, FP),
+    (HIER4, NAIVET, HIER),
+    (HIERK, LOCO4K, FP),
+], ids=["hier-flat-fp", "hier4-tensor", "hier-kernels"])
+def test_overlap_matches_legacy_hier(mesh_pod, cfgs):
+    """Same contract on the 2-axis (pod, data) mesh: hier runs stay atomic
+    but ride per-stage packed collectives, including the in-stage stage-2
+    (DCN) leg — still bit-exact with the flat schedule."""
+    N = 4
+    pplan = make_plan(cfgs, D=N)
+    n = N * pplan.chunklen
+    g = jax.random.normal(jax.random.PRNGKey(11), (N, n)) * 1e-3
+    outs = {}
+    for ov in (True, False):
+        st = _stack_states(pplan, N)
+        rounds = []
+        for r in range(2):
+            full, st = _run(mesh_pod, ("pod", "data"), pplan,
+                            g * (r + 1), st, ov)
+            rounds.append(np.asarray(full[0]))
+        outs[ov] = (rounds, st)
+    for a, b in zip(outs[True][0], outs[False][0]):
+        np.testing.assert_array_equal(a, b)
+    for sa, sb in zip(outs[True][1], outs[False][1]):
+        np.testing.assert_array_equal(
+            np.asarray(sa.astype(jnp.float32)),
+            np.asarray(sb.astype(jnp.float32)))
+
+
+def test_run_space_overlap_parity(mesh22):
+    """dist_sync_runs(overlap=True) — the training hot path's form, where
+    run-space states are converted to the schedule's piece layout, encoded
+    per piece, and merged back — is bit-exact with the bucket-space flat
+    schedule."""
+    from repro.core import flatparam as FPm
+    from repro.core.comm import dist_sync_runs
+
+    N = 2
+    pplan = make_plan((LOCO4, LOCO4, LOCO8, NAIVET, FP), D=N)
+    n = N * pplan.chunklen
+    g = jax.random.normal(jax.random.PRNGKey(9), (N, n)) * 1e-3
+    bucket_states = _stack_states(pplan, N)
+
+    def body_runs(gg, sts):
+        flat = tuple(s.reshape(-1) for s in sts)
+        runs = FPm.fuse_run_states(pplan, flat, N)
+        sh, ns = dist_sync_runs(gg.reshape(-1), runs, pplan, ("data",),
+                                overlap=True)
+        back = FPm.split_run_states(pplan, ns, N)
+        return (all_gather_flat(sh, ("data",))[None],
+                tuple(b[None] for b in back))
+
+    spec = P("data")
+    sspec = tuple(spec for _ in pplan.buckets)
+    fn = jax.jit(jax.shard_map(body_runs, mesh=mesh22,
+                               in_specs=(spec, sspec),
+                               out_specs=(P(None), sspec), check_vma=False))
+    full_r, ns_r = fn(g, bucket_states)
+    full_b, ns_b = _run(mesh22, ("data",), pplan, g, bucket_states, False)
+    np.testing.assert_array_equal(np.asarray(full_r[0]),
+                                  np.asarray(full_b[0]))
+    for a, b in zip(ns_r, ns_b):
+        np.testing.assert_array_equal(
+            np.asarray(a.astype(jnp.float32)),
+            np.asarray(b.astype(jnp.float32)))
+
+
+def test_overlap_requires_coalesce():
+    with pytest.raises(ValueError, match="coalesce"):
+        pplan = make_plan((LOCO4, LOCO4), D=2)
+        dist_sync_buckets(jnp.zeros((2 * pplan.chunklen,)),
+                          tuple(jnp.zeros((b.seg_elems,)) for b in
+                                pplan.buckets),
+                          pplan, ("data",), coalesce=False, overlap=True)
+
+
+# ---------------------------------------------------------------------------
+# HLO: staged launch counts + the barrier is really in the module
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_launch_counts_match_schedule(mesh22):
+    """Compiled collective launch count == the schedule's comm groups: the
+    uniform 4-bucket plan pipelines into 2 stages x 1 a2a group (the flat
+    schedule compiles to 1), and the optimization_barrier survives into
+    the compiled module (the double-buffer pin is not optimized away)."""
+    N = 2
+    pplan = make_plan((LOCO4,) * 4, D=N)
+    g = jax.random.normal(jax.random.PRNGKey(5), (N, N * pplan.chunklen))
+    sched = WP.build_overlap_schedule(pplan, N)
+    assert sched.comm_groups == 2
+
+    for ov, want_a2a in ((True, 2), (False, 1)):
+        def body(gg, sts, _ov=ov):
+            flat = tuple(s.reshape(-1) for s in sts)
+            sh, _ = dist_sync_buckets(gg.reshape(-1), flat, pplan,
+                                      ("data",), overlap=_ov)
+            return sh[None]
+
+        st = _stack_states(pplan, N)
+        fn = jax.jit(jax.shard_map(
+            body, mesh=mesh22,
+            in_specs=(P("data"), tuple(P("data") for _ in pplan.buckets)),
+            out_specs=P("data"), check_vma=False))
+        low = fn.lower(g, st)
+        counts = collective_launches(low.compile().as_text())
+        assert counts.get("all-to-all", 0) == want_a2a, (ov, counts)
+        # the double-buffer pin is present in the lowered module (backends
+        # fold the barrier away after scheduling, so check pre-optimization)
+        assert ("optimization_barrier" in low.as_text()) == ov
+
+
+# ---------------------------------------------------------------------------
+# retrace regression: readiness tables keep the PR 5 no-retrace contract
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_no_retraces(mesh22, monkeypatch):
+    """The overlapped run-space gather builds its custom_vjp closure once
+    (overlap is part of the cache key, so flipping the flag costs exactly
+    one new closure, never a steady-state rebuild) and executing the
+    compiled step never re-enters python."""
+    from repro.core import codec as codec_lib
+    from repro.core import flatparam as FPm
+    from repro.core import hijack
+    from repro.core.hijack import gather_with_sync_runs
+
+    calls: list[str] = []
+    orig = codec_lib.Codec.encode
+
+    def counting(self, g, state, key=None):
+        calls.append(self.cfg.strategy)
+        return orig(self, g, state, key)
+
+    monkeypatch.setattr(codec_lib.Codec, "encode", counting)
+
+    N, c = 2, 512
+    pplan = make_plan((LOCO4, LOCO8, NAIVET, LOCO4), c=c, D=N)
+    x = jax.random.normal(jax.random.PRNGKey(2), (N * 4 * c,))
+
+    def build(overlap):
+        def step(w, sts, xx):
+            def loss(w, s):
+                out = gather_with_sync_runs(w, s, pplan, ("data",),
+                                            overlap=overlap)
+                return jnp.sum(out.astype(jnp.float32) * xx)
+            flat = tuple(s.reshape(-1) for s in sts)
+            runs = FPm.fuse_run_states(pplan, flat, N)
+            return jax.grad(loss, argnums=(0, 1))(w, runs)
+
+        sspec = tuple(P("data") for _ in pplan.buckets)
+        rspec = tuple(P("data") for _ in WP.encode_runs(pplan))
+        return jax.jit(jax.shard_map(
+            step, mesh=mesh22, in_specs=(P("data"), sspec, P(None)),
+            out_specs=(P("data"), rspec), check_vma=False))
+
+    hijack._make_run_gather.cache_clear()
+    w = jnp.zeros((N * 4 * c,), jnp.bfloat16)
+    st = _stack_states(pplan, N)
+    compiled = build(True).lower(w, st, x).compile()
+    assert hijack._make_run_gather.cache_info().misses == 1
+    # flipping the flag builds ONE more closure (distinct cache key) ...
+    build(False).lower(w, st, x).compile()
+    assert hijack._make_run_gather.cache_info().misses == 2
+    # ... and steady state never re-enters python
+    calls.clear()
+    g, ns = compiled(w, st, x)
+    jax.block_until_ready(g)
+    assert calls == []
+
+
+# ---------------------------------------------------------------------------
+# piece-space state carry (the scan layout, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def test_state_pieces_geometry():
+    """state_pieces partitions each stateful split run's chunk space in
+    col_off order, gives every other run one whole leaf, and the layout is
+    independent of the pod factor (producer and consumer may disagree on
+    pods and still agree on the carry pytree)."""
+    pplan = make_plan((LOCO4, LOCO4, LOCO8, NAIVET, FP), D=2)
+    layout = WP.state_pieces(pplan, 2)
+    runs = WP.encode_runs(pplan)
+    by_run = {}
+    for sp in layout:
+        by_run.setdefault(sp.run_index, []).append(sp)
+    for ri, run in enumerate(runs):
+        ps = by_run[ri]
+        if ps[0].col_off is None:
+            assert len(ps) == 1 and ps[0].chunk == run.chunk_total
+        else:
+            assert run.sync.needs_state()
+            offs = sorted((p.col_off, p.chunk) for p in ps)
+            assert offs[0][0] == 0
+            assert all(a + c == b for (a, c), (b, _) in zip(offs, offs[1:]))
+            assert sum(c for _, c in offs) == run.chunk_total
+    assert WP.state_pieces(pplan, 2, pods=2) == layout
+
+
+def test_piece_space_carry_parity(mesh22):
+    """Carrying piece-space states through a scan (the training layout:
+    convert once outside, piece_space=True inside) is bit-exact with the
+    run-space overlap path and with the legacy flat schedule, state dtypes
+    included."""
+    from repro.core import flatparam as FPm
+    from repro.core.comm import dist_sync_runs
+
+    N = 2
+    pplan = make_plan((LOCO4, LOCO4, LOCO8, NAIVET, FP), D=N)
+    n = N * pplan.chunklen
+    g = jax.random.normal(jax.random.PRNGKey(11), (N, n)) * 1e-3
+    bucket_states = _stack_states(pplan, N)
+    K = 3  # chained syncs, like grad-accum microbatches
+
+    def make(overlap, piece):
+        def body(gg, sts):
+            flat = tuple(s.reshape(-1) for s in sts)
+            runs = FPm.fuse_run_states(pplan, flat, N)
+            if piece:
+                runs = WP.overlap_state_pieces(pplan, runs, N)
+
+            def it(carry, _):
+                sh, ns = dist_sync_runs(gg.reshape(-1), carry, pplan,
+                                        ("data",), overlap=overlap,
+                                        piece_space=piece)
+                return ns, sh
+
+            ns, shs = jax.lax.scan(it, runs, jnp.arange(K))
+            if piece:
+                ns = WP.merge_state_pieces(pplan, ns, N)
+            back = FPm.split_run_states(pplan, ns, N)
+            return (all_gather_flat(shs[-1], ("data",))[None],
+                    tuple(b[None] for b in back))
+
+        spec = P("data")
+        sspec = tuple(spec for _ in pplan.buckets)
+        return jax.jit(jax.shard_map(body, mesh=mesh22,
+                                     in_specs=(spec, sspec),
+                                     out_specs=(P(None), sspec),
+                                     check_vma=False))
+
+    full_f, ns_f = make(False, False)(g, bucket_states)
+    full_o, ns_o = make(True, False)(g, bucket_states)
+    full_p, ns_p = make(True, True)(g, bucket_states)
+    np.testing.assert_array_equal(np.asarray(full_f[0]), np.asarray(full_p[0]))
+    np.testing.assert_array_equal(np.asarray(full_o[0]), np.asarray(full_p[0]))
+    for a, b, c in zip(ns_f, ns_o, ns_p):
+        assert a.dtype == b.dtype == c.dtype
+        np.testing.assert_array_equal(np.asarray(a.astype(jnp.float32)),
+                                      np.asarray(c.astype(jnp.float32)))
+        np.testing.assert_array_equal(np.asarray(b.astype(jnp.float32)),
+                                      np.asarray(c.astype(jnp.float32)))
+
+
+def test_piece_space_requires_overlap():
+    from repro.core.comm import dist_sync_runs
+
+    pplan = make_plan((LOCO4, LOCO4), D=2)
+    with pytest.raises(ValueError, match="piece_space"):
+        dist_sync_runs(jnp.zeros((pplan.chunklen,)), (), pplan, ("data",),
+                       overlap=False, piece_space=True)
+
+
+def test_piece_space_carry_widens_f8():
+    """Piece-space leaves store f8 error states widened to f16 (the
+    XLA:CPU dus emitter scalarizes f8 roots — DESIGN.md §15) and
+    merge narrows them back to the stored dtype, bit-exactly."""
+    from repro.core import flatparam as FPm
+
+    N = 2
+    pplan = make_plan((LOCO4,) * 4, D=N)
+    bst = _stack_states(pplan, N)
+    flat = tuple(s.reshape(N, -1)[0] for s in bst)  # one device's leaves
+    runs_sp = FPm.fuse_run_states(pplan, flat, N)
+    assert runs_sp[0].dtype == jnp.float8_e4m3fn
+    pieces = WP.overlap_state_pieces(pplan, runs_sp, N)
+    assert all(p.dtype == jnp.float16 for p in pieces)
+    back = WP.merge_state_pieces(pplan, pieces, N)
+    for a, b in zip(runs_sp, back):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a.astype(jnp.float32)),
+                                      np.asarray(b.astype(jnp.float32)))

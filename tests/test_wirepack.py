@@ -365,11 +365,16 @@ def test_plan_launches_accounting():
     got = WIRE.plan_launches(plan, pods=1)
     # per bucket: loco 2 split leaves, naivet split+gather, fp 1 -> 5
     # coalesced: one a2a + one gather + one reduce -> 3 groups, 3 launches
-    assert got == {"per_bucket": 5, "coalesced": 3, "comm_groups": 3}
+    # overlapped: stage cut {loco,naivet}|{fp} falls on group boundaries,
+    # so the 2-stage schedule launches the same 3 collectives
+    assert got == {"per_bucket": 5, "coalesced": 3, "comm_groups": 3,
+                   "overlapped": 3, "pipeline_stages": 2}
     rep = WIRE.plan_report(plan)
     assert rep.launches_per_bucket == 5
     assert rep.launches_coalesced == 3
     assert rep.comm_groups == 3
+    assert rep.launches_overlapped == 3
+    assert rep.pipeline_stages == 2
     assert sum(b.launches for b in rep.buckets) == 5
     assert '"per_bucket": 5' in rep.to_json()
     assert "launches/step" in WIRE.format_report(rep)
@@ -383,7 +388,9 @@ def test_plan_launches_hier():
     # x 2 axes; fp = 2 axes -> 4 + 4 + 2 = 10
     # coalesced: hier1 a2a + hier2 a2a (1 axis each) + flat a2a + reduce
     # (2 axes each) -> 6 launches over 4 groups
-    assert got == {"per_bucket": 10, "coalesced": 6, "comm_groups": 4}
+    # overlapped: {hier,loco}|{fp} cut keeps every group whole -> same 6
+    assert got == {"per_bucket": 10, "coalesced": 6, "comm_groups": 4,
+                   "overlapped": 6, "pipeline_stages": 2}
 
 
 # ---------------------------------------------------------------------------
