@@ -124,6 +124,9 @@ HIER_PODS, HIER_DD, HIER_TP = 4, 16, 4
 # interconnect operating points (bytes/s): intra-pod ICI vs cross-pod DCN
 BW_ICI = 50 * GB
 BW_DCN = {"DCN-fast": 25 * GB, "DCN-slow": 6 * GB}
+# 3-tier WAN operating point (DESIGN.md §16): 2 WAN sites, ~1 GB/s between
+HIER_WANS = 2
+BW_WAN = 1 * GB
 
 
 def hier_projection(quick: bool = False, out: str = "BENCH_comm.json") -> dict:
@@ -180,25 +183,97 @@ def hier_projection(quick: bool = False, out: str = "BENCH_comm.json") -> dict:
                 f"dcn={rep.dcn_bytes/2**20:.2f}MiB "
                 f"dcn_vs_bf16={rep.dcn_ratio_vs_bf16:.4f}x")
 
+    # ---- tiered cadence + WAN projection (DESIGN.md §16) --------------------
+    # per-step ICI (the bucket codec), every-4 DCN (cadence-gated stage 2),
+    # top-k 1% every-16 WAN: the ragged/cadence schedule's headline cells.
+    topk_every4 = POL._preset("topk+every4", loco4)
+    wan_sync = POL._preset("loco+hier+wan:topk1%every16", loco4)
+    wan_sync = dataclasses.replace(
+        wan_sync, tiers=(dataclasses.replace(wan_sync.tiers[0], every=4),)
+        + wan_sync.tiers[1:])
+    wan_topo = MeshTopo(dp_axes=("wan", "pod", "data"), tp_axis="model",
+                        dp=HIER_WANS * HIER_PODS * HIER_DD, tp=HIER_TP,
+                        pods=HIER_PODS, wans=HIER_WANS)
+
+    # flat top-k + cadence cell on the 2-tier topology
+    plan = BK.make_sync_plan(groups, topo, BK.BucketConfig(),
+                             POL.uniform(topk_every4))
+    rep = WIRE.plan_report(plan, pods=HIER_PODS)
+    tk = rep.tiers[0]
+    results["flat_topk1pct_every4"] = {
+        "wire_bytes": rep.total_wire,
+        "tiers": [t.record() for t in rep.tiers],
+        "effective_bytes_per_step": tk.effective_bytes,
+    }
+    csv_row("comm_hier/flat_topk1pct_every4", tk.effective_bytes,
+            f"capacity={tk.capacity_bytes/2**20:.2f}MiB/sync "
+            f"effective={tk.effective_bytes/2**20:.3f}MiB/step (every=4)")
+
+    # 3-tier WAN cell
+    plan = BK.make_sync_plan(groups, wan_topo, BK.BucketConfig(),
+                             POL.uniform(wan_sync))
+    rep = WIRE.plan_report(plan, pods=HIER_PODS, wans=HIER_WANS)
+    tiers = {t.network: t for t in rep.tiers}
+    bw_of = {"ici": BW_ICI, "dcn": BW_DCN["DCN-slow"], "wan": BW_WAN}
+    comm_s = sum(t.effective_bytes / bw_of[t.network] for t in rep.tiers)
+    results["wan_loco4_topk1pct"] = {
+        "wire_bytes": rep.total_wire,
+        "tiers": [t.record() for t in rep.tiers],
+        "wan_effective_bytes_per_step": tiers["wan"].effective_bytes,
+        "bf16_wan_bytes": rep.bf16_wan_bytes,
+        "comm_s_modeled": comm_s,
+    }
+    for t in rep.tiers:
+        csv_row(f"comm_hier/wan_tier_{t.network}", t.effective_bytes,
+                f"every={t.every} capacity={t.capacity_bytes/2**20:.3f}MiB"
+                f"/sync effective={t.effective_bytes/2**20:.4f}MiB/step "
+                f"[{'+'.join(t.strategies)}]")
+
     # the predicted saving the two-stage scheduler exists for: stage 2 moves
     # ~bits2/32 of the fp32 pod mean instead of the full stage-1 wire.
     flat, hier = results["flat_loco4"], results["hier_loco4"]
     dcn_saving = flat["dcn_bytes"] / max(hier["dcn_bytes"], 1)
     slow_speedup = flat["comm_s_DCN-slow"] / hier["comm_s_DCN-slow"]
+    tkc = results["flat_topk1pct_every4"]["tiers"][0]
+    wan_eff = results["wan_loco4_topk1pct"]["wan_effective_bytes_per_step"]
+    wan_vs_bf16 = wan_eff / max(results["wan_loco4_topk1pct"]
+                                ["bf16_wan_bytes"], 1)
+    dcn_tier = [t for t in results["wan_loco4_topk1pct"]["tiers"]
+                if t["network"] == "dcn"][0]
     results["checks"] = {
         "dcn_saving_hier_vs_flat_loco4": dcn_saving,
         "comm_speedup_DCN-slow": slow_speedup,
         "hier_dcn_below_flat": hier["dcn_bytes"] < flat["dcn_bytes"],
         "hier_ici_not_worse_than_2x": hier["ici_bytes"]
         <= 2 * flat["wire_bytes"],
+        # tiered cadence cells (DESIGN.md §16)
+        "topk_every4_effective_below_quarter_capacity":
+            tkc["effective_bytes"] <= tkc["capacity_bytes"] / 4,
+        "dcn_every4_effective_is_quarter_capacity":
+            abs(dcn_tier["effective_bytes"] * dcn_tier["every"]
+                - dcn_tier["capacity_bytes"]) < 1.0,
+        "wan_tier_vs_bf16_wan_bytes": wan_vs_bf16,
+        "wan_tier_below_3pct_of_bf16": wan_vs_bf16 <= 0.03,
     }
     csv_row("comm_hier/dcn_saving", dcn_saving,
             f"flat_dcn/hier_dcn at loco4; comm_speedup(DCN-slow)="
             f"{slow_speedup:.3f}x")
+    csv_row("comm_hier/wan_saving", wan_vs_bf16,
+            "per-step WAN bytes of the topk-1%-every-16 tier vs the bf16 "
+            "baseline's WAN share (modeled from the byte-matched plan, "
+            "like the DCN saving)")
     assert results["checks"]["hier_dcn_below_flat"], (
         "two-stage exchange must cut inter-pod bytes", flat, hier)
     assert results["checks"]["hier_ici_not_worse_than_2x"], (
         "stage-1 ICI volume blew past 2x the flat wire", flat, hier)
+    assert results["checks"]["topk_every4_effective_below_quarter_capacity"], (
+        "topk+every4 must amortize to <= 1/4 of the capacity wire", tkc)
+    assert results["checks"]["dcn_every4_effective_is_quarter_capacity"], (
+        "every-4 DCN tier must report exactly capacity/4 effective bytes",
+        dcn_tier)
+    assert results["checks"]["wan_tier_below_3pct_of_bf16"], (
+        "topk-1% WAN tier must stay under 3% of the bf16 WAN share",
+        results["wan_loco4_topk1pct"])
     write_bench_json(out, "comm_hier", results)
     return results
 

@@ -56,15 +56,31 @@ class WireLeaf:
       device sends ``nbytes`` and receives ``D * nbytes``.
     * ``none``   -- static metadata (e.g. the fixed-mode scale): carried in
       the wire pytree for decode but never exchanged.
+
+    ``count_of`` makes the leaf **ragged** (DESIGN.md §16): the leaf is a
+    capacity-padded array of fixed-size slots — ``shape`` is the static
+    *capacity* byte budget — and the sibling leaf named ``count_of`` (a
+    u32 per slot-group, in the same wire dict) says how many leading slots
+    per group are live.  Slots at or past the count are dead padding: the
+    encoder writes zeros there and unpack re-zeroes them after the
+    exchange, so the wire geometry stays static (one all-to-all row size
+    per step, no retrace) while the *information* content varies.  A dense
+    leaf is the ``count == capacity`` special case.  Ragged leaves must be
+    ``comm="split"``.
     """
 
     shape: tuple[int, ...]
     dtype: Any
     comm: Literal["split", "gather", "none"] = "split"
+    count_of: str | None = None
 
     @property
     def nbytes(self) -> int:
         return math.prod(self.shape) * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def ragged(self) -> bool:
+        return self.count_of is not None
 
 
 class Codec:
@@ -465,3 +481,123 @@ class OnebitCodec(Codec):
             "scale_cnt": jnp.float32(1),
             "scale_bad": jnp.float32(1) - finite.astype(jnp.float32),
         }
+
+
+# ---------------------------------------------------------------------------
+# topk: block-local top-k sparsification with error feedback (ragged wire)
+# ---------------------------------------------------------------------------
+
+# Selection block: top-k is taken per contiguous TOPK_SEL-element block of
+# the compensated gradient.  Equal to buckets.ALIGN so every bucket edge is
+# also a selection-block edge — bucketed and monolithic runs select over
+# identical blocks, and every wire leaf splits evenly over the dp peers.
+TOPK_SEL = 512
+
+
+def topk_k(cfg: SyncConfig) -> int:
+    """Live slots kept per TOPK_SEL block (>= 1)."""
+    return max(1, min(TOPK_SEL, int(round(cfg.topk_frac * TOPK_SEL))))
+
+
+def topk_cap(cfg: SyncConfig) -> int:
+    """Static slot capacity per block: k rounded up to a multiple of 4.
+
+    The wire budget (what pack/telemetry size the ragged leaves at).  A
+    multiple of 4 keeps each block's idx/val wire bytes 8-byte aligned;
+    ``topk_frac=1.0`` gives cap == TOPK_SEL — the dense special case.
+    """
+    return min(TOPK_SEL, -(-topk_k(cfg) // 4) * 4)
+
+
+def _topk_scatter(idx: jax.Array, val: jax.Array, cnt: jax.Array) -> jax.Array:
+    """Reconstruct (u * TOPK_SEL,) fp32 from capacity-padded (u, cap) slots.
+
+    The one decode used by encoder (for exact error feedback) and receiver
+    (after the exchange), so the compensated error is computed against
+    exactly what peers reconstruct.  Slots at or past ``cnt`` are dead:
+    their values are forced to zero before the scatter-add (top-k indices
+    within a block are distinct, so live adds never collide).
+    """
+    u, cap = idx.shape
+    mask = jnp.arange(cap, dtype=jnp.int32)[None, :] < cnt.astype(jnp.int32)[:, None]
+    v = jnp.where(mask, val.astype(jnp.float32), 0.0)
+    out = jnp.zeros((u, TOPK_SEL), jnp.float32)
+    out = out.at[jnp.arange(u, dtype=jnp.int32)[:, None],
+                 idx.astype(jnp.int32)].add(v)
+    return out.reshape(-1)
+
+
+@register_codec
+class TopKCodec(Codec):
+    """SparseLoCo-style block top-k with LoCo error feedback (DESIGN.md §16).
+
+    Per TOPK_SEL block of the compensated gradient ``h = g + e``, the
+    ``topk_k`` largest-|h| entries cross the wire as (u16 index, bf16
+    value) pairs in a capacity-padded ragged leaf pair, plus a u32 live
+    count per block; everything not transmitted feeds the LoCo moving-
+    average error state (Eqns. 2/5/7 with the sparse reconstruction as
+    ``d``).  Entries that are exactly zero are never transmitted (they
+    reconstruct exactly anyway), so counts can land anywhere in
+    ``[0, k]`` — the ragged wire's raison d'être.
+    """
+
+    strategy = "topk"
+
+    def state_dtype(self):
+        return Q.error_dtype(self.cfg.quant)
+
+    def state_decode(self, state):
+        return Q.error_decode(state, self.cfg.quant)
+
+    def state_encode(self, e):
+        return Q.error_encode(e, self.cfg.quant)
+
+    def _state_sat_count(self, state):
+        bound = {"f8": 448.0, "int8": 127.0}.get(self.cfg.quant.error_codec)
+        if bound is None:
+            return jnp.float32(0)
+        v = jnp.abs(state.astype(jnp.float32))
+        return jnp.sum(v >= bound).astype(jnp.float32)
+
+    def wire_shapes(self, n: int) -> dict[str, WireLeaf]:
+        assert n % TOPK_SEL == 0, (n, TOPK_SEL)
+        u = n // TOPK_SEL
+        cap = topk_cap(self.cfg)
+        return {
+            "cnt": WireLeaf((u,), jnp.uint32),
+            "idx": WireLeaf((u * cap,), jnp.uint16, count_of="cnt"),
+            "val": WireLeaf((u * cap,), jnp.bfloat16, count_of="cnt"),
+        }
+
+    def encode_ref(self, g, state, key=None):
+        cfg, qc = self.cfg, self.cfg.quant
+        k, cap = topk_k(cfg), topk_cap(cfg)
+        g = g.astype(jnp.float32)
+        e = Q.error_decode(state, qc)
+        h = g + e                                                 # Eqn. (2)
+        hb = h.reshape(-1, TOPK_SEL)
+        u = hb.shape[0]
+        av, ai = jax.lax.top_k(jnp.abs(hb), k)       # desc -> valid is a prefix
+        valid = av > 0
+        cnt = jnp.sum(valid, axis=1).astype(jnp.uint32)
+        vals = jnp.take_along_axis(hb, ai, axis=1)
+        pad = ((0, 0), (0, cap - k))
+        val_w = jnp.pad(jnp.where(valid, vals, 0.0).astype(jnp.bfloat16), pad)
+        idx_w = jnp.pad(jnp.where(valid, ai, 0).astype(jnp.uint16), pad)
+        d = _topk_scatter(idx_w, val_w, cnt)         # == receiver reconstruction
+        e_tilde = (1.0 - cfg.beta) * e + cfg.beta * (h - d)       # Eqn. (5)
+        return ({"cnt": cnt, "idx": idx_w.reshape(u * cap),
+                 "val": val_w.reshape(u * cap)},
+                Q.error_encode(e_tilde, qc))                      # Eqn. (7)
+
+    def decode_mean_ref(self, recv):
+        cnt = recv["cnt"]
+        D, u = cnt.shape
+        cap = recv["idx"].shape[1] // u
+
+        def deq(cnt_r, idx_r, val_r):
+            return _topk_scatter(idx_r.reshape(u, cap),
+                                 val_r.reshape(u, cap), cnt_r)
+
+        contrib = jax.vmap(deq)(cnt, recv["idx"], recv["val"])
+        return jnp.mean(contrib, axis=0)

@@ -85,6 +85,24 @@ def all_to_all_chunks(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
 # distributed gradient synchronization (one segment)
 # ---------------------------------------------------------------------------
 
+def _mask_ragged(
+    recv: dict[str, jax.Array],
+    shapes: dict[str, "codec_lib.WireLeaf"],
+) -> dict[str, jax.Array]:
+    """Re-zero received ragged leaves past their in-band counts.
+
+    The ragged contract (DESIGN.md §16): capacity-padded slots past a
+    block's ``count`` carry no information and receivers must not read
+    them.  Our encoders write canonical zeros there, but the wire is not
+    trusted — masking on receipt is what makes ``decode_mean`` independent
+    of whatever bytes crossed in the dead slots.
+    """
+    for name, leaf in shapes.items():
+        if leaf.ragged:
+            recv[name] = WP.mask_by_count(recv[name], recv[leaf.count_of])
+    return recv
+
+
 def exchange_wire(
     wire: dict[str, jax.Array],
     shapes: dict[str, "codec_lib.WireLeaf"],
@@ -115,7 +133,7 @@ def exchange_wire(
         for name in gather:
             arr = wire[name]
             recv[name] = all_gather_flat(arr, dp_axes).reshape(D, *arr.shape)
-        return recv
+        return _mask_ragged(recv, shapes)
     if split:
         rows = [WP.to_bytes(wire[n]).reshape(D, -1) for n in split]
         widths = [r.shape[1] for r in rows]
@@ -135,7 +153,43 @@ def exchange_wire(
             recv[name] = WP.from_bytes(piece, shapes[name].dtype).reshape(
                 D, *wire[name].shape)
             off += w
-    return recv
+    return _mask_ragged(recv, shapes)
+
+
+def _cadence_on(step: jax.Array, every: int) -> jax.Array:
+    """Traced on-cadence predicate: sync fires on the LAST step of each
+    period (steps ``every-1, 2*every-1, ...``), so a period accumulates
+    ``every`` gradients before the exchange that flushes them."""
+    return (jnp.asarray(step, jnp.int32) % every) == (every - 1)
+
+
+def _cadence_select(
+    g: jax.Array,
+    state: jax.Array,
+    cfg: SyncConfig,
+    step: jax.Array,
+    shard: jax.Array,
+    new_state: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Tier-0 cadence gate (DESIGN.md §16) around an already-computed sync.
+
+    On-cadence steps keep the normal result: the codec's ``h = g +
+    decode(e)`` already folds the accumulated off-cadence gradients back
+    in, because the compensation-error state IS the accumulator.
+    Off-cadence steps return a zero shard and fold this step's gradient
+    into the error state (``e <- e + g`` in decoded space) instead of
+    exchanging.  The select is a ``jnp.where`` on a traced predicate — one
+    compiled step function, no retrace across the period; under SPMD the
+    collectives still fire every step (no collectives inside ``lax.cond``
+    in shard_map), so the traffic saving is *modeled* (telemetry/wire.py),
+    not realized on this runtime.
+    """
+    loco_lib.validate_cadence(cfg)
+    codec = codec_lib.get_codec(cfg)
+    on = _cadence_on(step, cfg.every)
+    acc = codec.state_encode(g.astype(jnp.float32) + codec.state_decode(state))
+    return (jnp.where(on, shard, jnp.zeros_like(shard)),
+            jnp.where(on, new_state, acc.astype(new_state.dtype)))
 
 
 def dist_sync(
@@ -145,6 +199,7 @@ def dist_sync(
     dp_axes: tuple[str, ...],
     key: jax.Array | None = None,
     coalesce: bool = True,
+    step: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Synchronize one flat gradient segment across the dp group.
 
@@ -154,6 +209,11 @@ def dist_sync(
     key:   optional PRNG key for stochastic rounding (required when
            ``cfg.quant.stochastic_rounding`` is set; the codec fails loudly
            instead of silently rounding to nearest)
+    step:  optional traced step index; when given and the codec is
+           stateful, the tier-0 cadence gate (``cfg.every``) is applied —
+           at ``every == 1`` the predicate is identically true and the
+           select is bit-transparent, so per-step callers may always
+           thread the step.
     returns (g_shard (n/D,), new_state): the *averaged* gradient piece this
     rank owns, and the updated local compressor state.
 
@@ -171,8 +231,12 @@ def dist_sync(
         # flattened): unsupported combos raise inside hierarchical_sync and
         # are caught earlier, with the bucket in view, by
         # launch.steps._validate_sync_configs.
-        return hierarchical_sync(g, state, cfg, dp_axes, key=key,
-                                 coalesce=coalesce)
+        shard, new_state = hierarchical_sync(g, state, cfg, dp_axes, key=key,
+                                             coalesce=coalesce, step=step)
+        if step is not None and cfg.needs_state():
+            shard, new_state = _cadence_select(g, state, cfg, step,
+                                               shard, new_state)
+        return shard, new_state
 
     if cfg.strategy == "fp":
         # 16-bit-style baseline: reduce-scatter mean (bf16 wire).
@@ -200,6 +264,9 @@ def dist_sync(
     # --- receiver-side dequant + mean --------------------------------------
     with PROF.phase("decode"):
         shard = codec.decode_mean(recv)
+    if step is not None and cfg.needs_state():
+        shard, new_state = _cadence_select(g, state, cfg, step,
+                                           shard, new_state)
     return shard, new_state
 
 
@@ -278,6 +345,7 @@ def dist_sync_buckets(
     key: jax.Array | None = None,
     coalesce: bool = True,
     overlap: bool = False,
+    step: jax.Array | None = None,
 ) -> tuple[jax.Array, tuple[jax.Array, ...]]:
     """Synchronize a full local gradient bucket by bucket.
 
@@ -328,12 +396,12 @@ def dist_sync_buckets(
         shards, new_states = [], []
         for b, st, kb in zip(plan.buckets, states, keys):
             sh, ns = dist_sync(seg_of(b), st, b.sync, dp_axes, key=kb,
-                               coalesce=False)
+                               coalesce=False, step=step)
             shards.append(sh)
             new_states.append(ns)
         return jnp.concatenate(shards), tuple(new_states)
     return _dist_sync_coalesced(gm, states, plan, dp_axes, keys,
-                                run_space=False, overlap=overlap)
+                                run_space=False, overlap=overlap, step=step)
 
 
 def dist_sync_runs(
@@ -344,6 +412,7 @@ def dist_sync_runs(
     key: jax.Array | None = None,
     overlap: bool = False,
     piece_space: bool = False,
+    step: jax.Array | None = None,
 ) -> tuple[jax.Array, tuple[jax.Array, ...]]:
     """:func:`dist_sync_buckets` with RUN-space compressor states.
 
@@ -378,7 +447,7 @@ def dist_sync_runs(
     keys = _bucket_keys(key, plan)
     return _dist_sync_coalesced(gm, run_states, plan, dp_axes, keys,
                                 run_space=True, overlap=overlap,
-                                piece_space=piece_space)
+                                piece_space=piece_space, step=step)
 
 
 def _dist_sync_coalesced(
@@ -390,12 +459,24 @@ def _dist_sync_coalesced(
     run_space: bool,
     overlap: bool = False,
     piece_space: bool = False,
+    step: jax.Array | None = None,
 ) -> tuple[jax.Array, tuple[jax.Array, ...]]:
     """Shared coalesced schedule.  ``states`` (and the returned new
     states) are per-run when ``run_space`` else per-bucket — the per-bucket
     form stitches members through peer-major views around each fused
-    encode, the run form uses the buffers as-is."""
+    encode, the run form uses the buffers as-is.
+
+    Tier-0 cadence (``cfg.every > 1``) is gated per run — unlike the
+    monolithic :func:`dist_sync` the gate is generated only when the
+    period is real, so ``every == 1`` plans trace exactly the pre-cadence
+    schedule.  The pipelined overlap schedule cannot carry cadence buckets
+    (a stage piece's ``jnp.where`` would need the whole run's accumulator
+    in view); rejected here and, with the bucket named, at build time by
+    launch.steps._validate_sync_configs."""
     D = gm.shape[0]
+    cadenced = [b for b in plan.buckets if b.sync.every > 1]
+    if step is None:
+        cadenced = []
     any_hier = any(b.sync.hierarchical and b.sync.strategy != "fp"
                    for b in plan.buckets)
     if any_hier:
@@ -406,6 +487,12 @@ def _dist_sync_coalesced(
         Pp, Dd = 1, D
     if overlap:
         sched = WP.build_overlap_schedule(plan, D, pods=Pp)
+        if sched.pipelined and cadenced:
+            b = cadenced[0]
+            raise ValueError(
+                f"bucket {b.index}: sync cadence every={b.sync.every} cannot "
+                "ride the pipelined overlap schedule; run cadence plans with "
+                "overlap disabled")
         if sched.pipelined:
             convert = run_space and not piece_space
             if convert:
@@ -434,6 +521,7 @@ def _dist_sync_coalesced(
     wires: dict[int, dict[str, jax.Array]] = {}
     fp_segs: dict[int, jax.Array] = {}
     new_states: list = [None] * len(states)
+    gates: dict[int, jax.Array] = {}
     with PROF.phase("encode"):
         for ri, run in enumerate(runs):
             cfg = run.sync
@@ -454,23 +542,38 @@ def _dist_sync_coalesced(
             if cfg.hierarchical:
                 _check_hier_codec(cfg)
             codec = codec_lib.get_codec(cfg)
+            gate = step is not None and cfg.every > 1
+            if gate:
+                loco_lib.validate_cadence(cfg)
+                gates[run.slot] = _cadence_on(step, cfg.every)
+
+            def select(ns, st, seg):
+                """Off-cadence: fold this step's gradient into the
+                compensation-error state instead of keeping the exchanged
+                update (elementwise, so fused runs select pre-split)."""
+                if not gate:
+                    return ns
+                acc = codec.state_encode(seg + codec.state_decode(st))
+                return jnp.where(gates[run.slot], ns, acc.astype(ns.dtype))
+
             # fused runs never use rounding keys (stochastic rounding is
             # not fusible), so key=None is exact there
             kb = None if run.fused else keys[run.positions[0]]
+            seg = run_seg(run)
             if run_space:
-                wire, ns = codec.encode(run_seg(run), states[ri], kb)
-                new_states[ri] = ns
+                wire, ns = codec.encode(seg, states[ri], kb)
+                new_states[ri] = select(ns, states[ri], seg)
             elif run.fused:
-                wire, ns = codec.encode(run_seg(run),
-                                        _fused_state(codec, states, run, D),
-                                        None)
+                fs = _fused_state(codec, states, run, D)
+                wire, ns = codec.encode(seg, fs, None)
+                ns = select(ns, fs, seg)
                 for pos, s in zip(run.positions,
                                   _split_state(codec, ns, states, run, D)):
                     new_states[pos] = s
             else:
                 pos = run.positions[0]
-                wire, ns = codec.encode(run_seg(run), states[pos], kb)
-                new_states[pos] = ns
+                wire, ns = codec.encode(seg, states[pos], kb)
+                new_states[pos] = select(ns, states[pos], seg)
             if cfg.hierarchical:
                 seg_n = D * run.chunk_total
                 wire = {name: (_regroup_chunks(wire[name], Pp, Dd).reshape(-1)
@@ -528,6 +631,11 @@ def _dist_sync_coalesced(
                 recv2 = dict(recv_h2.get(run.slot, {}))
                 recv2.update(_none_leaves(codec2, n2, wires2[run.slot], Pp))
                 shards[run.slot] = codec2.decode_mean(recv2)
+
+    # off-cadence runs contribute a zero shard (their gradient went into
+    # the accumulator above); on-cadence the where is the identity
+    for slot, on in gates.items():
+        shards[slot] = jnp.where(on, shards[slot], jnp.zeros_like(shards[slot]))
 
     # runs are in chunk-space offset order, each shard spans its whole run
     return (jnp.concatenate([shards[run.slot] for run in runs]),
@@ -744,12 +852,18 @@ def _dist_sync_overlapped(
 # hierarchical (two-stage) multi-pod exchange -- beyond-paper optimization
 # ---------------------------------------------------------------------------
 
-def _check_hier_axes(dp_axes: tuple[str, ...]) -> None:
-    if len(dp_axes) != 2:
+def _check_hier_axes(dp_axes: tuple[str, ...], ntiers: int = 1) -> None:
+    if len(dp_axes) == 1 + ntiers:
+        return
+    if ntiers == 1:
         raise ValueError(
             f"hierarchical sync needs a (pod, data) mesh; got dp axes "
             f"{dp_axes!r} — use the flat exchange (hierarchical=False) on "
             "single-axis meshes")
+    raise ValueError(
+        f"a {ntiers}-tier sync schedule needs {1 + ntiers} dp mesh axes "
+        f"(one per exchange leg, innermost first); got {len(dp_axes)}: "
+        f"{dp_axes!r}")
 
 
 def _check_hier_codec(cfg: SyncConfig) -> None:
@@ -781,68 +895,109 @@ def hierarchical_sync(
     dp_axes: tuple[str, ...],
     key: jax.Array | None = None,
     coalesce: bool = True,
+    step: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Codec-level two-stage exchange over a ``(pod, data)`` mesh.
+    """Codec-level N-tier exchange over a nested dp mesh.
+
+    The tier list comes from :func:`repro.core.loco.sync_schedule`: the
+    classic ``hierarchical=True`` config resolves to ONE outer tier
+    (stage 2) and this function reproduces the original two-stage exchange
+    over a ``(pod, data)`` mesh bit-for-bit; an explicit ``cfg.tiers``
+    schedule runs one extra leg per tier over correspondingly outer mesh
+    axes (``dp_axes`` is outermost-first, so stage 1 crosses
+    ``dp_axes[-1]`` and tier ``t`` crosses ``dp_axes[-2 - t]``).
 
     Stage 1 (ICI): the bucket's own codec — any registered strategy, with
     its Pallas fast paths when ``cfg.use_kernels`` is set — encodes the
     local segment exactly as the flat path would; its wire pytree then
-    crosses only the intra-pod ``data`` axis (``split`` leaves regrouped so
-    row d carries the chunks data-peer d owns, ``gather`` leaves
-    all-gathered per pod member — each peer's payload is dequantized with
-    *that peer's* metadata, fixing the old local-scale broadcast bug), and
-    ``decode_mean`` yields the fp32 pod mean of the ``Pp`` chunks this
-    device group owns.
+    crosses only the innermost axis (``split`` leaves regrouped so row d
+    carries the chunks data-peer d owns, ``gather`` leaves all-gathered
+    per group member — each peer's payload is dequantized with *that
+    peer's* metadata), and ``decode_mean`` yields the fp32 intra-group
+    mean of the chunks this device group owns.
 
-    Stage 2 (DCN): ``cfg.stage2_sync()``'s codec (default 8-bit block,
-    stateless) re-encodes the pod mean, exchanges it across the ``pod``
-    axis through the ordinary :func:`exchange_wire`, and ``decode_mean``s
-    to the final shard — so each stage is the same
-    encode -> exchange -> decode_mean contract as the flat path and
-    sim == dist holds by construction (:func:`repro.core.loco.sim_sync_hier`).
+    Tier ``t`` (DCN / WAN): the tier's codec (stateless, or ``topk`` run
+    from a fresh zero state — :func:`repro.core.loco.validate_tier_codec`)
+    re-encodes the running mean, exchanges it across the tier's axis
+    through the ordinary :func:`exchange_wire`, and ``decode_mean``s — so
+    every leg is the same encode -> exchange -> decode_mean contract as
+    the flat path and sim == dist holds by construction
+    (:func:`repro.core.loco.sim_sync_hier`).
 
-    Both legs inherit :func:`exchange_wire`'s coalesced packing: one u8
+    Tier cadence (``tier.every > 1``): off-cadence steps skip the tier's
+    averaging — each device keeps its OWN group's running mean (its slice
+    of the tier input at ``lax.axis_index``), a DiLoCo-style local
+    approximation with no extra state; on-cadence steps take the normal
+    exchanged mean.  The select is a ``jnp.where`` on the traced step, so
+    one compiled function covers the whole period (the collective still
+    fires under SPMD; the traffic saving is modeled in telemetry/wire.py).
+
+    All legs inherit :func:`exchange_wire`'s coalesced packing: one u8
     all-to-all (+ one all-gather when the codec has per-node metadata) per
-    stage instead of one collective per wire leaf.
+    leg instead of one collective per wire leaf.
 
-    Chunk mapping: device (p, d) ends up with flat chunk r = p*Dd + d, same
-    as the flat exchange, so the FSDP layout is unchanged.  Error feedback
-    covers stage 1 only; the error states are bit-identical to the flat
-    path's.
+    Chunk mapping: the device with flat dp rank r ends up with flat chunk
+    r, same as the flat exchange, so the FSDP layout is unchanged.  Error
+    feedback covers stage 1 only; the error states are bit-identical to
+    the flat path's.
     """
-    _check_hier_axes(dp_axes)
+    tiers = loco_lib.sync_schedule(cfg)
+    _check_hier_axes(dp_axes, len(tiers))
     _check_hier_codec(cfg)
-    pod_axis, data_axis = dp_axes
-    Pp = jax.lax.axis_size(pod_axis)
-    Dd = jax.lax.axis_size(data_axis)
+    sizes = [jax.lax.axis_size(a) for a in dp_axes]
+    Dd = sizes[-1]
+    rem = 1
+    for s in sizes[:-1]:
+        rem *= s          # chunk groups left after stage 1
     n = g.shape[0]
 
-    # --- stage 1 (ICI): own codec, intra-pod exchange ----------------------
+    # --- stage 1 (ICI): own codec, innermost-axis exchange -----------------
     codec = codec_lib.get_codec(cfg)
     with PROF.phase("encode"):
         wire, new_state = codec.encode(g, state, key)
-        # regroup split leaves into intra-pod row order, then run the
-        # ordinary wire exchange restricted to the data axis (gather/none
-        # leaves need no regrouping — they are per-node, not per-chunk).
+        # regroup split leaves into intra-group row order, then run the
+        # ordinary wire exchange restricted to the innermost axis
+        # (gather/none leaves need no regrouping — they are per-node, not
+        # per-chunk).
         shapes1 = codec.wire_shapes(n)
-        wire1 = {name: (_regroup_chunks(wire[name], Pp, Dd).reshape(-1)
+        wire1 = {name: (_regroup_chunks(wire[name], rem, Dd).reshape(-1)
                         if leaf.comm == "split" else wire[name])
                  for name, leaf in shapes1.items()}
     with PROF.phase("exchange"):
-        recv1 = exchange_wire(wire1, shapes1, Dd, (data_axis,),
+        recv1 = exchange_wire(wire1, shapes1, Dd, (dp_axes[-1],),
                               coalesce=coalesce)
     with PROF.phase("decode"):
-        pod_mean = codec.decode_mean(recv1)          # (Pp * c,) fp32
+        cur = codec.decode_mean(recv1)               # (rem * c,) fp32
 
-    # --- stage 2 (DCN): stateless re-encode across pods --------------------
-    cfg2 = loco_lib.validate_stage2(cfg)
-    codec2 = codec_lib.get_codec(cfg2)
-    n2 = pod_mean.shape[0]
-    with PROF.phase("encode"):
-        wire2, _ = codec2.encode(pod_mean, codec2.init_state(n2), None)
-    with PROF.phase("exchange"):
-        recv2 = exchange_wire(wire2, codec2.wire_shapes(n2), Pp, (pod_axis,),
-                              coalesce=coalesce)
-    with PROF.phase("decode"):
-        shard = codec2.decode_mean(recv2)
-    return shard, new_state
+    # --- outer tiers: stateless re-encode, one mesh axis per tier ----------
+    for t, tier in enumerate(tiers):
+        ax = dp_axes[-2 - t]
+        P = sizes[-2 - t]
+        rem //= P          # chunk groups left after THIS tier
+        cfg_t = loco_lib.validate_tier_codec(tier.sync)
+        codec_t = codec_lib.get_codec(cfg_t)
+        n_t = cur.shape[0]
+        with PROF.phase("encode"):
+            wire_t, _ = codec_t.encode(cur, codec_t.init_state(n_t), None)
+            shapes_t = codec_t.wire_shapes(n_t)
+            if rem > 1:
+                # same interleave as stage 1: this tier's peer coordinate
+                # is the fast index of the remaining chunk order
+                wire_t = {name: (_regroup_chunks(wire_t[name], rem, P)
+                                 .reshape(-1)
+                                 if leaf.comm == "split" else wire_t[name])
+                          for name, leaf in shapes_t.items()}
+        with PROF.phase("exchange"):
+            recv_t = exchange_wire(wire_t, shapes_t, P, (ax,),
+                                   coalesce=coalesce)
+        with PROF.phase("decode"):
+            out = codec_t.decode_mean(recv_t)        # (n_t / P,) fp32
+        if step is not None and tier.every > 1:
+            # off-cadence: keep own group's running mean — my slice of the
+            # tier input (chunk fast-coordinate == my index on this axis)
+            own = jax.lax.dynamic_index_in_dim(
+                cur.reshape(rem, P, n_t // (rem * P)),
+                jax.lax.axis_index(ax), axis=1, keepdims=False).reshape(-1)
+            out = jnp.where(_cadence_on(step, tier.every), out, own)
+        cur = out
+    return cur, new_state

@@ -95,18 +95,22 @@ class MeshTopo:
     dp: int
     tp: int
     pods: int = 1  # size of the inter-pod axis (1 = single-pod / flat mesh)
+    wans: int = 1  # size of the inter-site (WAN) axis above the pods
 
     @staticmethod
     def from_mesh(mesh: jax.sharding.Mesh) -> "MeshTopo":
         names = mesh.axis_names
-        if "pod" in names:
+        if "wan" in names:
+            dp_axes = ("wan", "pod", "data")
+        elif "pod" in names:
             dp_axes = ("pod", "data")
         else:
             dp_axes = ("data",)
         dp = math.prod(mesh.shape[a] for a in dp_axes)
         return MeshTopo(dp_axes=dp_axes, tp_axis="model", dp=dp,
                         tp=mesh.shape["model"],
-                        pods=mesh.shape["pod"] if "pod" in names else 1)
+                        pods=mesh.shape["pod"] if "pod" in names else 1,
+                        wans=mesh.shape["wan"] if "wan" in names else 1)
 
     def chunk_spec(self, stacked: bool) -> P:
         dims = ("model", self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0])
@@ -280,6 +284,7 @@ def materialize(
     coalesce: bool = True,
     overlap: bool = False,
     piece_space: bool = False,
+    step: jax.Array | None = None,
 ) -> jax.Array:
     """fp32 chunk -> logical bf16 TP-local tensor (FSDP gather w/ LoCo bwd).
 
@@ -301,12 +306,12 @@ def materialize(
         # state leaf per encode run
         flat = gather_with_sync_runs(w, state, pplan, topo.dp_axes,
                                      overlap=overlap,
-                                     piece_space=piece_space)
+                                     piece_space=piece_space, step=step)
     elif info.loco and pplan is not None:
         flat = gather_with_sync_buckets(w, state, pplan, topo.dp_axes,
-                                        coalesce=False)
+                                        coalesce=False, step=step)
     elif info.loco:
-        flat = gather_with_sync(w, state, cfg, topo.dp_axes)
+        flat = gather_with_sync(w, state, cfg, topo.dp_axes, step=step)
     else:
         flat = gather_fp(w, topo.dp_axes)
     n = info.numel_local(topo.tp)
@@ -348,7 +353,7 @@ class TrainStore:
     def __init__(self, groups, chunks, states, cfg: SyncConfig, topo: MeshTopo,
                  compute_dtype=jnp.bfloat16, plan: SyncPlan | None = None,
                  coalesce: bool = True, overlap: bool = False,
-                 piece_space: bool = False):
+                 piece_space: bool = False, step: jax.Array | None = None):
         self.groups = {g.name: g for g in groups}
         self.chunks = chunks  # {group: {name: (L?, 1, chunk)}} local views
         self.states = states  # {group: {name: (L?, 1, 1.., padlen) | tuple}} local
@@ -359,6 +364,7 @@ class TrainStore:
         self.coalesce = coalesce  # packed per-comm-group exchange (§13)
         self.overlap = overlap    # pipelined stage schedule (§15)
         self.piece_space = piece_space  # states carried in piece layout (§15)
+        self.step = step      # traced step index for the cadence gate (§16)
 
     def _pplan(self, gname: str, info: ParamInfo) -> ParamPlan | None:
         if self.plan is None or not info.loco:
@@ -378,7 +384,8 @@ class TrainStore:
                                          pplan=self._pplan(gname, info),
                                          coalesce=self.coalesce,
                                          overlap=self.overlap,
-                                         piece_space=self.piece_space)
+                                         piece_space=self.piece_space,
+                                         step=self.step)
         return out
 
     # ---- stacked groups: xs for lax.scan ------------------------------------
@@ -399,7 +406,8 @@ class TrainStore:
                                          pplan=self._pplan(gname, info),
                                          coalesce=self.coalesce,
                                          overlap=self.overlap,
-                                         piece_space=self.piece_space)
+                                         piece_space=self.piece_space,
+                                         step=self.step)
         return out
 
 

@@ -40,23 +40,40 @@ def _reject_stochastic_rounding(cfg: SyncConfig) -> None:
         )
 
 
+def _as_step(step) -> jax.Array:
+    """Normalize the optional step index to the traced f32 scalar the
+    custom_vjp closures thread.
+
+    The step must ride as a *primal* (``nondiff_argnums`` would force a
+    retrace per step value — exactly what the cadence gate exists to
+    avoid), and f32 keeps the cotangent dtype trivially legal; exact for
+    any realistic step count (< 2^24).  ``None`` maps to step 0, which is
+    bit-transparent for ``every == 1`` configs (the universal default) —
+    cadence plans must thread the real step (launch/steps.py does).
+    """
+    return jnp.float32(0.0) if step is None else jnp.asarray(step, jnp.float32)
+
+
 @lru_cache(maxsize=None)
 def _make_gather(cfg: SyncConfig, dp_axes: tuple[str, ...]):
     """Build (and cache) the custom_vjp gather for a given static config."""
     _reject_stochastic_rounding(cfg)
 
     @jax.custom_vjp
-    def gather(w_chunk: jax.Array, state: jax.Array) -> jax.Array:
+    def gather(w_chunk: jax.Array, state: jax.Array,
+               step: jax.Array) -> jax.Array:
         return all_gather_flat(w_chunk, dp_axes)
 
-    def fwd(w_chunk, state):
-        return all_gather_flat(w_chunk, dp_axes), state
+    def fwd(w_chunk, state, step):
+        return all_gather_flat(w_chunk, dp_axes), (state, step)
 
-    def bwd(state, g_full):
+    def bwd(res, g_full):
+        state, step = res
         # chunk dtype == gathered dtype, so g_full.dtype is the right
         # cotangent dtype for w_chunk.
-        g_shard, new_state = dist_sync(g_full, state, cfg, dp_axes)
-        return g_shard.astype(g_full.dtype), new_state.astype(state.dtype)
+        g_shard, new_state = dist_sync(g_full, state, cfg, dp_axes, step=step)
+        return (g_shard.astype(g_full.dtype), new_state.astype(state.dtype),
+                jnp.zeros_like(step))
 
     gather.defvjp(fwd, bwd)
     return gather
@@ -67,19 +84,22 @@ def gather_with_sync(
     state: jax.Array,
     cfg: SyncConfig,
     dp_axes: tuple[str, ...],
+    step: jax.Array | None = None,
 ) -> jax.Array:
     """FSDP all-gather whose backward runs the configured sync strategy.
 
     w_chunk: (n/D,) local flat parameter chunk (bf16 recommended on the wire)
     state:   per-device compressor state, shape (n,) (full local-gradient
              size) in a float dtype; its cotangent carries the new state.
+    step:    optional traced step index for the cadence gate (see
+             comm.dist_sync); defaults to step 0.
     """
     assert jnp.issubdtype(state.dtype, jnp.floating), (
         "hijack state must be a float dtype (f8/bf16/f32) so its cotangent "
         "can carry the updated state; int8 error storage is only available "
         "in the post-grad reference path"
     )
-    return _make_gather(cfg, tuple(dp_axes))(w_chunk, state)
+    return _make_gather(cfg, tuple(dp_axes))(w_chunk, state, _as_step(step))
 
 
 @lru_cache(maxsize=None)
@@ -102,19 +122,22 @@ def _make_bucketed_gather(plan: ParamPlan, dp_axes: tuple[str, ...],
         _reject_stochastic_rounding(b.sync)
 
     @jax.custom_vjp
-    def gather(w_chunk: jax.Array, states: tuple) -> jax.Array:
+    def gather(w_chunk: jax.Array, states: tuple,
+               step: jax.Array) -> jax.Array:
         return all_gather_flat(w_chunk, dp_axes)
 
-    def fwd(w_chunk, states):
-        return all_gather_flat(w_chunk, dp_axes), states
+    def fwd(w_chunk, states, step):
+        return all_gather_flat(w_chunk, dp_axes), (states, step)
 
-    def bwd(states, g_full):
+    def bwd(res, g_full):
+        states, step = res
         g_shard, new_states = dist_sync_buckets(g_full, states, plan, dp_axes,
                                                 coalesce=coalesce,
-                                                overlap=overlap)
+                                                overlap=overlap, step=step)
         new_states = tuple(ns.astype(s.dtype)
                            for ns, s in zip(new_states, states))
-        return g_shard.astype(g_full.dtype), new_states
+        return (g_shard.astype(g_full.dtype), new_states,
+                jnp.zeros_like(step))
 
     gather.defvjp(fwd, bwd)
     return gather
@@ -127,6 +150,7 @@ def gather_with_sync_buckets(
     dp_axes: tuple[str, ...],
     coalesce: bool = True,
     overlap: bool = False,
+    step: jax.Array | None = None,
 ) -> jax.Array:
     """FSDP all-gather whose backward runs the bucketed sync schedule.
 
@@ -139,7 +163,8 @@ def gather_with_sync_buckets(
             f"bucket {b.index} state must be a float dtype for the "
             "cotangent to carry the updated state (see gather_with_sync)")
     return _make_bucketed_gather(plan, tuple(dp_axes), coalesce,
-                                 overlap)(w_chunk, tuple(states))
+                                 overlap)(w_chunk, tuple(states),
+                                          _as_step(step))
 
 
 @lru_cache(maxsize=None)
@@ -163,19 +188,23 @@ def _make_run_gather(plan: ParamPlan, dp_axes: tuple[str, ...],
         _reject_stochastic_rounding(b.sync)
 
     @jax.custom_vjp
-    def gather(w_chunk: jax.Array, run_states: tuple) -> jax.Array:
+    def gather(w_chunk: jax.Array, run_states: tuple,
+               step: jax.Array) -> jax.Array:
         return all_gather_flat(w_chunk, dp_axes)
 
-    def fwd(w_chunk, run_states):
-        return all_gather_flat(w_chunk, dp_axes), run_states
+    def fwd(w_chunk, run_states, step):
+        return all_gather_flat(w_chunk, dp_axes), (run_states, step)
 
-    def bwd(run_states, g_full):
+    def bwd(res, g_full):
+        run_states, step = res
         g_shard, new_states = dist_sync_runs(g_full, run_states, plan,
                                              dp_axes, overlap=overlap,
-                                             piece_space=piece_space)
+                                             piece_space=piece_space,
+                                             step=step)
         new_states = tuple(ns.astype(s.dtype)
                            for ns, s in zip(new_states, run_states))
-        return g_shard.astype(g_full.dtype), new_states
+        return (g_shard.astype(g_full.dtype), new_states,
+                jnp.zeros_like(step))
 
     gather.defvjp(fwd, bwd)
     return gather
@@ -188,6 +217,7 @@ def gather_with_sync_runs(
     dp_axes: tuple[str, ...],
     overlap: bool = False,
     piece_space: bool = False,
+    step: jax.Array | None = None,
 ) -> jax.Array:
     """FSDP all-gather whose backward runs the coalesced bucketed schedule
     over run-space compressor states (bit-exact with
@@ -197,7 +227,8 @@ def gather_with_sync_runs(
             "run state must be a float dtype for the cotangent to carry "
             "the updated state (see gather_with_sync)")
     return _make_run_gather(plan, tuple(dp_axes), overlap,
-                            piece_space)(w_chunk, tuple(run_states))
+                            piece_space)(w_chunk, tuple(run_states),
+                                         _as_step(step))
 
 
 @lru_cache(maxsize=None)

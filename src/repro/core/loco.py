@@ -42,10 +42,27 @@ from repro.core.quantizer import QuantConfig
 
 
 @dataclasses.dataclass(frozen=True)
+class SyncTier:
+    """One outer tier of an N-tier sync schedule (DESIGN.md §16).
+
+    ``sync`` is the tier's wire codec (same stateless contract as the
+    two-stage ``stage2`` config — see :func:`validate_stage2`); ``every``
+    is the tier's cadence: the tier exchanges on steps where
+    ``step % every == every - 1`` and passes each device's own slice
+    through unexchanged otherwise (a DiLoCo-style local approximation —
+    the inter-group mean is refreshed every ``every`` steps).
+    """
+
+    sync: "SyncConfig"
+    every: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
 class SyncConfig:
     """Static config of the gradient-synchronization strategy."""
 
-    strategy: Literal["fp", "loco", "ef", "ef21", "naive4", "onebit"] = "loco"
+    strategy: Literal["fp", "loco", "ef", "ef21", "naive4", "onebit",
+                      "topk"] = "loco"
     quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
     beta: float = 0.5            # moving-average weight on the *current* error (Eqn. 5)
     reset_every: int = 512       # T_c (Eqn. 7); 0 disables reset
@@ -70,12 +87,34 @@ class SyncConfig:
     # feedback to persist against) — enforced at build time in
     # launch/steps.py and at trace time in comm.hierarchical_sync.
     stage2: "SyncConfig | None" = None
+    # Top-k selection fraction (strategy "topk" only): of every
+    # ``codec.TOPK_SEL``-element block, the ceil(topk_frac * TOPK_SEL)
+    # largest-|h| entries go on the wire; the rest feed error feedback.
+    topk_frac: float = 0.01
+    # Tier-0 sync cadence (0/1 Adam-style, DESIGN.md §16): exchange only on
+    # steps where ``step % every == every - 1``; off-cadence steps
+    # accumulate the gradient into the compensation-error state and return
+    # a zero shard.  Requires a stateful codec; 1 = sync every step (the
+    # existing behavior, bit-exact).
+    every: int = 1
+    # Explicit outer-tier schedule.  None + hierarchical=True resolves to
+    # the classic two-stage schedule ``(SyncTier(stage2_sync(), 1),)``;
+    # longer schedules need one extra dp mesh axis per tier (innermost
+    # axis = tier 0).  See sync_schedule().
+    tiers: "tuple[SyncTier, ...] | None" = None
 
     def needs_state(self) -> bool:
-        return self.strategy in ("loco", "ef", "ef21", "onebit")
+        return self.strategy in ("loco", "ef", "ef21", "onebit", "topk")
 
     def stage2_sync(self) -> "SyncConfig":
-        """Resolved stage-2 (DCN) wire config of the two-stage exchange."""
+        """Resolved stage-2 (DCN) wire config of the two-stage exchange.
+
+        With an explicit ``tiers`` schedule this is its first outer tier,
+        so every stage-2 consumer (wirepack layout, telemetry bytes, the
+        two-stage exchange itself) agrees with ``sync_schedule()``.
+        """
+        if self.tiers:
+            return self.tiers[0].sync
         if self.stage2 is not None:
             return self.stage2
         return SyncConfig(
@@ -85,27 +124,44 @@ class SyncConfig:
             use_kernels=self.use_kernels)
 
 
-def validate_stage2(cfg: SyncConfig) -> SyncConfig:
-    """Resolve and check a hierarchical config's stage-2 codec.
+def sync_schedule(cfg: SyncConfig) -> tuple[SyncTier, ...]:
+    """Resolve a config's outer-tier schedule (empty = flat single-tier).
 
-    The single source of truth for the stage-2 contract, shared by the
+    The single source of the tier list, shared by the distributed form
+    (comm.hierarchical_sync), build-time validation (launch/steps.py) and
+    the telemetry byte model (telemetry/wire.py).  ``tiers`` wins when set;
+    otherwise ``hierarchical=True`` resolves to the classic two-stage
+    schedule — one outer tier running ``stage2_sync()`` every step.
+    """
+    if cfg.tiers is not None:
+        return cfg.tiers
+    if cfg.hierarchical:
+        return (SyncTier(cfg.stage2_sync(), every=1),)
+    return ()
+
+
+def validate_tier_codec(s2: SyncConfig) -> SyncConfig:
+    """Check one outer-tier (stage-2 / pod / WAN) wire config.
+
+    The single source of truth for the outer-tier contract, shared by the
     distributed form (comm.hierarchical_sync), the simulation form
     (sim_sync_hier) and build-time validation (launch/steps.py): it must be
-    a *registered* codec, *stateless* (the pod mean is recomputed every
-    step; there is nothing for error feedback to persist against), and
-    cannot use stochastic rounding (no PRNG key reaches the stage-2
-    encode).  Returns the resolved config.
+    a *registered* codec, *stateless* (the tier input is recomputed every
+    sync; there is nothing for error feedback to persist against — ``topk``
+    is allowed because it runs tiers from a fresh zero error state), and
+    cannot use stochastic rounding (no PRNG key reaches the tier encode).
+    Returns the config unchanged.
     """
     from repro.core import codec as codec_lib
 
-    s2 = cfg.stage2_sync()
-    if s2.strategy not in codec_lib.CODECS or s2.needs_state():
+    if s2.strategy not in codec_lib.CODECS or (
+            s2.needs_state() and s2.strategy != "topk"):
         raise ValueError(
             f"stage-2 codec {s2.strategy!r} must be a stateless registered "
             "codec (the pod mean is recomputed every step; there is nothing "
             "for error feedback to persist against); use naive4-style "
-            "direct quantization")
-    if s2.hierarchical or s2.stage2 is not None:
+            "direct quantization or topk")
+    if s2.hierarchical or s2.stage2 is not None or s2.tiers:
         raise ValueError(
             "stage-2 config must not itself be hierarchical: there is no "
             "third network to stage over, and the flags would be silently "
@@ -116,6 +172,41 @@ def validate_stage2(cfg: SyncConfig) -> SyncConfig:
             "reaches the stage-2 encode; it would fail mid-trace). Disable "
             "it on the stage2 config.")
     return s2
+
+
+def validate_stage2(cfg: SyncConfig) -> SyncConfig:
+    """Resolve and check a hierarchical config's stage-2 (first-tier) codec."""
+    return validate_tier_codec(cfg.stage2_sync())
+
+
+def validate_cadence(cfg: SyncConfig) -> None:
+    """Check the cadence knobs of one bucket config (DESIGN.md §16).
+
+    Tier-0 cadence (``every > 1``) accumulates off-cadence gradients into
+    the compensation-error state, so it needs a stateful codec; the error
+    reset must fire only at period boundaries (right after an on-cadence
+    sync) or it would wipe a partial accumulator.  Raised both at build
+    time (launch/steps.py, with the bucket name prepended) and at trace
+    time in comm.dist_sync.
+    """
+    if cfg.every < 1:
+        raise ValueError(f"sync cadence every={cfg.every} must be >= 1")
+    if cfg.every > 1 and not cfg.needs_state():
+        raise ValueError(
+            f"sync cadence every={cfg.every} needs a stateful codec "
+            f"(off-cadence steps accumulate into the compensation-error "
+            f"state); strategy {cfg.strategy!r} has no state")
+    if cfg.every > 1 and cfg.reset_every > 0 \
+            and cfg.reset_every % cfg.every != 0:
+        raise ValueError(
+            f"reset_every={cfg.reset_every} must be a multiple of "
+            f"every={cfg.every}: the error reset may only fire at cadence-"
+            f"period boundaries, or it would discard a partially "
+            f"accumulated gradient")
+    for t, tier in enumerate(sync_schedule(cfg)):
+        if tier.every < 1:
+            raise ValueError(
+                f"tier {t + 1} cadence every={tier.every} must be >= 1")
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +273,8 @@ def maybe_reset(state: jax.Array, step: jax.Array, cfg: SyncConfig) -> jax.Array
     would discard the very first compression error before it compensated
     anything (regression-pinned in tests/test_buckets.py).
     """
-    if cfg.strategy not in ("loco", "ef", "onebit") or cfg.reset_every <= 0:
+    if cfg.strategy not in ("loco", "ef", "onebit", "topk") \
+            or cfg.reset_every <= 0:
         return state
     step = jnp.asarray(step)
     do_reset = ((step % cfg.reset_every) == 0) & (step > 0)

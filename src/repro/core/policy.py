@@ -19,9 +19,17 @@ from __future__ import annotations
 
 import dataclasses
 import fnmatch
+import re
 
-from repro.core.loco import SyncConfig
+from repro.core.loco import SyncConfig, SyncTier, sync_schedule
 from repro.core.quantizer import QuantConfig
+
+# cadence / sparsity flag grammar (DESIGN.md §16): percentages keep the
+# top-k fraction human-readable ("+topk1%" = keep the top 1% of each
+# 512-block), "everyK" is the sync period in steps.
+_TOPK_FLAG = re.compile(r"^topk(\d+(?:\.\d+)?)%$")
+_EVERY_FLAG = re.compile(r"^every(\d+)$")
+_WAN_FLAG = re.compile(r"^wan:topk(\d+(?:\.\d+)?)%(?:every(\d+))?$")
 
 # tensor classes derivable from a ParamInfo (see classify())
 TENSOR_CLASSES = ("embed", "norm", "body")
@@ -109,13 +117,13 @@ def _base_preset(name: str, base: SyncConfig) -> SyncConfig:
     if name == "loco8":
         return dataclasses.replace(
             base, strategy="loco", quant=dataclasses.replace(base.quant, bits=8))
-    if name in ("naive4", "ef", "onebit"):
+    if name in ("naive4", "ef", "onebit", "topk"):
         return dataclasses.replace(base, strategy=name)
     if name == "naive8":
         return dataclasses.replace(
             base, strategy="naive4", quant=dataclasses.replace(base.quant, bits=8))
     raise ValueError(f"unknown sync preset {name!r}; "
-                     "known: fp loco loco4 loco8 naive4 naive8 ef onebit")
+                     "known: fp loco loco4 loco8 naive4 naive8 ef onebit topk")
 
 
 def _preset(spec: str, base: SyncConfig) -> SyncConfig:
@@ -132,6 +140,15 @@ def _preset(spec: str, base: SyncConfig) -> SyncConfig:
     re-encodes the pod means inter-pod at 8 bits (``hier``) or 4 bits
     (``hier4``), block-scaled.  Needs a 2-axis dp mesh; build-time
     validation in launch/steps.py rejects it loudly otherwise.
+
+    Cadence / sparsity flags (DESIGN.md §16): ``+topk1%`` switches the
+    matched buckets to the ragged top-k codec keeping 1% of each 512-block
+    (error feedback on the rest), ``+every4`` syncs every 4th step
+    (off-cadence gradients accumulate in the compensation-error state),
+    and ``+wan:topk0.5%every16`` appends a WAN outer tier to the tier
+    schedule — top-k 0.5% across the ``wan`` mesh axis every 16 steps,
+    above the existing inter-pod (DCN) tier.  Needs a 3-axis dp mesh
+    (``--wans``); validation rejects it loudly otherwise.
     """
     name, *flags = spec.split("+")
     cfg = _base_preset(name, base)
@@ -152,10 +169,27 @@ def _preset(spec: str, base: SyncConfig) -> SyncConfig:
                     use_kernels=cfg.use_kernels))
         elif f == "nohier":
             cfg = dataclasses.replace(cfg, hierarchical=False, stage2=None)
+        elif (m := _TOPK_FLAG.match(f)):
+            cfg = dataclasses.replace(cfg, strategy="topk",
+                                      topk_frac=float(m.group(1)) / 100.0)
+        elif (m := _EVERY_FLAG.match(f)):
+            cfg = dataclasses.replace(cfg, every=int(m.group(1)))
+        elif (m := _WAN_FLAG.match(f)):
+            # the WAN tier sits *above* the inter-pod tier: resolve the
+            # preset's existing tier schedule first (hier default if none),
+            # then append the top-k WAN leg with its own cadence.
+            wan_cfg = SyncConfig(strategy="topk",
+                                 topk_frac=float(m.group(1)) / 100.0,
+                                 use_kernels=cfg.use_kernels)
+            wan = SyncTier(wan_cfg, every=int(m.group(2) or 1))
+            base_tiers = sync_schedule(
+                dataclasses.replace(cfg, hierarchical=True))
+            cfg = dataclasses.replace(cfg, hierarchical=True,
+                                      tiers=base_tiers + (wan,))
         else:
             raise ValueError(f"unknown preset flag {f!r} in {spec!r}; "
                              "known flags: kernels nokernels hier hier4 "
-                             "nohier")
+                             "nohier topkN% everyN wan:topkN%everyN")
     return cfg
 
 

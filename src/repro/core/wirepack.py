@@ -207,6 +207,10 @@ class PackedLeaf:
     nbytes: int
     elems: int           # leaf elements per peer row (a2a/reduce) or total (gather)
     dtype: str           # dtype name (string keeps the dataclass hashable)
+    # ragged leaf (DESIGN.md §16): name of the same run's u32 count leaf in
+    # this group.  The leaf is capacity-padded — offset/nbytes describe the
+    # static budget — and unpack re-zeroes the slots at or past the count.
+    count_of: "str | None" = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,13 +261,29 @@ def _plan_groups(qualname: str, segs, D: int, pods: int) -> WireGroupPlan:
     offs: dict[tuple, int] = {}
 
     def add(stage: Stage, kind: Kind, peers: int, bucket: int, name: str,
-            nbytes: int, elems: int, dtype) -> None:
+            nbytes: int, elems: int, dtype, count_of=None) -> None:
         sig = (stage, kind, peers)
         off = offs.get(sig, 0)
         builders.setdefault(sig, []).append(PackedLeaf(
             bucket=bucket, name=name, offset=off, nbytes=nbytes,
-            elems=elems, dtype=jnp.dtype(dtype).name))
+            elems=elems, dtype=jnp.dtype(dtype).name, count_of=count_of))
         offs[sig] = off + nbytes
+
+    def check_ragged(leaf, entries, where: str) -> None:
+        """Ragged-leaf contract: split-only, count leaf in the same wire."""
+        if not leaf.ragged:
+            return
+        if leaf.comm != "split":
+            raise ValueError(
+                f"{where}: ragged leaves must be comm='split' "
+                f"(got {leaf.comm!r}); the capacity-padded row layout only "
+                "exists on the all-to-all")
+        cnt = dict(entries).get(leaf.count_of)
+        if cnt is None or cnt.comm != "split":
+            raise ValueError(
+                f"{where}: count leaf {leaf.count_of!r} missing from the "
+                "wire dict (or not comm='split'); a ragged leaf's count "
+                "must ride the same all-to-all")
 
     for run in segs:
         cfg = run.sync
@@ -276,9 +296,24 @@ def _plan_groups(qualname: str, segs, D: int, pods: int) -> WireGroupPlan:
                 dtype=jnp.bfloat16)
             continue
         hier = cfg.hierarchical
+        if hier and len(loco_lib.sync_schedule(cfg)) > 1:
+            raise ValueError(
+                f"{qualname}[{run.slot}]: the coalesced exchange supports "
+                f"at most one outer tier; "
+                f"{len(loco_lib.sync_schedule(cfg))} are configured — run "
+                "deeper schedules on the monolithic path (--no-coalesce)")
         stage1: Stage = "hier1" if hier else "flat"
         peers1 = dd if hier else D
-        for name, leaf in _leaf_entries(cfg, seg):
+        entries1 = _leaf_entries(cfg, seg)
+        for name, leaf in entries1:
+            if hier and leaf.ragged:
+                raise ValueError(
+                    f"{qualname}[{run.slot}].{name}: ragged (capacity-"
+                    "padded) leaves cannot ride the coalesced hierarchical "
+                    "stage-1 leg — the chunk regroup would interleave "
+                    "capacity padding; run topk-over-hier buckets on the "
+                    "monolithic path (--no-coalesce)")
+            check_ragged(leaf, entries1, f"{qualname}[{run.slot}].{name}")
             if leaf.comm == "split":
                 row, rem = divmod(leaf.nbytes, peers1)
                 erow, erem = divmod(math.prod(leaf.shape), peers1)
@@ -289,7 +324,8 @@ def _plan_groups(qualname: str, segs, D: int, pods: int) -> WireGroupPlan:
                         f"{peers1} peers; bucket edges must stay "
                         "512-aligned (see buckets.ALIGN)")
                 add(stage1, "a2a", peers1, run.slot, name,
-                    nbytes=row, elems=erow, dtype=leaf.dtype)
+                    nbytes=row, elems=erow, dtype=leaf.dtype,
+                    count_of=leaf.count_of)
             elif leaf.comm == "gather":
                 add(stage1, "gather", peers1, run.slot, name,
                     nbytes=leaf.nbytes, elems=math.prod(leaf.shape),
@@ -298,7 +334,14 @@ def _plan_groups(qualname: str, segs, D: int, pods: int) -> WireGroupPlan:
         if hier:
             cfg2 = loco_lib.validate_stage2(cfg)
             n2 = seg // dd
-            for name, leaf in _leaf_entries(cfg2, n2):
+            entries2 = _leaf_entries(cfg2, n2)
+            for name, leaf in entries2:
+                if leaf.ragged:
+                    raise ValueError(
+                        f"{qualname}[{run.slot}].stage2 (tier 1).{name}: "
+                        "ragged (capacity-padded) leaves cannot ride the "
+                        "coalesced stage-2 leg; run topk outer tiers on "
+                        "the monolithic path (--no-coalesce)")
                 if leaf.comm == "split":
                     row, rem = divmod(leaf.nbytes, pods)
                     if rem:
@@ -657,14 +700,44 @@ def pack_a2a(group: WireGroup, wires: dict[int, dict[str, jax.Array]]) -> jax.Ar
     return jnp.concatenate(rows, axis=1)
 
 
+def mask_by_count(arr: jax.Array, cnt: jax.Array) -> jax.Array:
+    """Zero a ragged leaf's dead slots: ``arr`` is ``(..., units * slots)``,
+    ``cnt`` the matching ``(..., units)`` u32 live counts.  Slot ``j`` of a
+    unit survives iff ``j < cnt`` — the receiving half of the ragged wire
+    contract (DESIGN.md §16), shared by the packed (:func:`unpack_a2a`) and
+    per-leaf (comm.exchange_wire) exchanges.  Capacity bytes past the count
+    are dead padding and may hold anything; masking makes the decode
+    independent of them."""
+    units = cnt.shape[-1]
+    slots = arr.shape[-1] // units
+    assert slots * units == arr.shape[-1], (arr.shape, cnt.shape)
+    a = arr.reshape(*arr.shape[:-1], units, slots)
+    live = (jnp.arange(slots, dtype=jnp.int32)
+            < cnt.astype(jnp.int32)[..., None])
+    return jnp.where(live, a, jnp.zeros((), arr.dtype)).reshape(arr.shape)
+
+
 def unpack_a2a(group: WireGroup, recv: jax.Array) -> dict[int, dict[str, jax.Array]]:
     """Received ``(peers, row_bytes)`` buffer -> per-bucket recv leaves,
-    each ``(peers, row_elems)`` — bit-identical to the per-leaf exchange."""
+    each ``(peers, row_elems)`` — bit-identical to the per-leaf exchange.
+
+    Ragged leaves are re-zeroed past their count (two passes: dense leaves
+    first, so every ragged leaf's count rows are already decoded)."""
     out: dict[int, dict[str, jax.Array]] = {}
+    ragged: list[PackedLeaf] = []
     for l in group.leaves:
+        if l.count_of is not None:
+            ragged.append(l)
+            continue
         piece = jax.lax.slice_in_dim(recv, l.offset, l.offset + l.nbytes,
                                      axis=1)
         out.setdefault(l.bucket, {})[l.name] = from_bytes(piece, l.dtype)
+    for l in ragged:
+        piece = jax.lax.slice_in_dim(recv, l.offset, l.offset + l.nbytes,
+                                     axis=1)
+        arr = from_bytes(piece, l.dtype)
+        out.setdefault(l.bucket, {})[l.name] = mask_by_count(
+            arr, out[l.bucket][l.count_of])
     return out
 
 

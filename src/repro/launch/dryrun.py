@@ -122,6 +122,14 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         model_flops_dev = model_flops_global / n_dev
 
         ov_rec: dict = HS.overlap_stats(hlo).to_json()
+        wire_tiers = None
+        if shape.kind == "train" and bundle.helpers.get("plan") is not None:
+            # per-tier cadence + capacity-vs-effective bytes (DESIGN.md §16)
+            from repro.telemetry import wire as WIRE
+            _topo = bundle.helpers["topo"]
+            _rep = WIRE.plan_report(bundle.helpers["plan"],
+                                    pods=_topo.pods, wans=_topo.wans)
+            wire_tiers = [t.record() for t in _rep.tiers]
         if shape.kind == "train":
             # report BOTH sync schedules (legacy flat vs backward-
             # overlapped, DESIGN.md §15), not just whichever the primary
@@ -166,6 +174,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                              bytes_by_kind={k: round(v) for k, v in st.coll_bytes.items()},
                              wire_bytes=round(st.wire_bytes)),
             overlap=ov_rec,
+            wire_tiers=wire_tiers,
             roofline=terms,
             model_flops_per_device=model_flops_dev,
             useful_flops_ratio=(model_flops_dev / flops) if flops else None,
@@ -196,6 +205,13 @@ def _emit(rec: dict, out_dir: str | None) -> dict:
                  f"dom={r['dominant']} c/m/n={r['compute_s']:.4f}/{r['memory_s']:.4f}/"
                  f"{r['collective_s']:.4f}s"
                  f" ovl={ovs}")
+        if rec.get("wire_tiers"):
+            # effective/capacity MiB per tier at its cadence (DESIGN.md §16)
+            extra += " tiers=" + ",".join(
+                f"{t['network']}@e{t['every']}:"
+                f"{t['effective_bytes'] / 2**20:.2f}"
+                f"/{t['capacity_bytes'] / 2**20:.2f}MiB"
+                for t in rec["wire_tiers"])
     elif status == "skipped":
         extra = " " + rec["reason"]
     else:
@@ -216,6 +232,12 @@ def main():
     ap.add_argument("--bucket-mb", type=float, default=None,
                     help="enable the bucketed scheduler for train shapes "
                          "with this fp32 bucket target (MiB)")
+    ap.add_argument("--policy", default=None,
+                    help="per-bucket wire policy for train shapes, e.g. "
+                         "'body=loco4+topk1%%+every4' (same grammar as "
+                         "launch/train.py --policy); tier cadence and "
+                         "capacity-vs-effective bytes land in the "
+                         "wire_tiers record and the tiers= column")
     ap.add_argument("--no-overlap", dest="overlap", action="store_false",
                     help="compile the primary train module on the legacy "
                          "flat schedule (the overlap record still reports "
@@ -229,6 +251,12 @@ def main():
         overrides["bucket_bytes"] = int(args.bucket_mb * 2**20)
     if not args.overlap:
         overrides["overlap"] = False
+    if args.policy:
+        from repro.core import policy as POL
+        # same base sync default_run builds, so presets inherit correctly
+        overrides["policy"] = POL.parse_policy(
+            args.policy,
+            SyncConfig(strategy=args.sync, quant=QuantConfig(mode="block")))
 
     from repro.configs.all_archs import ASSIGNED
 

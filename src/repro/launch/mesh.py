@@ -16,8 +16,17 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh(dp: int = 1, tp: int = 1, pods: int | None = None) -> jax.sharding.Mesh:
-    """Small mesh for CPU tests/examples (same axis names as production)."""
+def make_local_mesh(dp: int = 1, tp: int = 1, pods: int | None = None,
+                    wans: int | None = None) -> jax.sharding.Mesh:
+    """Small mesh for CPU tests/examples (same axis names as production).
+
+    ``wans`` adds the outermost WAN axis for 3-tier sync schedules
+    (DESIGN.md §16); it implies a multi-pod mesh (``pods`` defaults to 1
+    so the axis order stays (wan, pod, data, model)).
+    """
+    if wans:
+        return jax.make_mesh((wans, pods or 1, dp, tp),
+                             ("wan", "pod", "data", "model"))
     if pods:
         return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
     return jax.make_mesh((dp, tp), ("data", "model"))

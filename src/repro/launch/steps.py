@@ -152,31 +152,71 @@ def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None",
                 "cannot run in the training step (ef21 needs a "
                 "receiver-side mean-estimate shard; use the post-grad "
                 f"loco.sim_sync). Registered: {sorted(codec_lib.CODECS)}.")
+        try:
+            loco_lib.validate_cadence(c)
+        except ValueError as e:
+            raise ValueError(f"{where}: {e}") from None
         if c.hierarchical:
-            if len(topo.dp_axes) != 2 or topo.pods < 2:
+            tiers = loco_lib.sync_schedule(c)
+            if len(tiers) == 1:
+                if len(topo.dp_axes) != 2 or topo.pods < 2:
+                    raise ValueError(
+                        f"{where}: hierarchical sync needs a multi-pod "
+                        f"(pod, data) mesh; this mesh has dp axes "
+                        f"{topo.dp_axes!r} with {topo.pods} pod(s) — a "
+                        "size-1 pod axis would pay the stage-2 "
+                        "requantization error for zero DCN saving. Launch "
+                        "with --pods >= 2 or drop the +hier policy flag.")
+            elif (len(topo.dp_axes) != 1 + len(tiers) or topo.pods < 2
+                  or topo.wans < 2):
                 raise ValueError(
-                    f"{where}: hierarchical sync needs a multi-pod "
-                    f"(pod, data) mesh; this mesh has dp axes "
-                    f"{topo.dp_axes!r} with {topo.pods} pod(s) — a size-1 "
-                    "pod axis would pay the stage-2 requantization error "
-                    "for zero DCN saving. Launch with --pods >= 2 or drop "
-                    "the +hier policy flag.")
+                    f"{where}: a {len(tiers)}-tier sync schedule needs "
+                    f"{1 + len(tiers)} dp mesh axes with >= 2 devices per "
+                    f"outer axis; this mesh has dp axes {topo.dp_axes!r} "
+                    f"({topo.wans} wan group(s), {topo.pods} pod(s)). "
+                    "Launch with --wans >= 2 and --pods >= 2, or drop the "
+                    "+wan policy flag.")
             if c.strategy == "fp":
                 raise ValueError(
                     f"{where}: hierarchical sync has no meaning for the fp "
                     "reduce-scatter baseline (there is no wire codec to "
                     "stage); drop +hier for this bucket.")
-            try:
-                loco_lib.validate_stage2(c)
-            except ValueError as e:
-                raise ValueError(f"{where}: {e}") from None
+            for t, tier in enumerate(tiers):
+                try:
+                    loco_lib.validate_tier_codec(tier.sync)
+                except ValueError as e:
+                    raise ValueError(f"{where} tier {t + 1}: {e}") from None
+                if tier.every > 1 and plan is not None and run.coalesce:
+                    raise ValueError(
+                        f"{where} tier {t + 1}: tier cadence "
+                        f"every={tier.every} is only supported on the "
+                        "monolithic exchange (the coalesced in-plan "
+                        "two-stage leg has no own-slice bypass); launch "
+                        "with --no-coalesce.")
     if plan is not None and run.coalesce:
         for p in plan.params:
             try:
                 WP.build_group_plan(p, topo.dp, pods=max(topo.pods, 1))
                 if run.overlap:
-                    WP.build_overlap_schedule(p, topo.dp,
-                                              pods=max(topo.pods, 1))
+                    sched = WP.build_overlap_schedule(p, topo.dp,
+                                                      pods=max(topo.pods, 1))
+                    if sched.pipelined:
+                        for b in p.buckets:
+                            if b.sync.every > 1:
+                                raise ValueError(
+                                    f"bucket {b.index} (tier 0): sync "
+                                    f"cadence every={b.sync.every} cannot "
+                                    "ride the pipelined overlap schedule "
+                                    "(a stage piece cannot gate the whole "
+                                    "run's accumulator); launch with "
+                                    "--no-overlap.")
+                            if b.sync.strategy == "topk":
+                                raise ValueError(
+                                    f"bucket {b.index}: ragged "
+                                    "(capacity-padded) topk leaves cannot "
+                                    "ride the pipelined overlap schedule's "
+                                    "stage pieces; launch with "
+                                    "--no-overlap.")
             except ValueError as e:
                 raise ValueError(f"{p.qualname}: {e}") from None
 
@@ -356,7 +396,8 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
         def loss_fn(c, s, mb):
             store = FP.TrainStore(groups, c, s, sync, topo, plan=plan,
                                   coalesce=run.coalesce, overlap=run.overlap,
-                                  piece_space=piece_carry)
+                                  piece_space=piece_carry,
+                                  step=jnp.asarray(step, jnp.float32))
             return model.loss_fn(store, mb, remat=run.remat)
 
         def micro_body(carry, mb):

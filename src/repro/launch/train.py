@@ -42,9 +42,13 @@ def build_args(argv=None):
     ap.add_argument("--dp", type=int, default=2)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--pods", type=int, default=0)
+    ap.add_argument("--wans", type=int, default=0,
+                    help="size of the outermost WAN mesh axis for 3-tier "
+                         "sync schedules (policy flag "
+                         "'...+wan:topkN%%everyK'); needs --pods >= 2")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--sync", default="loco",
-                    choices=["fp", "loco", "ef", "naive4", "onebit"])
+                    choices=["fp", "loco", "ef", "naive4", "onebit", "topk"])
     ap.add_argument("--quant-mode", default="block",
                     choices=["block", "fixed", "tensor"])
     ap.add_argument("--quant-scale", type=float, default=2.0**17)
@@ -180,7 +184,8 @@ def main(argv=None):
         mesh = make_production_mesh(multi_pod=bool(args.pods > 1))
     else:
         mesh = make_local_mesh(dp=args.dp, tp=args.tp,
-                               pods=args.pods if args.pods else None)
+                               pods=args.pods if args.pods else None,
+                               wans=args.wans if args.wans else None)
     shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
     run = make_run(args)
 
@@ -189,7 +194,8 @@ def main(argv=None):
     bundle = make_train_step(cfg, run, mesh, shape)
     topo = bundle.helpers["topo"]
     plan = bundle.helpers["plan"]
-    wire_rep = WIRE.plan_report(plan, pods=topo.pods) if plan is not None else None
+    wire_rep = (WIRE.plan_report(plan, pods=topo.pods, wans=topo.wans)
+                if plan is not None else None)
     if wire_rep is not None:
         print(WIRE.format_report(wire_rep), flush=True)
     dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
@@ -217,7 +223,7 @@ def main(argv=None):
         sink = SINK.MetricsSink(args.metrics_jsonl, header=dict(
             run={k: v for k, v in vars(args).items()},
             fingerprint=ckpt_fp,
-            topo=dict(dp=topo.dp, tp=topo.tp, pods=topo.pods,
+            topo=dict(dp=topo.dp, tp=topo.tp, pods=topo.pods, wans=topo.wans,
                       dp_axes=list(topo.dp_axes), tp_axis=topo.tp_axis,
                       devices=int(mesh.devices.size)),
         ))

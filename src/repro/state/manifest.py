@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.core import buckets as BK
 from repro.core import flatparam as FP
-from repro.core.loco import SyncConfig
+from repro.core.loco import SyncConfig, sync_schedule
 from repro.core.quantizer import QuantConfig
 from repro.state import serial
 
@@ -67,6 +67,8 @@ def _bucket_dict(b: BK.Bucket) -> dict:
         "reset_every": c.reset_every,
         "hierarchical": c.hierarchical,
         "needs_state": c.needs_state(),
+        "every": c.every,
+        "topk_frac": c.topk_frac if c.strategy == "topk" else None,
     }
     n, dt = FP.bucket_state_struct(b)
     d["state_len"] = n
@@ -75,8 +77,19 @@ def _bucket_dict(b: BK.Bucket) -> dict:
         s2 = c.stage2_sync()
         d["stage2"] = {"strategy": s2.strategy, "bits": s2.quant.bits,
                        "mode": s2.quant.mode}
+        # the full tier schedule, keyed per tier so a mismatch diff names
+        # the differing tier (tier cadence changes the meaning of the
+        # carried accumulator state mid-period — see DESIGN.md §16)
+        d["tiers"] = {
+            f"tier{t + 1}": {
+                "strategy": tier.sync.strategy, "bits": tier.sync.quant.bits,
+                "mode": tier.sync.quant.mode, "every": tier.every,
+                "topk_frac": (tier.sync.topk_frac
+                              if tier.sync.strategy == "topk" else None)}
+            for t, tier in enumerate(sync_schedule(c))}
     else:
         d["stage2"] = None
+        d["tiers"] = {}
     return d
 
 
@@ -92,7 +105,9 @@ def bucket_sync_config(bd: dict) -> SyncConfig:
         quant=QuantConfig(bits=bd["bits"], mode=bd["mode"], block=bd["block"],
                           scale=bd["scale"], error_codec=bd["error_codec"],
                           error_scale=bd["error_scale"]),
-        beta=bd["beta"], reset_every=bd["reset_every"])
+        beta=bd["beta"], reset_every=bd["reset_every"],
+        every=bd.get("every", 1),
+        topk_frac=bd.get("topk_frac") or 0.01)
 
 
 def build_fingerprint(groups, topo: FP.MeshTopo, sync: SyncConfig,
@@ -138,7 +153,7 @@ def build_fingerprint(groups, topo: FP.MeshTopo, sync: SyncConfig,
     return {
         "version": VERSION,
         "topo": {"dp": topo.dp, "tp": topo.tp, "pods": topo.pods,
-                 "dp_axes": list(topo.dp_axes)},
+                 "wans": topo.wans, "dp_axes": list(topo.dp_axes)},
         "planned": planned,
         "params": params,
     }

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 
 import jax.numpy as jnp
 
@@ -36,14 +37,23 @@ from repro.core import codec as codec_lib
 from repro.core import quantizer as Q
 from repro.core import wirepack as WP
 from repro.core.buckets import Bucket, ParamPlan, SyncPlan
-from repro.core.loco import SyncConfig
+from repro.core.loco import SyncConfig, sync_schedule
 
 
 def payload_bytes(n_elems: int, cfg: SyncConfig) -> int:
-    """Bytes of the quantized payload array for an ``(n_elems,)`` segment."""
+    """Bytes of the quantized payload array(s) for an ``(n_elems,)`` segment.
+
+    Ragged codecs (topk) have no single ``payload`` leaf: their payload is
+    the capacity-padded index + value pair, counted at full static capacity
+    — that is what crosses the wire regardless of the in-band count (see
+    :func:`effective_wire_bytes` for the count-aware view).
+    """
     if cfg.strategy == "fp":
         return 2 * n_elems                      # bf16 reduce-scatter wire
-    return codec_lib.get_codec(cfg).wire_shapes(n_elems)["payload"].nbytes
+    shapes = codec_lib.get_codec(cfg).wire_shapes(n_elems)
+    if "payload" in shapes:
+        return shapes["payload"].nbytes
+    return sum(leaf.nbytes for leaf in shapes.values() if leaf.ragged)
 
 
 def scale_bytes(n_elems: int, cfg: SyncConfig, dp: int = 1) -> int:
@@ -53,12 +63,31 @@ def scale_bytes(n_elems: int, cfg: SyncConfig, dp: int = 1) -> int:
     all-gathered across the dp group: each device receives one per peer);
     ``none`` leaves (the fixed-mode static scale) count their resident
     array size, matching the size-1 array ``Q.compress`` materializes.
+    Ragged leaves are payload (see :func:`payload_bytes`); the count
+    header they ride with is metadata and lands here.
     """
     if cfg.strategy == "fp":
         return 0
     shapes = codec_lib.get_codec(cfg).wire_shapes(n_elems)
     return sum(leaf.nbytes * (dp if leaf.comm == "gather" else 1)
-               for name, leaf in shapes.items() if name != "payload")
+               for name, leaf in shapes.items()
+               if name != "payload" and not leaf.ragged)
+
+
+def effective_wire_bytes(n_elems: int, cfg: SyncConfig, dp: int = 1) -> int:
+    """Expected *meaningful* wire bytes per sync of an ``(n_elems,)`` segment.
+
+    Ragged codecs pad to static capacity so the exchanged arrays keep a
+    fixed geometry; only the in-band count's worth of slots carries
+    information.  This is the steady-state count view: topk moves the u32
+    count plus ``topk_k`` live (u16 index, bf16 value) pairs per
+    TOPK_SEL block.  Dense codecs are the count == capacity special case
+    (effective == :func:`payload_bytes` + :func:`scale_bytes`).
+    """
+    if cfg.strategy == "topk":
+        u = n_elems // codec_lib.TOPK_SEL
+        return u * (4 + 4 * codec_lib.topk_k(cfg))
+    return payload_bytes(n_elems, cfg) + scale_bytes(n_elems, cfg, dp=dp)
 
 
 def state_bytes(n_elems: int, cfg: SyncConfig) -> int:
@@ -69,23 +98,49 @@ def state_bytes(n_elems: int, cfg: SyncConfig) -> int:
     return n_elems * jnp.dtype(state_dtype(cfg)).itemsize
 
 
+def _tier_axis_sizes(n_tiers: int, pods: int, wans: int) -> tuple[int, ...]:
+    """Mesh-axis size per outer tier, innermost first (tier 1 crosses the
+    ``pod`` axis / DCN, tier 2 the ``wan`` axis).  The wire accounting
+    supports the mesh shapes launch can build: at most two outer tiers."""
+    if n_tiers > 2:
+        raise ValueError(
+            f"wire accounting supports at most 2 outer sync tiers "
+            f"(DCN + WAN); got a {n_tiers}-tier schedule")
+    return (pods, wans)[:n_tiers]
+
+
+def tier_components(n_elems: int, cfg: SyncConfig, pods: int, dd: int,
+                    wans: int = 1) -> list[tuple[int, int]]:
+    """(payload, scales) bytes per exchange leg of the tiered schedule,
+    innermost first: leg 0 is stage 1 (the bucket's own codec, intra-pod),
+    then one leg per outer tier from :func:`~repro.core.loco.sync_schedule`
+    — tier 1 re-encodes the pod means across the ``pods`` pods (DCN),
+    tier 2 the resulting means across the ``wans`` WAN groups.  Each leg's
+    segment is the previous leg's mean slice (``n -> n/dd -> n/(dd*pods)``),
+    byte-matching the arrays :func:`repro.core.comm.hierarchical_sync`
+    exchanges on that network.  The single source of the hierarchical byte
+    accounting: :func:`hier_stage_bytes` and :func:`bucket_wire` both
+    derive from it, keeping ici + dcn + wan == payload + scales by
+    construction.
+    """
+    tiers = sync_schedule(cfg)
+    sizes = _tier_axis_sizes(len(tiers), pods, wans)
+    legs = [(payload_bytes(n_elems, cfg), scale_bytes(n_elems, cfg, dp=dd))]
+    n_t = n_elems // dd
+    for tier, P in zip(tiers, sizes):
+        legs.append((payload_bytes(n_t, tier.sync),
+                     scale_bytes(n_t, tier.sync, dp=P)))
+        n_t //= P
+    return legs
+
+
 def hier_stage_components(
         n_elems: int, cfg: SyncConfig,
         pods: int, dd: int) -> tuple[tuple[int, int], tuple[int, int]]:
-    """((payload, scales) per stage) of the two-stage exchange.
-
-    Stage 1 moves the bucket codec's full wire intra-pod (``gather`` leaves
-    are received from the ``dd`` pod members only); stage 2 moves the
-    stage-2 codec's wire for the pod-mean segment — ``n_elems / dd``
-    elements — across the ``pods`` pods.  The single source of the
-    hierarchical byte accounting: both :func:`hier_stage_bytes` and
-    :func:`bucket_wire` derive from it, keeping ici + dcn == payload +
-    scales by construction.
-    """
-    cfg2 = cfg.stage2_sync()
-    n2 = n_elems // dd
-    return ((payload_bytes(n_elems, cfg), scale_bytes(n_elems, cfg, dp=dd)),
-            (payload_bytes(n2, cfg2), scale_bytes(n2, cfg2, dp=pods)))
+    """((payload, scales) per stage) of the classic two-stage exchange —
+    the first two legs of :func:`tier_components`."""
+    legs = tier_components(n_elems, cfg, pods, dd)
+    return legs[0], legs[1]
 
 
 def hier_stage_bytes(n_elems: int, cfg: SyncConfig,
@@ -123,9 +178,10 @@ def flat_stage_bytes(n_elems: int, cfg: SyncConfig,
     return ici, dcn
 
 
-def _axes(pods: int) -> int:
-    """dp mesh axes a flat exchange crosses (2 on a multi-pod mesh)."""
-    return 2 if pods > 1 else 1
+def _axes(pods: int, wans: int = 1) -> int:
+    """dp mesh axes a flat exchange crosses (2 on a multi-pod mesh, 3 with
+    a WAN axis)."""
+    return 1 + (pods > 1) + (wans > 1)
 
 
 def _exchanged_leaves(cfg: SyncConfig, n_elems: int) -> int:
@@ -134,23 +190,29 @@ def _exchanged_leaves(cfg: SyncConfig, n_elems: int) -> int:
                .values() if leaf.comm != "none")
 
 
-def bucket_launches(b: Bucket, pods: int = 1) -> int:
+def bucket_launches(b: Bucket, pods: int = 1, wans: int = 1) -> int:
     """Collectives one bucket issues per sync on the UN-coalesced schedule:
-    one per exchanged wire leaf per mesh axis (hier buckets: each stage's
+    one per exchanged wire leaf per mesh axis (tiered buckets: each leg's
     leaves cross exactly one axis).  The per-bucket tax the wire coalescer
     removes — compare :func:`plan_launches`' coalesced count."""
     if b.sync.strategy == "fp":
-        return _axes(pods)  # one psum_scatter per mesh axis
+        return _axes(pods, wans)  # one psum_scatter per mesh axis
     hier = b.sync.hierarchical and pods > 1
     if hier:
-        dd = (b.seg_elems // b.chunk_elems) // pods
-        return (_exchanged_leaves(b.sync, b.seg_elems)
-                + _exchanged_leaves(b.sync.stage2_sync(),
-                                    b.seg_elems // dd))
-    return _axes(pods) * _exchanged_leaves(b.sync, b.seg_elems)
+        tiers = sync_schedule(b.sync)
+        sizes = _tier_axis_sizes(len(tiers), pods, wans)
+        dd = (b.seg_elems // b.chunk_elems) // math.prod(sizes)
+        count = _exchanged_leaves(b.sync, b.seg_elems)
+        n_t = b.seg_elems // dd
+        for tier, P in zip(tiers, sizes):
+            count += _exchanged_leaves(tier.sync, n_t)
+            n_t //= P
+        return count
+    return _axes(pods, wans) * _exchanged_leaves(b.sync, b.seg_elems)
 
 
-def plan_launches(plan: SyncPlan, pods: int = 1) -> dict[str, int]:
+def plan_launches(plan: SyncPlan, pods: int = 1,
+                  wans: int = 1) -> dict[str, int]:
     """Collective launches per optimizer step, per schedule.
 
     ``per_bucket``: the legacy one-collective-per-bucket-leaf count.
@@ -170,15 +232,24 @@ def plan_launches(plan: SyncPlan, pods: int = 1) -> dict[str, int]:
     per_bucket = coalesced = groups = overlapped = 0
     stages = 1
     for pp in plan.params:
-        per_bucket += pp.layers * sum(bucket_launches(b, pods)
-                                      for b in pp.buckets)
+        pb = pp.layers * sum(bucket_launches(b, pods, wans)
+                             for b in pp.buckets)
+        per_bucket += pb
         D = pp.buckets[0].seg_elems // pp.buckets[0].chunk_elems
-        gp = WP.build_group_plan(pp, D, pods=max(pods, 1))
-        coalesced += pp.layers * gp.launches(axes=_axes(pods))
-        groups += pp.layers * len(gp.groups)
-        sched = WP.build_overlap_schedule(pp, D, pods=max(pods, 1))
-        overlapped += pp.layers * sched.launches(axes=_axes(pods))
-        stages = max(stages, sched.n_stages)
+        try:
+            gp = WP.build_group_plan(pp, D, pods=max(pods, 1))
+            coalesced += pp.layers * gp.launches(axes=_axes(pods))
+            groups += pp.layers * len(gp.groups)
+            sched = WP.build_overlap_schedule(pp, D, pods=max(pods, 1))
+            overlapped += pp.layers * sched.launches(axes=_axes(pods))
+            stages = max(stages, sched.n_stages)
+        except ValueError:
+            # the coalescer refuses this plan (e.g. a multi-tier schedule
+            # only the monolithic exchange can run, see wirepack); such
+            # runs launch un-coalesced, so report that count.
+            coalesced += pb
+            overlapped += pb
+            groups += pp.layers * len(pp.buckets)
     return {"per_bucket": per_bucket, "coalesced": coalesced,
             "comm_groups": groups, "overlapped": overlapped,
             "pipeline_stages": stages}
@@ -196,12 +267,38 @@ class BucketWire:
     state: int
     ici: int = 0         # intra-pod bytes (== wire when pods == 1)
     dcn: int = 0         # inter-pod bytes (stage-2 wire for hierarchical)
+    wan: int = 0         # cross-WAN bytes (tier-2 wire on a 3-tier schedule)
     hierarchical: bool = False
     launches: int = 0    # un-coalesced collectives per sync, x layers
 
     @property
     def wire(self) -> int:
         return self.payload + self.scales
+
+
+@dataclasses.dataclass(frozen=True)
+class TierWire:
+    """Capacity-vs-effective bytes of one exchange tier, plan-wide.
+
+    ``capacity_bytes`` is the static wire per device per *sync* (what the
+    fixed-geometry collective moves every time it runs); ``effective_bytes``
+    is the in-band-count payload amortized over the tier's sync cadence —
+    the per-*step* traffic a bandwidth model should charge.  Both are
+    layers-weighted like every other byte count here.
+    """
+
+    tier: int                    # 0 = innermost leg, 1 = DCN, 2 = WAN
+    network: str                 # "ici" | "dcn" | "wan"
+    strategies: tuple[str, ...]  # codecs contributing at this tier
+    every: int                   # largest sync period at this tier (steps)
+    capacity_bytes: int
+    effective_bytes: float
+
+    def record(self) -> dict:
+        return {"tier": self.tier, "network": self.network,
+                "strategies": list(self.strategies), "every": self.every,
+                "capacity_bytes": self.capacity_bytes,
+                "effective_bytes": self.effective_bytes}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,9 +311,15 @@ class WireReport:
     bf16_bytes: int      # the 16-bit Adam baseline wire
     state_bytes: int     # resident error-state footprint per device
     pods: int = 1        # inter-pod axis size the ICI/DCN split was computed for
+    wans: int = 1        # WAN axis size (1 = no WAN tier)
     ici_bytes: int = 0   # intra-pod bytes per device per step
     dcn_bytes: int = 0   # inter-pod bytes per device per step
+    wan_bytes: int = 0   # cross-WAN bytes per device per sync
     bf16_dcn_bytes: int = 0  # the 16-bit baseline's inter-pod share
+    bf16_wan_bytes: int = 0  # the 16-bit baseline's cross-WAN share
+    # per-tier capacity-vs-effective rows (DESIGN.md §16); () on plans
+    # predating the tiered accounting
+    tiers: tuple[TierWire, ...] = ()
     # collective launches per step (see plan_launches): the un-coalesced
     # per-bucket-leaf count, the coalesced per-comm-group count, the
     # number of packed comm groups, and the per-stage count of the
@@ -241,6 +344,13 @@ class WireReport:
         headline saving of the hierarchical two-stage exchange."""
         return self.dcn_bytes / max(self.bf16_dcn_bytes, 1)
 
+    @property
+    def wan_ratio_vs_bf16(self) -> float:
+        """Cross-WAN bytes (per sync, capacity) vs the bf16 baseline's
+        cross-WAN share — before the top-k effective-count and cadence
+        amortization the tier rows additionally report."""
+        return self.wan_bytes / max(self.bf16_wan_bytes, 1)
+
     def by_class(self) -> dict[str, int]:
         out: dict[str, int] = {}
         for b in self.buckets:
@@ -259,10 +369,15 @@ class WireReport:
             "state_bytes": self.state_bytes,
             "ratio_vs_bf16": self.ratio_vs_bf16,
             "pods": self.pods,
+            "wans": self.wans,
             "ici_bytes": self.ici_bytes,
             "dcn_bytes": self.dcn_bytes,
+            "wan_bytes": self.wan_bytes,
             "bf16_dcn_bytes": self.bf16_dcn_bytes,
+            "bf16_wan_bytes": self.bf16_wan_bytes,
             "dcn_ratio_vs_bf16": self.dcn_ratio_vs_bf16,
+            "wan_ratio_vs_bf16": self.wan_ratio_vs_bf16,
+            "tiers": [t.record() for t in self.tiers],
             "by_class": self.by_class(),
             "n_buckets": len(self.buckets),
             "launches": {"per_bucket": self.launches_per_bucket,
@@ -277,55 +392,133 @@ class WireReport:
 
 
 def bucket_wire(param: str, tclass: str, b: Bucket, layers: int,
-                pods: int = 1) -> BucketWire:
+                pods: int = 1, wans: int = 1) -> BucketWire:
     dp = b.seg_elems // b.chunk_elems
-    dd = dp // max(pods, 1)
     hier = b.sync.hierarchical and pods > 1 and b.sync.strategy != "fp"
+    wan = 0
     if hier:
-        # two-stage: the bucket codec's wire stays intra-pod; only the
-        # stage-2 re-encode of the pod means crosses the DCN.
-        (p1, s1), (p2, s2) = hier_stage_components(b.seg_elems, b.sync,
-                                                   pods, dd)
-        pay, sc = p1 + p2, s1 + s2
-        ici, dcn = p1 + s1, p2 + s2
+        # tiered: the bucket codec's wire stays intra-pod; each outer
+        # tier's re-encode of the means crosses its own network.
+        tiers = sync_schedule(b.sync)
+        sizes = _tier_axis_sizes(len(tiers), pods, wans)
+        dd = dp // math.prod(sizes)
+        legs = tier_components(b.seg_elems, b.sync, pods, dd, wans)
+        pay = sum(p for p, _ in legs)
+        sc = sum(s for _, s in legs)
+        ici, dcn = sum(legs[0]), sum(legs[1])
+        wan = sum(p + s for p, s in legs[2:])
     else:
+        dd = dp // max(pods * wans, 1)
         pay = payload_bytes(b.seg_elems, b.sync)
         sc = scale_bytes(b.seg_elems, b.sync, dp=dp)
-        ici, dcn = flat_stage_bytes(b.seg_elems, b.sync, dp, dd)
+        ici, rest = flat_stage_bytes(b.seg_elems, b.sync, dp, dd)
+        dcn = rest
+        if wans > 1:
+            # rows beyond the dd*pods in this WAN group cross the WAN
+            _, wan = flat_stage_bytes(b.seg_elems, b.sync, dp, dd * pods)
+            dcn = rest - wan
     return BucketWire(
         param=param, bucket=b.index, tensor_class=tclass,
         strategy=b.sync.strategy, n_elems=b.seg_elems,
         payload=layers * pay, scales=layers * sc,
         state=layers * state_bytes(b.seg_elems, b.sync),
-        ici=layers * ici, dcn=layers * dcn, hierarchical=hier,
-        launches=layers * bucket_launches(b, pods))
+        ici=layers * ici, dcn=layers * dcn, wan=layers * wan,
+        hierarchical=hier,
+        launches=layers * bucket_launches(b, pods, wans))
 
 
-def plan_report(plan: SyncPlan, pods: int = 1) -> WireReport:
+def bucket_tiers(b: Bucket, layers: int, pods: int = 1,
+                 wans: int = 1) -> list[tuple[int, str, str, int, int, float]]:
+    """(tier, network, strategy, period, capacity, effective) per exchange
+    leg of one bucket — the per-bucket rows :func:`plan_tiers` aggregates.
+
+    ``period`` is the leg's sync period in steps: tier 0 runs at the
+    bucket cadence ``cfg.every``; an outer tier fires only when its own
+    gate AND the bucket gate are on, so its period is the lcm of the two.
+    ``effective`` amortizes the in-band-count bytes over that period.
+    """
+    dp = b.seg_elems // b.chunk_elems
+    cfg = b.sync
+    period = max(cfg.every, 1)
+    hier = cfg.hierarchical and pods > 1 and cfg.strategy != "fp"
+    if not hier:
+        cap = (payload_bytes(b.seg_elems, cfg)
+               + scale_bytes(b.seg_elems, cfg, dp=dp))
+        eff = effective_wire_bytes(b.seg_elems, cfg, dp=dp) / period
+        return [(0, "ici", cfg.strategy, period, layers * cap, layers * eff)]
+    tiers = sync_schedule(cfg)
+    sizes = _tier_axis_sizes(len(tiers), pods, wans)
+    dd = dp // math.prod(sizes)
+    legs = tier_components(b.seg_elems, cfg, pods, dd, wans)
+    rows = [(0, "ici", cfg.strategy, period, layers * sum(legs[0]),
+             layers * effective_wire_bytes(b.seg_elems, cfg, dp=dd) / period)]
+    nets = ("ici", "dcn", "wan")
+    n_t = b.seg_elems // dd
+    for t, (tier, P) in enumerate(zip(tiers, sizes)):
+        p_t = math.lcm(period, max(tier.every, 1))
+        rows.append((t + 1, nets[t + 1], tier.sync.strategy, p_t,
+                     layers * sum(legs[t + 1]),
+                     layers * effective_wire_bytes(n_t, tier.sync, dp=P)
+                     / p_t))
+        n_t //= P
+    return rows
+
+
+def plan_tiers(plan: SyncPlan, pods: int = 1,
+               wans: int = 1) -> tuple[TierWire, ...]:
+    """Aggregate the per-bucket tier legs into plan-wide tier rows."""
+    agg: dict[int, dict] = {}
+    for pp in plan.params:
+        for b in pp.buckets:
+            for t, net, strat, period, cap, eff in bucket_tiers(
+                    b, pp.layers, pods, wans):
+                a = agg.setdefault(t, {"network": net, "strategies": set(),
+                                       "every": 1, "cap": 0, "eff": 0.0})
+                a["strategies"].add(strat)
+                a["every"] = max(a["every"], period)
+                a["cap"] += cap
+                a["eff"] += eff
+    return tuple(
+        TierWire(tier=t, network=a["network"],
+                 strategies=tuple(sorted(a["strategies"])), every=a["every"],
+                 capacity_bytes=a["cap"], effective_bytes=a["eff"])
+        for t, a in sorted(agg.items()))
+
+
+def plan_report(plan: SyncPlan, pods: int = 1, wans: int = 1) -> WireReport:
     """Static wire accounting for every bucket in the plan.
 
     ``pods`` is the size of the inter-pod mesh axis (1 = single-pod /
-    flat-mesh run; the ICI/DCN split is then degenerate: everything ICI).
+    flat-mesh run; the ICI/DCN split is then degenerate: everything ICI);
+    ``wans`` the WAN axis size when the mesh has one (tier-2 exchanges).
     """
     rows = []
-    fp32 = bf16 = bf16_dcn = 0
+    fp32 = bf16 = bf16_dcn = bf16_wan = 0
     for pp in plan.params:
         for b in pp.buckets:
             rows.append(bucket_wire(pp.qualname, pp.tensor_class, b,
-                                    pp.layers, pods=pods))
+                                    pp.layers, pods=pods, wans=wans))
             fp32 += pp.layers * 4 * b.seg_elems
             bf16 += pp.layers * 2 * b.seg_elems
-            bf16_dcn += pp.layers * 2 * b.seg_elems * (pods - 1) // max(pods, 1)
-    launches = plan_launches(plan, pods=pods)
+            # baseline flat-exchange row attribution: of the dp rows,
+            # dp/wans stay in the WAN group and dp/(pods*wans) in the pod
+            bf16_dcn += (pp.layers * 2 * b.seg_elems * (pods - 1)
+                         // max(pods * wans, 1))
+            bf16_wan += (pp.layers * 2 * b.seg_elems * (wans - 1)
+                         // max(wans, 1))
+    launches = plan_launches(plan, pods=pods, wans=wans)
     return WireReport(
         buckets=tuple(rows),
         total_wire=sum(r.wire for r in rows),
         fp32_bytes=fp32, bf16_bytes=bf16,
         state_bytes=sum(r.state for r in rows),
-        pods=pods,
+        pods=pods, wans=wans,
         ici_bytes=sum(r.ici for r in rows),
         dcn_bytes=sum(r.dcn for r in rows),
+        wan_bytes=sum(r.wan for r in rows),
         bf16_dcn_bytes=bf16_dcn,
+        bf16_wan_bytes=bf16_wan,
+        tiers=plan_tiers(plan, pods=pods, wans=wans),
         launches_per_bucket=launches["per_bucket"],
         launches_coalesced=launches["coalesced"],
         comm_groups=launches["comm_groups"],
@@ -353,6 +546,21 @@ def format_report(rep: WireReport, max_rows: int = 12) -> str:
             f"({rep.dcn_ratio_vs_bf16:.3f}x of bf16 DCN share; "
             f"{sum(1 for b in rep.buckets if b.hierarchical)} "
             f"hierarchical buckets)")
+    if rep.wans > 1:
+        lines.append(
+            f"  WAN {rep.wan_bytes / 2**20:8.2f} MiB per sync "
+            f"({rep.wan_ratio_vs_bf16:.3f}x of bf16 WAN share)")
+    # tier rows only when they say more than the headline (cadence,
+    # ragged effective < capacity, or a multi-tier schedule)
+    if len(rep.tiers) > 1 or any(
+            t.every > 1 or t.effective_bytes < t.capacity_bytes
+            for t in rep.tiers):
+        for t in rep.tiers:
+            lines.append(
+                f"  tier {t.tier} ({t.network}) every={t.every:<3} "
+                f"capacity {t.capacity_bytes / 2**20:8.2f} MiB/sync | "
+                f"effective {t.effective_bytes / 2**20:8.2f} MiB/step "
+                f"[{'+'.join(t.strategies)}]")
     for cls, byt in sorted(rep.by_class().items()):
         lines.append(f"  class {cls:<6} {byt / 2**20:8.2f} MiB")
     rows = sorted(rep.buckets, key=lambda r: -r.wire)[:max_rows]
@@ -372,7 +580,7 @@ def decoded_error(state, cfg: SyncConfig):
     """Per-device error-feedback buffer in fp32 (what compensates next step)."""
     if not cfg.needs_state():
         return jnp.zeros((1,), jnp.float32)
-    if cfg.strategy == "loco":
+    if cfg.strategy in ("loco", "topk"):
         return Q.error_decode(state, cfg.quant)
     return state.astype(jnp.float32)
 

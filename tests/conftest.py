@@ -24,3 +24,9 @@ def mesh22():
 @pytest.fixture(scope="session")
 def mesh_pod():
     return make_local_mesh(dp=2, tp=2, pods=2)
+
+
+@pytest.fixture(scope="session")
+def mesh_wan():
+    # 3-tier dp nesting (wan, pod, data) for the N-tier sync schedule
+    return make_local_mesh(dp=2, tp=1, pods=2, wans=2)

@@ -360,3 +360,33 @@ def test_plan_shapes_match_runtime(mesh22):
                  or pytest.fail(f"{sh} vs {st.shape}{st.dtype}"),
                  sshapes, states,
                  is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_policy_parse_cadence_and_topk_flags():
+    """+topkN% / +everyN / +wan:topkN%everyK resolve sparsity, cadence and
+    the 3-tier WAN schedule per bucket (DESIGN.md §16)."""
+    from repro.core.loco import sync_schedule
+
+    base = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+    pol = POL.parse_policy("body=loco4+topk1%+every4,embed=loco8", base)
+    body = pol.resolve("b/wq", "body", 1 << 20)
+    assert body.strategy == "topk"
+    assert body.topk_frac == pytest.approx(0.01)
+    assert body.every == 4
+    assert pol.resolve("e/tok", "embed", 1 << 20).every == 1
+    # bare strategy preset
+    assert POL.parse_policy("body=topk", base) \
+        .resolve("b/wq", "body", 1 << 20).strategy == "topk"
+    # +wan appends a topk WAN tier after the classic pod tier
+    wan = POL.parse_policy("body=loco4+hier+wan:topk0.5%every16", base) \
+        .resolve("b/wq", "body", 1 << 20)
+    assert wan.hierarchical
+    tiers = sync_schedule(wan)
+    assert len(tiers) == 2
+    assert tiers[0].sync.strategy == "naive4" and tiers[0].every == 1
+    assert tiers[1].sync.strategy == "topk" and tiers[1].every == 16
+    assert tiers[1].sync.topk_frac == pytest.approx(0.005)
+    with pytest.raises(ValueError, match="unknown preset flag"):
+        POL.parse_policy("body=loco4+every", base)
+    with pytest.raises(ValueError, match="unknown preset flag"):
+        POL.parse_policy("body=loco4+topk%", base)

@@ -312,3 +312,51 @@ def test_train_resume_reshard_end_to_end(tmp_path):
     # the migrated run picks up where the source run left off: its first
     # post-resume loss stays in the source trajectory's neighborhood
     assert losses[0] < 7.5, losses
+
+
+# ---------------------------------------------------------------------------
+# cadence + tier schedules in the fingerprint (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def test_cadence_mid_period_resume_preserves_accumulator():
+    """Under sync cadence (every=2) the compensation-error state doubles as
+    the between-sync gradient accumulator; a dp2 -> dp4 resume mid-period
+    must preserve its decoded value like any other error state (same
+    logical-space reshard contract)."""
+    run_cad = dataclasses.replace(
+        RUN_A, policy=POL.parse_policy("body=loco4+every2", SYNC))
+    run_cad4 = dataclasses.replace(
+        RUN_B, policy=POL.parse_policy("body=loco4+every2", SYNC))
+    fpA, tmplA = make_layout(run_cad, TOPO_2x2)
+    fpB, tmplB = make_layout(run_cad4, TOPO_4x2)
+    # the cadence is part of the recorded layout
+    body = [b for p in fpA["params"] for b in p["buckets"]
+            if p["group"] == "block" and b["strategy"] == "loco"]
+    assert body and all(b["every"] == 2 for b in body)
+    state = random_state(tmplA)
+    out = reshard(as_data(state), fpA, fpB, tmplB)
+    tol = 2.0 ** -14 * 2.0 ** -6
+    for p in fpA["params"]:
+        if not p["loco"]:
+            continue
+        g, n = p["group"], p["name"]
+        mA = mean_logical_error(state, fpA, g, n)
+        mB = mean_logical_error(out, fpB, g, n)
+        np.testing.assert_allclose(mB, mA, atol=tol, err_msg=f"{g}/{n}")
+
+
+def test_tier_schedule_mismatch_names_tier(tmp_path):
+    """Restoring across differing tier schedules fails loudly with the
+    differing TIER named (a WAN cadence change redefines what the carried
+    accumulator means mid-period)."""
+    mk = lambda every: dataclasses.replace(
+        RUN_B, policy=POL.parse_policy(
+            f"body=loco4+hier+wan:topk1%every{every}", SYNC))
+    fpA, tmplA = make_layout(mk(16), TOPO_POD)
+    fpB, tmplB = make_layout(mk(8), TOPO_POD)
+    diff = fingerprint_diff(fpA, fpB)
+    assert any("tiers.tier2.every" in d for d in diff), diff
+    CKPT.save(str(tmp_path), 4, random_state(tmplA), fingerprint=fpA)
+    with pytest.raises(CheckpointMismatch) as ei:
+        CKPT.restore(str(tmp_path), 4, tmplB, fingerprint=fpB, reshard=False)
+    assert "tiers.tier2.every" in str(ei.value)

@@ -431,3 +431,64 @@ def test_dist_sync_threads_sr_key(mesh22):
     r1 = fn(g, jax.random.PRNGKey(0)[None])
     r2 = fn(g, jax.random.PRNGKey(1)[None])
     assert np.abs(np.asarray(r1) - np.asarray(r2)).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# topk ragged codec (ISSUE 8): wire form, error feedback, byte accounting
+# ---------------------------------------------------------------------------
+
+
+def test_topk_wire_form_and_error_feedback():
+    """The topk wire is a capacity-padded ragged leaf pair + u32 counts:
+    shapes match the telemetry contract, counts never exceed k, dead slots
+    are zero on the wire, and the untransmitted mass lands in the LoCo
+    error state (beta-weighted, up to f8 requantization)."""
+    cfg = SyncConfig(strategy="topk", topk_frac=0.05,
+                     quant=QuantConfig(mode="block"))
+    codec = C.get_codec(cfg)
+    n = 4 * 512
+    g = jax.random.normal(jax.random.PRNGKey(3), (n,)) * 1e-3
+    wire, st = codec.encode(g, codec.init_state(n))
+    shapes = codec.wire_shapes(n)
+    for name, leaf in shapes.items():
+        assert wire[name].shape == leaf.shape, name
+        assert wire[name].dtype == leaf.dtype, name
+    assert shapes["idx"].count_of == "cnt" and shapes["val"].count_of == "cnt"
+    k, cap = C.topk_k(cfg), C.topk_cap(cfg)
+    assert 0 < k <= cap <= C.TOPK_SEL and cap % 4 == 0
+    cnt = np.asarray(wire["cnt"])
+    assert (cnt <= k).all()
+    val = np.asarray(wire["val"].astype(jnp.float32)).reshape(-1, cap)
+    for b, c in enumerate(cnt):
+        assert (val[b, int(c):] == 0).all(), b
+    # single-sender decode == the encoder's own reconstruction d; with the
+    # default beta=0.5 the error state records beta*(h - d) (h = g here:
+    # zero initial error), so d + decode(e)/beta rebuilds g up to one f8 ulp
+    d = codec.decode_mean({kk: v[None] for kk, v in wire.items()})
+    e = np.asarray(codec.state_decode(st))
+    resid = np.abs(np.asarray(d) + e / cfg.beta - np.asarray(g))
+    assert resid.max() < 0.1 * np.abs(np.asarray(g)).max()
+    # sparsity actually happened: at 5% the reconstruction is mostly zeros
+    assert (np.asarray(d) != 0).mean() < 0.1
+
+
+def test_topk_byte_accounting():
+    """payload/scale/effective byte split for the ragged wire: capacity
+    bytes are what pack reserves, effective bytes are what the live counts
+    amortize to (u32 count + k (u16, bf16) pairs per block); topk_frac=1.0
+    degenerates to dense (effective == capacity)."""
+    cfg = SyncConfig(strategy="topk", topk_frac=0.05)
+    n = 8 * 512
+    u, cap, k = n // C.TOPK_SEL, C.topk_cap(cfg), C.topk_k(cfg)
+    assert W.payload_bytes(n, cfg) == u * cap * (2 + 2)
+    assert W.scale_bytes(n, cfg) == u * 4
+    eff = W.effective_wire_bytes(n, cfg)
+    assert eff == u * (4 + 4 * k)
+    assert eff <= W.payload_bytes(n, cfg) + W.scale_bytes(n, cfg)
+    full = SyncConfig(strategy="topk", topk_frac=1.0)
+    assert W.effective_wire_bytes(n, full) == \
+        W.payload_bytes(n, full) + W.scale_bytes(n, full)
+    # dense codecs are unchanged: effective == payload + scales
+    dense = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+    assert W.effective_wire_bytes(n, dense) == \
+        W.payload_bytes(n, dense) + W.scale_bytes(n, dense)

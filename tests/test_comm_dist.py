@@ -12,8 +12,8 @@ from repro.core import buckets as BK
 from repro.core.comm import (all_gather_flat, all_to_all_chunks, dist_sync,
                              dist_sync_buckets, psum_scatter_flat)
 from repro.core.hijack import gather_fp, gather_with_sync
-from repro.core.loco import (SyncConfig, init_state, sim_init, sim_sync,
-                             sim_sync_hier)
+from repro.core.loco import (SyncConfig, SyncTier, init_state, sim_init,
+                             sim_sync, sim_sync_hier, sync_schedule)
 from repro.core.quantizer import QuantConfig
 
 
@@ -35,7 +35,7 @@ def _dist_sync_once(mesh, dp_axes, cfg, g_nodes, state_nodes):
     return fn(g_nodes, state_nodes)
 
 
-@pytest.mark.parametrize("strategy", ["fp", "loco", "ef", "naive4"])
+@pytest.mark.parametrize("strategy", ["fp", "loco", "ef", "naive4", "topk"])
 def test_dist_matches_simulation(mesh22, strategy):
     """The shard_map dist_sync reproduces the N-node simulation bit-for-bit
     (modulo fp baseline's bf16 wire)."""
@@ -204,7 +204,7 @@ def test_hierarchical_matches_flat(mesh_pod):
 
 
 @pytest.mark.parametrize("mode", ["block", "fixed", "tensor"])
-@pytest.mark.parametrize("strategy", ["loco", "ef", "naive4", "onebit"])
+@pytest.mark.parametrize("strategy", ["loco", "ef", "naive4", "onebit", "topk"])
 def test_hierarchical_matches_simulation(mesh_pod, strategy, mode):
     """Hierarchical dist_sync is BIT-EXACT with sim_sync_hier for every
     registered strategy x quant mode: both run the same codec round trips
@@ -541,3 +541,267 @@ def test_hierarchical_with_kernels_matches_oracle(mesh_pod):
     np.testing.assert_array_equal(
         np.asarray(st_ref.astype(jnp.float32)),
         np.asarray(st_k.astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# ragged topk wire + cadence-aware scheduling (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+
+def _dist_sync_step(mesh, dp_axes, cfg, g_nodes, state_nodes, step):
+    """Like _dist_sync_once but threading the traced step scalar (the
+    cadence gate's input)."""
+    def body(g, st, s):
+        g_shard, new_st = dist_sync(g.reshape(-1), st.reshape(-1), cfg,
+                                    dp_axes, step=s)
+        return all_gather_flat(g_shard, dp_axes), new_st[None]
+
+    spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(spec, spec, P()),
+        out_specs=(P(None), spec), check_vma=False))
+    return fn(g_nodes, state_nodes, step)
+
+
+def test_topk_full_capacity_matches_dense_bf16(mesh22):
+    """topk at 100% capacity degenerates to the dense bf16 wire: every
+    entry crosses as a (u16, bf16) pair, so the decoded mean equals the
+    mean of the bf16-rounded compensated gradients bit-for-bit (the
+    acceptance property of the ragged capacity form)."""
+    cfg = SyncConfig(strategy="topk", topk_frac=1.0)
+    N, n = 2, 2 * 512
+    g = jax.random.normal(jax.random.PRNGKey(23), (N, n)) * 1e-3
+    st = jnp.stack([init_state(cfg, n) for _ in range(N)])
+    ghat, _ = _dist_sync_once(mesh22, ("data",), cfg, g, st)
+    want = jnp.mean(g.astype(jnp.bfloat16).astype(jnp.float32), axis=0)
+    np.testing.assert_array_equal(np.asarray(ghat), np.asarray(want))
+
+
+def test_cadence_every1_transparent(mesh22):
+    """The cadence gate at every=1 is bit-transparent: threading the step
+    produces the same shards AND states as the legacy step-less path over
+    two state-evolving rounds (so per-step callers may always pass it)."""
+    cfg = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+    N, n = 2, 2 * 512
+    g = jax.random.normal(jax.random.PRNGKey(29), (N, n)) * 1e-3
+    st_a = jnp.stack([init_state(cfg, n) for _ in range(N)])
+    st_b = st_a
+    for s in range(2):
+        ga, st_a = _dist_sync_step(mesh22, ("data",), cfg, g * (s + 1),
+                                   st_a, jnp.int32(s))
+        gb, st_b = _dist_sync_once(mesh22, ("data",), cfg, g * (s + 1), st_b)
+        np.testing.assert_array_equal(np.asarray(ga), np.asarray(gb))
+        np.testing.assert_array_equal(
+            np.asarray(st_a.astype(jnp.float32)),
+            np.asarray(st_b.astype(jnp.float32)))
+
+
+def test_cadence_every2_accumulates(mesh22):
+    """every=2 semantics (DESIGN.md §16): the off-cadence step returns a
+    zero shard and folds its gradient into the compensation-error state
+    (the state IS the accumulator); the on-cadence step then equals the
+    ungated sync fed the carried accumulator, bit for bit."""
+    from repro.core import codec as codec_lib
+
+    cfg = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"),
+                     every=2)
+    N, n = 2, 2 * 512
+    key = jax.random.PRNGKey(31)
+    g0 = jax.random.normal(key, (N, n)) * 1e-3
+    g1 = jax.random.normal(jax.random.fold_in(key, 1), (N, n)) * 1e-3
+    st0 = jnp.stack([init_state(cfg, n) for _ in range(N)])
+
+    sh0, st_acc = _dist_sync_step(mesh22, ("data",), cfg, g0, st0,
+                                  jnp.int32(0))
+    assert not np.any(np.asarray(sh0))
+    codec = codec_lib.get_codec(cfg)
+    for i in range(N):
+        want = codec.state_encode(g0[i] + codec.state_decode(st0[i]))
+        np.testing.assert_array_equal(
+            np.asarray(st_acc[i].astype(jnp.float32)),
+            np.asarray(want.astype(jnp.float32)))
+
+    sh1, st1 = _dist_sync_step(mesh22, ("data",), cfg, g1, st_acc,
+                               jnp.int32(1))
+    ref, st_ref = _dist_sync_once(mesh22, ("data",), cfg, g1, st_acc)
+    np.testing.assert_array_equal(np.asarray(sh1), np.asarray(ref))
+    np.testing.assert_array_equal(
+        np.asarray(st1.astype(jnp.float32)),
+        np.asarray(st_ref.astype(jnp.float32)))
+
+
+def test_cadence_single_trace_across_period(mesh22):
+    """The step is a traced scalar: one compiled function covers the whole
+    cadence period (no retrace across steps 0..3 — the acceptance pin),
+    with zero shards off-cadence and the flush firing on step every-1."""
+    cfg = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"),
+                     every=4)
+    N, n = 2, 2 * 512
+    traces = []
+
+    def body(g, st, s):
+        traces.append(1)
+        sh, ns = dist_sync(g.reshape(-1), st.reshape(-1), cfg, ("data",),
+                           step=s)
+        return all_gather_flat(sh, ("data",)), ns[None]
+
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh22, in_specs=(P("data"), P("data"), P()),
+        out_specs=(P(None), P("data")), check_vma=False))
+    g = jax.random.normal(jax.random.PRNGKey(37), (N, n)) * 1e-3
+    st = jnp.stack([init_state(cfg, n) for _ in range(N)])
+    outs = []
+    for s in range(4):
+        full, st = fn(g, st, jnp.int32(s))
+        outs.append(np.asarray(full))
+    assert len(traces) == 1, len(traces)
+    for s in range(3):
+        assert not np.any(outs[s]), s
+    assert np.any(outs[3])
+    # the flush releases the whole period's accumulated gradient: roughly
+    # 4x the per-step mean (f8 accumulator + 4-bit wire are lossy, so only
+    # the magnitude is pinned, not the bits)
+    want = np.asarray(jnp.mean(g, axis=0)) * 4
+    err = np.abs(outs[3] - want).max()
+    assert err < 0.25 * np.abs(want).max(), err
+
+
+def test_tier_cadence_own_slice_bypass(mesh_pod):
+    """Outer-tier cadence (tier.every=2): the off-cadence step skips the
+    cross-pod exchange and each rank keeps its OWN pod's stage-1 mean (the
+    DiLoCo-style local approximation, bit-exact vs the per-pod flat
+    simulation); the on-cadence step equals the ungated hierarchical
+    result bit for bit."""
+    base = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"),
+                      hierarchical=True)
+    gated = dataclasses.replace(
+        base, tiers=(dataclasses.replace(sync_schedule(base)[0], every=2),))
+    N, n = 4, 4 * 512
+    g = jax.random.normal(jax.random.PRNGKey(41), (N, n)) * 1e-3
+    st = jnp.stack([init_state(base, n) for _ in range(N)])
+
+    # step 1 hits the cadence (1 % 2 == 1): normal two-stage result
+    g_on, st_on = _dist_sync_step(mesh_pod, ("pod", "data"), gated, g, st,
+                                  jnp.int32(1))
+    g_ref, st_ref = _dist_sync_once(mesh_pod, ("pod", "data"), base, g, st)
+    np.testing.assert_array_equal(np.asarray(g_on), np.asarray(g_ref))
+    np.testing.assert_array_equal(
+        np.asarray(st_on.astype(jnp.float32)),
+        np.asarray(st_ref.astype(jnp.float32)))
+
+    # step 0 is off-cadence: rank r = (p, d) keeps pod p's stage-1 mean of
+    # chunk r — per pod, exactly the 2-node flat simulation's shard
+    g_off, _ = _dist_sync_step(mesh_pod, ("pod", "data"), gated, g, st,
+                               jnp.int32(0))
+    flat = dataclasses.replace(base, hierarchical=False, tiers=None)
+    want = np.empty((n,), np.float32)
+    for p in range(2):
+        rows = g[2 * p:2 * p + 2]
+        ghat_pod, _ = sim_sync(rows, sim_init(flat, 2, n), jnp.int32(1), flat)
+        # pod p's ranks own flat chunks 2p and 2p+1
+        sl = slice(p * (n // 2), (p + 1) * (n // 2))
+        want[sl] = np.asarray(ghat_pod)[sl]
+    np.testing.assert_array_equal(np.asarray(g_off), want)
+
+
+def test_three_tier_wan_schedule_bitexact(mesh_wan):
+    """A 3-tier schedule (ICI codec -> DCN naive8 -> WAN topk) over the
+    (wan, pod, data) mesh: with identical gradients on every rank, all
+    group means collapse to the shared row, so the exchanged result equals
+    the chained single-node codec round trips — bit-exact, slice
+    boundaries included (512-aligned chunks preserve quant-block and
+    top-k block edges)."""
+    from repro.core import codec as codec_lib
+
+    qb = QuantConfig(bits=8, mode="block")
+    pod_tier = SyncTier(SyncConfig(strategy="naive4", quant=qb), every=1)
+    wan_tier = SyncTier(SyncConfig(strategy="topk", topk_frac=0.25), every=1)
+    cfg = SyncConfig(strategy="loco", quant=qb, hierarchical=True,
+                     tiers=(pod_tier, wan_tier))
+    N, n = 8, 8 * 512
+    row = jax.random.normal(jax.random.PRNGKey(43), (n,)) * 1e-3
+    g = jnp.tile(row[None], (N, 1))
+    st = jnp.stack([init_state(cfg, n) for _ in range(N)])
+    ghat, _ = _dist_sync_once(mesh_wan, ("wan", "pod", "data"), cfg, g, st)
+
+    def roundtrip(c, x):
+        codec = codec_lib.get_codec(c)
+        wire, _ = codec.encode(x, codec.init_state(x.shape[0]))
+        return codec.decode_mean({k: v[None] for k, v in wire.items()})
+
+    x = roundtrip(cfg, row)                      # stage 1 (ICI, loco8)
+    x = roundtrip(pod_tier.sync, x)              # tier 1 (DCN, naive8)
+    x = roundtrip(wan_tier.sync, x)              # tier 2 (WAN, topk)
+    np.testing.assert_array_equal(np.asarray(ghat), np.asarray(x))
+
+
+def test_validate_rejects_cadence_and_tier_combos():
+    """Build-time rejection of the ISSUE-8 combos: cadence on a stateless
+    codec, reset mid-period, N-tier schedules on too-flat meshes, tier
+    cadence under the coalesced exchange, and cadence/ragged buckets on
+    the pipelined overlap schedule — each naming the bucket/tier and the
+    escape hatch."""
+    from repro.core.flatparam import MeshTopo
+    from repro.launch.steps import RunConfig, _validate_sync_configs
+
+    topo2 = MeshTopo(dp_axes=("pod", "data"), tp_axis="model", dp=4, tp=2,
+                     pods=2)
+    with pytest.raises(ValueError, match="has no state"):
+        _validate_sync_configs(
+            RunConfig(sync=SyncConfig(strategy="naive4", every=2)),
+            None, topo2)
+    with pytest.raises(ValueError, match="multiple of"):
+        _validate_sync_configs(
+            RunConfig(sync=SyncConfig(strategy="loco", every=3,
+                                      reset_every=512)),
+            None, topo2)
+    # a 2-tier (pod + wan) schedule needs 3 dp axes with real wan groups
+    qb = QuantConfig(bits=8, mode="block")
+    wan = SyncConfig(
+        strategy="loco", quant=qb, hierarchical=True,
+        tiers=(SyncTier(SyncConfig(strategy="naive4", quant=qb), every=1),
+               SyncTier(SyncConfig(strategy="topk"), every=16)))
+    with pytest.raises(ValueError, match=r"--wans >= 2"):
+        _validate_sync_configs(RunConfig(sync=wan), None, topo2)
+
+    def plan_of(cfgs, D=4):
+        buckets, off = [], 0
+        for i, s in enumerate(cfgs):
+            buckets.append(BK.Bucket(index=i, offset=off, chunk_elems=512,
+                                     seg_elems=D * 512, sync=s))
+            off += 512
+        pp = BK.ParamPlan(group="blocks", name="wq", tensor_class="body",
+                          chunklen=off, layers=1, buckets=tuple(buckets))
+        return BK.SyncPlan(params=(pp,))
+
+    # tier cadence rides only the monolithic exchange
+    hier_cad = dataclasses.replace(
+        SyncConfig(strategy="loco", quant=qb, hierarchical=True),
+        tiers=(SyncTier(SyncConfig(strategy="naive4", quant=qb), every=4),))
+    with pytest.raises(ValueError, match=r"--no-coalesce"):
+        _validate_sync_configs(RunConfig(sync=hier_cad),
+                               plan_of((hier_cad,)), topo2)
+    _validate_sync_configs(RunConfig(sync=hier_cad, coalesce=False),
+                           plan_of((hier_cad,)), topo2)
+    # tier-0 cadence / ragged topk cannot gate the pipelined overlap
+    # schedule's stage pieces (a piece cannot gate the whole accumulator)
+    loco = SyncConfig(strategy="loco", quant=qb)
+    cad = dataclasses.replace(loco, every=2)
+    with pytest.raises(ValueError, match=r"--no-overlap"):
+        _validate_sync_configs(
+            RunConfig(sync=loco),
+            plan_of((cad, SyncConfig(strategy="naive4",
+                                     quant=QuantConfig(bits=8,
+                                                       mode="tensor")),
+                     SyncConfig(strategy="fp"))), topo2)
+    topk = SyncConfig(strategy="topk")
+    with pytest.raises(ValueError, match=r"--no-overlap"):
+        _validate_sync_configs(
+            RunConfig(sync=loco),
+            plan_of((topk, SyncConfig(strategy="naive4",
+                                      quant=QuantConfig(bits=8,
+                                                        mode="tensor")),
+                     SyncConfig(strategy="fp"))), topo2)
+    # the escape hatch passes
+    _validate_sync_configs(RunConfig(sync=loco, overlap=False),
+                           plan_of((cad, loco)), topo2)

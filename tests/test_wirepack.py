@@ -31,6 +31,7 @@ HIER4 = dataclasses.replace(
     HIER, stage2=SyncConfig(strategy="naive4",
                             quant=QuantConfig(bits=4, mode="block")))
 HIERK = dataclasses.replace(HIER, use_kernels=True)
+TOPKC = SyncConfig(strategy="topk", topk_frac=0.05)   # k=26, capacity 28
 
 
 def make_plan(cfgs, c=512, D=2):
@@ -184,6 +185,65 @@ def test_pack_unpack_roundtrip_local():
                 np.asarray(wires[l.bucket][l.name]))
 
 
+def test_ragged_pack_unpack_masks_dead_slots():
+    """pack -> unpack identity on a ragged (capacity-padded) topk leaf pair
+    across counts 0 / 1 / mid / full: live slots round-trip bit-exactly and
+    dead slots come back ZERO no matter what bytes crossed the wire (the
+    count-driven mask is the receiving half of the ragged contract)."""
+    pplan = make_plan((TOPKC, LOCO4), D=4)
+    gp = WP.build_group_plan(pplan, 4, pods=1)
+    a2a = gp.group("flat", "a2a")
+
+    k = codec_lib.topk_k(TOPKC)
+    cap = codec_lib.topk_cap(TOPKC)
+    u = 4 * 512 // codec_lib.TOPK_SEL        # one block per peer
+    rng = np.random.default_rng(0)
+    counts = jnp.asarray([0, 1, k // 2, k], jnp.uint32)
+    idx = jnp.asarray(rng.integers(0, 512, (u, cap)), jnp.uint16)
+    val = jnp.asarray(rng.standard_normal((u, cap)), jnp.bfloat16)
+    # garbage in the dead slots: must not survive the unpack
+    dead = jnp.arange(cap, dtype=jnp.int32)[None, :] >= \
+        counts.astype(jnp.int32)[:, None]
+    idx = jnp.where(dead, jnp.uint16(0x1FF), idx)
+    val = jnp.where(dead, jnp.bfloat16(999.0), val)
+
+    codec = codec_lib.get_codec(LOCO4)
+    g = jax.random.normal(jax.random.PRNGKey(1), (4 * 512,)) * 1e-3
+    wire_loco, _ = codec.encode(g, codec.init_state(4 * 512))
+    wires = {0: {"cnt": counts, "idx": idx.reshape(-1),
+                 "val": val.reshape(-1)},
+             1: wire_loco}
+
+    buf = WP.pack_a2a(a2a, wires)
+    back = WP.unpack_a2a(a2a, buf)
+    got_idx = np.asarray(back[0]["idx"]).reshape(u, cap)
+    got_val = np.asarray(back[0]["val"].astype(jnp.float32)).reshape(u, cap)
+    live = ~np.asarray(dead)
+    np.testing.assert_array_equal(np.asarray(back[0]["cnt"]).reshape(-1),
+                                  np.asarray(counts))
+    np.testing.assert_array_equal(got_idx[live],
+                                  np.asarray(idx)[live])
+    np.testing.assert_array_equal(got_val[live],
+                                  np.asarray(val.astype(jnp.float32))[live])
+    assert (got_idx[~live] == 0).all()
+    assert (got_val[~live] == 0).all()
+    # the dense bucket sharing the group is untouched by the masking
+    for name in wire_loco:
+        np.testing.assert_array_equal(
+            np.asarray(back[1][name]).reshape(-1),
+            np.asarray(wire_loco[name]).reshape(-1))
+
+
+def test_group_plan_rejects_ragged_hier():
+    """Ragged leaves cannot ride the coalesced two-stage legs (the packed
+    rows are capacity-sized; a hier topk bucket must launch
+    --no-coalesce)."""
+    topk_hier = dataclasses.replace(TOPKC, hierarchical=True)
+    pplan = make_plan((topk_hier,), D=4)
+    with pytest.raises(ValueError, match="ragged"):
+        WP.build_group_plan(pplan, 4, pods=2)
+
+
 # ---------------------------------------------------------------------------
 # bit-exactness: coalesced == per-bucket schedule (the tentpole contract)
 # ---------------------------------------------------------------------------
@@ -196,8 +256,9 @@ def test_pack_unpack_roundtrip_local():
     (LOCO4, LOCO4, LOCO4, LOCO4),
     (LOCO4, LOCO4, LOCO8, LOCO8, FP, FP),
     (LOCO4K, LOCO4K, EF, EF),
+    (TOPKC, LOCO4, FP),
 ], ids=["quant-mix-fp", "onebit-ef", "kernels-cell", "fused-uniform",
-        "fused-runs", "fused-kernels"])
+        "fused-runs", "fused-kernels", "topk-ragged"])
 def test_coalesced_matches_per_bucket_flat(mesh22, cfgs):
     """Two sync rounds (the second with non-zero error states) produce
     bit-identical shards AND states under the packed and the per-bucket
