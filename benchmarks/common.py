@@ -138,19 +138,24 @@ def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-def write_bench_json(path: str, bench: str, results: dict, **extra) -> dict:
+def write_bench_json(path: str, bench: str, results: dict, *,
+                     fidelity_every: int = 0, **extra) -> dict:
     """Write one BENCH_*.json in the shared telemetry envelope.
 
     Every benchmark artifact is a single ``bench``-kind record of the
     telemetry/sink schema (schema_version + kind + t + bench name +
     results dict), so the same validator covers training streams and
     benchmark outputs.  The record is also schema-checked on write.
+    ``fidelity_every`` records the gradient-fidelity probe cadence the
+    measured run used (0 = probing off), so a bench number can always be
+    matched to whether probe steps were in the loop (DESIGN.md §17).
     """
     import json
 
     from repro.telemetry import sink
 
-    rec = sink.envelope("bench", bench=bench, results=results, **extra)
+    rec = sink.envelope("bench", bench=bench, results=results,
+                        fidelity_every=int(fidelity_every), **extra)
     errs = sink.validate_record(rec)
     assert not errs, errs
     with open(path, "w") as f:

@@ -79,12 +79,61 @@ def collective_table(recs, mesh="16x16", shape="train_4k"):
             continue
         bk = r["collectives"]["bytes_by_kind"]
         ov = r.get("overlap")
+        if ov:  # nested {overlapped, legacy} since the PR 7 scheduler
+            ov = ov.get("overlapped", ov)
         ovs = f"{ov['overlap_fraction']:.0%}" if ov else "n/a"
         lines.append(
             f"| {a} | " + " | ".join(
                 f"{bk.get(k, 0)/2**30:.2f}" for k in
                 ("all-gather", "all-reduce", "all-to-all", "reduce-scatter"))
             + f" | {r['collectives']['wire_bytes']/2**30:.2f} GiB | {ovs} |")
+    return "\n".join(lines)
+
+
+def fidelity_overhead_table(recs, mesh="16x16", shape="train_4k"):
+    """Probe cadence + predicted probe-step overhead (dryrun --fidelity-every
+    records, DESIGN.md §17): extra wire bytes are the reference reduces,
+    extra launches include the probe's flat schedule vs the pipelined one."""
+    lines = ["| arch | cadence | probe wire | extra wire | extra launches |",
+             "|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        r = recs.get((a, shape, mesh))
+        if not r or r.get("status") != "ok" or not r.get("fidelity"):
+            continue
+        f = r["fidelity"]
+        xl = ", ".join(f"{k} {v:+d}"
+                       for k, v in sorted(f["extra_launches"].items())) or "none"
+        lines.append(
+            f"| {a} | every {f['every']} | "
+            f"{f['probe_wire_bytes'] / 2**20:.2f} MiB | "
+            f"{f['extra_wire_bytes'] / 2**20:+.2f} MiB | {xl} |")
+    return "\n".join(lines)
+
+
+def fidelity_run_table(jsonl_path: str):
+    """Probe-step fidelity trace from a --metrics-jsonl stream (the sink's
+    ``fidelity`` records): global cosine / relative L2 / compensation gain
+    per probe, worst unit by cosine."""
+    rows = []
+    with open(jsonl_path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if rec.get("kind") == "fidelity":
+                rows.append((rec.get("step"), rec.get("metrics", {})))
+    lines = ["| step | cos | rel_l2 | comp_gain | worst unit (cos) |",
+             "|---|---|---|---|---|"]
+    nan = float("nan")
+    for step, m in rows:
+        unit_cos = {k[:-len("/fid_cos")]: v for k, v in m.items()
+                    if k.endswith("/fid_cos") and not k.startswith("fidelity")}
+        worst = min(unit_cos, key=unit_cos.get) if unit_cos else "n/a"
+        wtxt = (f"{worst} ({unit_cos[worst]:.4f})" if unit_cos else "n/a")
+        lines.append(f"| {step} | {m.get('fidelity/cos', nan):.4f} | "
+                     f"{m.get('fidelity/rel_l2', nan):.4f} | "
+                     f"{m.get('fidelity/comp_gain', nan):.3f} | {wtxt} |")
     return "\n".join(lines)
 
 
@@ -109,14 +158,23 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--jsonl", default=None, metavar="FILE",
+                    help="also render the fidelity-probe trace from a "
+                         "--metrics-jsonl stream's fidelity records")
     args = ap.parse_args()
     recs = load(args.dir)
     print("## Roofline (single-pod 16x16, sync=loco)\n")
     print(roofline_table(recs, args.mesh))
     print("\n## Collective bytes by kind (train_4k)\n")
     print(collective_table(recs))
+    if any(r.get("fidelity") for r in recs.values()):
+        print("\n## Fidelity-probe overhead (train_4k)\n")
+        print(fidelity_overhead_table(recs, args.mesh))
     print("\n## Mesh comparison\n")
     print(compare_meshes(recs))
+    if args.jsonl:
+        print("\n## Fidelity probes\n")
+        print(fidelity_run_table(args.jsonl))
 
 
 if __name__ == "__main__":

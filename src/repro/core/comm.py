@@ -163,6 +163,45 @@ def _cadence_on(step: jax.Array, every: int) -> jax.Array:
     return (jnp.asarray(step, jnp.int32) % every) == (every - 1)
 
 
+def _probe_reduce(rows: jax.Array, dp_axes: tuple[str, ...]) -> jax.Array:
+    """Fidelity-probe reference reduce: (K, n) local vectors -> (K, n/D)
+    exact psum-scatter means over the dp group.
+
+    All K reference rows ride ONE packed collective: the rows interleave
+    per destination chunk ((K, D, C) -> (D, K*C)) so the scatter delivers
+    each rank the K rows of *its* chunk — this is the probe step's "one
+    extra fp32 reduce over the same dp axes" (DESIGN.md §17).
+    """
+    K, n = rows.shape
+    D = axis_size(dp_axes)
+    x = rows.reshape(K, D, n // D).transpose(1, 0, 2).reshape(-1)
+    red = psum_scatter_flat(x, dp_axes)
+    return red.reshape(K, n // D) / D
+
+
+def _probe_rt(codec: "codec_lib.Codec", seg: jax.Array,
+              wire: dict[str, jax.Array]) -> tuple[jax.Array, jax.Array]:
+    """Local (live roundtrip, no-compensation roundtrip) of one segment.
+
+    ``wire`` is the already-encoded live wire (pre any hier regroup), so
+    the live decode costs no extra encode; the counterfactual re-encodes
+    from a zero state — the paper's Fig. 1 "without compensation" arm.
+    """
+    rt_live = codec.decode_mean(jax.tree.map(lambda a: a[None], wire))
+    rt_nc, _ = codec.roundtrip(seg, codec.init_state(seg.shape[0]), None)
+    return rt_live, rt_nc
+
+
+def _fit_rows(refs: jax.Array, rows: int) -> jax.Array:
+    """Zero-pad a probe-ref stack to ``rows`` rows (uniform leaf shape
+    across buckets/runs with different stage counts)."""
+    assert refs.shape[0] <= rows, (refs.shape, rows)
+    if refs.shape[0] == rows:
+        return refs
+    pad = jnp.zeros((rows - refs.shape[0], refs.shape[1]), refs.dtype)
+    return jnp.concatenate([refs, pad], axis=0)
+
+
 def _cadence_select(
     g: jax.Array,
     state: jax.Array,
@@ -200,7 +239,8 @@ def dist_sync(
     key: jax.Array | None = None,
     coalesce: bool = True,
     step: jax.Array | None = None,
-) -> tuple[jax.Array, jax.Array]:
+    probe: bool = False,
+) -> tuple[jax.Array, jax.Array] | tuple[jax.Array, jax.Array, jax.Array]:
     """Synchronize one flat gradient segment across the dp group.
 
     g:     (n,) local gradient segment, n divisible by D * 2 * block; row
@@ -214,8 +254,16 @@ def dist_sync(
            at ``every == 1`` the predicate is identically true and the
            select is bit-transparent, so per-step callers may always
            thread the step.
-    returns (g_shard (n/D,), new_state): the *averaged* gradient piece this
-    rank owns, and the updated local compressor state.
+    probe: fidelity-probe mode (DESIGN.md §17): additionally returns a
+           ``(K, n/D)`` fp32 reference stack for this rank's chunk — row 0
+           the exact mean gradient, row 1 the mean of the peers' live
+           compensated roundtrips (the lossless-tail stage-1 reference),
+           row 2 the counterfactual mean without compensation, rows 3+
+           the intermediate tier references of a multi-tier schedule.
+           The synced shard and new state are bit-identical to the
+           non-probe call (pinned by tests/test_fidelity.py).
+    returns (g_shard (n/D,), new_state[, probe_refs]): the *averaged*
+    gradient piece this rank owns, and the updated local compressor state.
 
     Every wire strategy runs the same three steps — ``codec.encode`` ->
     exchange of the wire pytree -> ``codec.decode_mean`` — with Pallas fast
@@ -231,18 +279,26 @@ def dist_sync(
         # flattened): unsupported combos raise inside hierarchical_sync and
         # are caught earlier, with the bucket in view, by
         # launch.steps._validate_sync_configs.
-        shard, new_state = hierarchical_sync(g, state, cfg, dp_axes, key=key,
-                                             coalesce=coalesce, step=step)
+        out = hierarchical_sync(g, state, cfg, dp_axes, key=key,
+                                coalesce=coalesce, step=step, probe=probe)
+        shard, new_state = out[0], out[1]
         if step is not None and cfg.needs_state():
             shard, new_state = _cadence_select(g, state, cfg, step,
                                                shard, new_state)
+        if probe:
+            return shard, new_state, out[2]
         return shard, new_state
 
     if cfg.strategy == "fp":
         # 16-bit-style baseline: reduce-scatter mean (bf16 wire).
         with PROF.phase("exchange"):
             g_shard = psum_scatter_flat(g.astype(jnp.bfloat16), dp_axes)
-        return g_shard.astype(jnp.float32) / D, state
+        shard = g_shard.astype(jnp.float32) / D
+        if probe:
+            # fp buckets carry no fidelity units (telemetry skips them,
+            # like the health metrics do) — zero refs keep the leaf shape.
+            return shard, state, jnp.zeros((3, n // D), jnp.float32)
+        return shard, state
 
     if cfg.strategy == "ef21":
         raise NotImplementedError(
@@ -255,6 +311,11 @@ def dist_sync(
     # --- local compensate + quantize (steps 1-2 of Algorithm 1) -----------
     with PROF.phase("encode"):
         wire, new_state = codec.encode(g, state, key)
+    refs = None
+    if probe:
+        with PROF.phase("probe"):
+            rt_live, rt_nc = _probe_rt(codec, g, wire)
+            refs = _probe_reduce(jnp.stack([g, rt_live, rt_nc]), dp_axes)
 
     # --- exchange of the low-bit wire pytree (step 3 / §3.3) --------------
     with PROF.phase("exchange"):
@@ -267,6 +328,8 @@ def dist_sync(
     if step is not None and cfg.needs_state():
         shard, new_state = _cadence_select(g, state, cfg, step,
                                            shard, new_state)
+    if probe:
+        return shard, new_state, refs
     return shard, new_state
 
 
@@ -346,7 +409,8 @@ def dist_sync_buckets(
     coalesce: bool = True,
     overlap: bool = False,
     step: jax.Array | None = None,
-) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    probe: bool = False,
+):
     """Synchronize a full local gradient bucket by bucket.
 
     g:      (padlen,) local full gradient of one parameter
@@ -393,15 +457,26 @@ def dist_sync_buckets(
                                     axis=1).reshape(-1)
 
     if not coalesce:
-        shards, new_states = [], []
+        shards, new_states, refs = [], [], []
         for b, st, kb in zip(plan.buckets, states, keys):
-            sh, ns = dist_sync(seg_of(b), st, b.sync, dp_axes, key=kb,
-                               coalesce=False, step=step)
-            shards.append(sh)
-            new_states.append(ns)
+            out = dist_sync(seg_of(b), st, b.sync, dp_axes, key=kb,
+                            coalesce=False, step=step, probe=probe)
+            shards.append(out[0])
+            new_states.append(out[1])
+            if probe:
+                refs.append(out[2])
+        if probe:
+            # buckets partition chunk space in offset order; pad every
+            # bucket's ref stack to the plan's max stage depth so the
+            # param-level leaf is one uniform (K, chunklen) array
+            rows = max(r.shape[0] for r in refs)
+            prefs = jnp.concatenate([_fit_rows(r, rows) for r in refs],
+                                    axis=1)
+            return jnp.concatenate(shards), tuple(new_states), prefs
         return jnp.concatenate(shards), tuple(new_states)
     return _dist_sync_coalesced(gm, states, plan, dp_axes, keys,
-                                run_space=False, overlap=overlap, step=step)
+                                run_space=False, overlap=overlap, step=step,
+                                probe=probe)
 
 
 def dist_sync_runs(
@@ -413,7 +488,8 @@ def dist_sync_runs(
     overlap: bool = False,
     piece_space: bool = False,
     step: jax.Array | None = None,
-) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    probe: bool = False,
+):
     """:func:`dist_sync_buckets` with RUN-space compressor states.
 
     ``run_states`` holds one peer-major buffer per :class:`encode run
@@ -440,6 +516,11 @@ def dist_sync_runs(
         raise ValueError(
             "piece_space is the pipelined schedule's state layout; "
             "piece_space=True requires overlap=True")
+    if probe and overlap:
+        raise ValueError(
+            "the fidelity probe runs on the flat coalesced schedule only "
+            "(bit-exact with overlap; the probe step variant forces "
+            "overlap off — see launch/steps.py)")
     D = axis_size(dp_axes)
     C = plan.chunklen
     assert g.shape[0] == D * C, (g.shape, D, C)
@@ -447,7 +528,8 @@ def dist_sync_runs(
     keys = _bucket_keys(key, plan)
     return _dist_sync_coalesced(gm, run_states, plan, dp_axes, keys,
                                 run_space=True, overlap=overlap,
-                                piece_space=piece_space, step=step)
+                                piece_space=piece_space, step=step,
+                                probe=probe)
 
 
 def _dist_sync_coalesced(
@@ -460,7 +542,8 @@ def _dist_sync_coalesced(
     overlap: bool = False,
     piece_space: bool = False,
     step: jax.Array | None = None,
-) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    probe: bool = False,
+):
     """Shared coalesced schedule.  ``states`` (and the returned new
     states) are per-run when ``run_space`` else per-bucket — the per-bucket
     form stitches members through peer-major views around each fused
@@ -522,6 +605,7 @@ def _dist_sync_coalesced(
     fp_segs: dict[int, jax.Array] = {}
     new_states: list = [None] * len(states)
     gates: dict[int, jax.Array] = {}
+    probe_rt: dict[int, tuple[jax.Array, jax.Array]] = {}
     with PROF.phase("encode"):
         for ri, run in enumerate(runs):
             cfg = run.sync
@@ -574,12 +658,33 @@ def _dist_sync_coalesced(
                 pos = run.positions[0]
                 wire, ns = codec.encode(seg, states[pos], kb)
                 new_states[pos] = select(ns, states[pos], seg)
+            if probe:
+                # live/counterfactual roundtrips read the PRE-regroup wire
+                # (its decode is the peers' reconstruction of this node's
+                # contribution; error feedback — and hence the probe's
+                # stage-1 reference — covers stage 1 only)
+                probe_rt[run.slot] = _probe_rt(codec, seg, wire)
             if cfg.hierarchical:
                 seg_n = D * run.chunk_total
                 wire = {name: (_regroup_chunks(wire[name], Pp, Dd).reshape(-1)
                                if leaf.comm == "split" else wire[name])
                         for name, leaf in codec.wire_shapes(seg_n).items()}
             wires[run.slot] = wire
+
+    probe_refs = None
+    if probe:
+        # all three references cross in ONE packed psum-scatter over the
+        # full dp group (fp runs contribute zero live/counterfactual
+        # columns; their true-mean column is still exact)
+        with PROF.phase("probe"):
+            def cols(i):
+                return jnp.concatenate(
+                    [probe_rt[r.slot][i].reshape(D, r.chunk_total)
+                     if r.slot in probe_rt
+                     else jnp.zeros((D, r.chunk_total), jnp.float32)
+                     for r in runs], axis=1)
+            rows = jnp.stack([gm, cols(0), cols(1)]).reshape(3, -1)
+            probe_refs = _probe_reduce(rows, dp_axes)
 
     # --- one packed collective per comm group ------------------------------
     shards: dict[int, jax.Array] = {}
@@ -638,8 +743,10 @@ def _dist_sync_coalesced(
         shards[slot] = jnp.where(on, shards[slot], jnp.zeros_like(shards[slot]))
 
     # runs are in chunk-space offset order, each shard spans its whole run
-    return (jnp.concatenate([shards[run.slot] for run in runs]),
-            tuple(new_states))
+    out = jnp.concatenate([shards[run.slot] for run in runs])
+    if probe:
+        return out, tuple(new_states), probe_refs
+    return out, tuple(new_states)
 
 
 def _dist_sync_overlapped(
@@ -896,7 +1003,8 @@ def hierarchical_sync(
     key: jax.Array | None = None,
     coalesce: bool = True,
     step: jax.Array | None = None,
-) -> tuple[jax.Array, jax.Array]:
+    probe: bool = False,
+):
     """Codec-level N-tier exchange over a nested dp mesh.
 
     The tier list comes from :func:`repro.core.loco.sync_schedule`: the
@@ -940,6 +1048,16 @@ def hierarchical_sync(
     r, same as the flat exchange, so the FSDP layout is unchanged.  Error
     feedback covers stage 1 only; the error states are bit-identical to
     the flat path's.
+
+    With ``probe`` (DESIGN.md §17) additionally returns the fidelity
+    reference stack ``(3 + len(tiers) - 1, n/D)``: true mean / stage-1
+    lossless-tail reference / no-compensation counterfactual (one packed
+    psum-scatter over the full dp group), plus one *intermediate* tier
+    reference per non-final outer tier — the exact mean over the axes a
+    tier has not yet crossed, taken on the tier's (cadence-selected)
+    output, so consecutive references telescope: their successive
+    differences are exactly the per-stage deviations and sum to the
+    end-to-end ``sync - true`` deviation.
     """
     tiers = loco_lib.sync_schedule(cfg)
     _check_hier_axes(dp_axes, len(tiers))
@@ -963,6 +1081,11 @@ def hierarchical_sync(
         wire1 = {name: (_regroup_chunks(wire[name], rem, Dd).reshape(-1)
                         if leaf.comm == "split" else wire[name])
                  for name, leaf in shapes1.items()}
+    refs = None
+    if probe:
+        with PROF.phase("probe"):
+            rt_live, rt_nc = _probe_rt(codec, g, wire)
+            refs = _probe_reduce(jnp.stack([g, rt_live, rt_nc]), dp_axes)
     with PROF.phase("exchange"):
         recv1 = exchange_wire(wire1, shapes1, Dd, (dp_axes[-1],),
                               coalesce=coalesce)
@@ -999,5 +1122,16 @@ def hierarchical_sync(
                 cur.reshape(rem, P, n_t // (rem * P)),
                 jax.lax.axis_index(ax), axis=1, keepdims=False).reshape(-1)
             out = jnp.where(_cadence_on(step, tier.every), out, own)
+        if probe and t < len(tiers) - 1:
+            # intermediate reference after this tier's (cadence-selected)
+            # output: exact mean over the axes still uncrossed, scattered
+            # down to the final chunk (rank-major chunk order matches the
+            # remaining legs' delivery, so this is my final chunk's value
+            # under a lossless tail)
+            with PROF.phase("probe"):
+                ref_t = psum_scatter_flat(out, dp_axes[:len(dp_axes) - 2 - t])
+                refs = jnp.concatenate([refs, ref_t[None] / rem], axis=0)
         cur = out
+    if probe:
+        return cur, new_state, refs
     return cur, new_state

@@ -40,7 +40,10 @@ from repro.core import wirepack as WP
 from repro.core.buckets import ALIGN, ParamPlan, SyncPlan
 from repro.core.hijack import (gather_fp, gather_with_sync,
                                gather_with_sync_buckets,
-                               gather_with_sync_runs, replicated_grad_psum)
+                               gather_with_sync_buckets_probe,
+                               gather_with_sync_probe, gather_with_sync_runs,
+                               gather_with_sync_runs_probe,
+                               replicated_grad_psum)
 from repro.core.loco import SyncConfig
 
 GRAIN = ALIGN  # dp chunks stay divisible by 2 (int4 pack) * 256 (quant block)
@@ -285,6 +288,7 @@ def materialize(
     overlap: bool = False,
     piece_space: bool = False,
     step: jax.Array | None = None,
+    probe: jax.Array | None = None,
 ) -> jax.Array:
     """fp32 chunk -> logical bf16 TP-local tensor (FSDP gather w/ LoCo bwd).
 
@@ -299,9 +303,27 @@ def materialize(
     per-piece leaves (:func:`repro.core.wirepack.state_pieces`) so the
     backward skips the in-graph run<->piece conversion.  Bit-exact every
     way (DESIGN.md §13, §15).
+
+    ``probe`` (fidelity-probe steps, DESIGN.md §17): a zeros ``(K,
+    chunklen)`` fp32 buffer routed to the probe gather variants; its
+    cotangent carries the fidelity reference stack out of the backward.
+    Requires ``overlap=False`` (the probe runs the flat schedule, which is
+    bit-exact with the pipelined one).
     """
     w = chunk.astype(compute_dtype)
-    if info.loco and pplan is not None and coalesce:
+    if probe is not None and info.loco:
+        assert not overlap and not piece_space, (
+            "fidelity probe runs the flat (non-overlapped) schedule")
+        if pplan is not None and coalesce:
+            flat = gather_with_sync_runs_probe(w, state, probe, pplan,
+                                               topo.dp_axes, step=step)
+        elif pplan is not None:
+            flat = gather_with_sync_buckets_probe(w, state, probe, pplan,
+                                                  topo.dp_axes, step=step)
+        else:
+            flat = gather_with_sync_probe(w, state, probe, cfg,
+                                          topo.dp_axes, step=step)
+    elif info.loco and pplan is not None and coalesce:
         # run-space states (fuse_run_states): the packed schedule with one
         # state leaf per encode run
         flat = gather_with_sync_runs(w, state, pplan, topo.dp_axes,
@@ -353,7 +375,8 @@ class TrainStore:
     def __init__(self, groups, chunks, states, cfg: SyncConfig, topo: MeshTopo,
                  compute_dtype=jnp.bfloat16, plan: SyncPlan | None = None,
                  coalesce: bool = True, overlap: bool = False,
-                 piece_space: bool = False, step: jax.Array | None = None):
+                 piece_space: bool = False, step: jax.Array | None = None,
+                 probe=None):
         self.groups = {g.name: g for g in groups}
         self.chunks = chunks  # {group: {name: (L?, 1, chunk)}} local views
         self.states = states  # {group: {name: (L?, 1, 1.., padlen) | tuple}} local
@@ -365,11 +388,18 @@ class TrainStore:
         self.overlap = overlap    # pipelined stage schedule (§15)
         self.piece_space = piece_space  # states carried in piece layout (§15)
         self.step = step      # traced step index for the cadence gate (§16)
+        self.probe = probe    # {group: {name: (L?, K, chunk)}} zeros (§17)
 
     def _pplan(self, gname: str, info: ParamInfo) -> ParamPlan | None:
         if self.plan is None or not info.loco:
             return None
         return self.plan.lookup(gname, info.name)
+
+    def _probe_leaf(self, gname: str, info: ParamInfo, tree=None):
+        if self.probe is None or not info.loco:
+            return None
+        src = self.probe[gname] if tree is None else tree
+        return src.get(info.name)
 
     # ---- non-stacked groups ------------------------------------------------
     def group(self, gname: str) -> dict[str, jax.Array]:
@@ -385,29 +415,38 @@ class TrainStore:
                                          coalesce=self.coalesce,
                                          overlap=self.overlap,
                                          piece_space=self.piece_space,
-                                         step=self.step)
+                                         step=self.step,
+                                         probe=self._probe_leaf(gname, info))
         return out
 
     # ---- stacked groups: xs for lax.scan ------------------------------------
     def scan_xs(self, gname: str):
         g = self.groups[gname]
         assert g.stacked
+        if self.probe is not None:
+            # models treat the xs tuple opaquely (lax.scan slices it and
+            # hands it back to materialize_slice), so the probe leaves ride
+            # as a third element without touching any model
+            return (self.chunks[gname], self.states[gname],
+                    self.probe[gname])
         return (self.chunks[gname], self.states[gname])
 
     def materialize_slice(self, gname: str, xs_slice) -> dict[str, jax.Array]:
         g = self.groups[gname]
-        cs, ss = xs_slice
+        cs, ss, *rest = xs_slice
+        ps = rest[0] if rest else None
         out = {}
         for info in g.infos:
             c = cs[info.name].reshape(-1)
             s = _squeeze_state(ss[info.name])
+            pl = None if ps is None else self._probe_leaf(gname, info, ps)
             out[info.name] = materialize(c, s, info, self.cfg, self.topo,
                                          self.compute_dtype,
                                          pplan=self._pplan(gname, info),
                                          coalesce=self.coalesce,
                                          overlap=self.overlap,
                                          piece_space=self.piece_space,
-                                         step=self.step)
+                                         step=self.step, probe=pl)
         return out
 
 

@@ -21,8 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.buckets import ParamPlan
-from repro.core.comm import (all_gather_flat, axis_size, dist_sync,
-                             dist_sync_buckets, dist_sync_runs,
+from repro.core.comm import (_fit_rows, all_gather_flat, axis_size,
+                             dist_sync, dist_sync_buckets, dist_sync_runs,
                              psum_scatter_flat)
 from repro.core.loco import SyncConfig
 
@@ -229,6 +229,126 @@ def gather_with_sync_runs(
     return _make_run_gather(plan, tuple(dp_axes), overlap,
                             piece_space)(w_chunk, tuple(run_states),
                                          _as_step(step))
+
+
+# ---------------------------------------------------------------------------
+# fidelity-probe gather variants (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+#
+# The probe step's gathers take one extra zeros primal (`probe`, fp32
+# (K, chunklen)) whose COTANGENT carries the fidelity reference stack out
+# of the backward — the same trick that carries the updated error state as
+# the state input's cotangent.  The synced shard and new states are
+# bit-identical to the non-probe gathers (comm computes them on the same
+# path; pinned by tests/test_fidelity.py), so probing never perturbs the
+# trajectory; the refs are *extra* outputs, invisible to the optimizer.
+
+def _probe_cot(refs: jax.Array, probe: jax.Array) -> jax.Array:
+    """Fit the backward's natural ref stack to the probe primal's static
+    row count (padded rows stay zero for shallower stage schedules)."""
+    return _fit_rows(refs, probe.shape[0]).astype(probe.dtype)
+
+
+@lru_cache(maxsize=None)
+def _make_gather_probe(cfg: SyncConfig, dp_axes: tuple[str, ...]):
+    _reject_stochastic_rounding(cfg)
+
+    @jax.custom_vjp
+    def gather(w_chunk: jax.Array, state: jax.Array, probe: jax.Array,
+               step: jax.Array) -> jax.Array:
+        return all_gather_flat(w_chunk, dp_axes)
+
+    def fwd(w_chunk, state, probe, step):
+        return all_gather_flat(w_chunk, dp_axes), (state, probe, step)
+
+    def bwd(res, g_full):
+        state, probe, step = res
+        g_shard, new_state, refs = dist_sync(g_full, state, cfg, dp_axes,
+                                             step=step, probe=True)
+        return (g_shard.astype(g_full.dtype), new_state.astype(state.dtype),
+                _probe_cot(refs, probe), jnp.zeros_like(step))
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def gather_with_sync_probe(w_chunk, state, probe, cfg, dp_axes, step=None):
+    """:func:`gather_with_sync` + fidelity refs as ``probe``'s cotangent."""
+    return _make_gather_probe(cfg, tuple(dp_axes))(w_chunk, state, probe,
+                                                   _as_step(step))
+
+
+@lru_cache(maxsize=None)
+def _make_bucketed_gather_probe(plan: ParamPlan, dp_axes: tuple[str, ...]):
+    for b in plan.buckets:
+        _reject_stochastic_rounding(b.sync)
+
+    @jax.custom_vjp
+    def gather(w_chunk: jax.Array, states: tuple, probe: jax.Array,
+               step: jax.Array) -> jax.Array:
+        return all_gather_flat(w_chunk, dp_axes)
+
+    def fwd(w_chunk, states, probe, step):
+        return all_gather_flat(w_chunk, dp_axes), (states, probe, step)
+
+    def bwd(res, g_full):
+        states, probe, step = res
+        g_shard, new_states, refs = dist_sync_buckets(
+            g_full, states, plan, dp_axes, coalesce=False, step=step,
+            probe=True)
+        new_states = tuple(ns.astype(s.dtype)
+                           for ns, s in zip(new_states, states))
+        return (g_shard.astype(g_full.dtype), new_states,
+                _probe_cot(refs, probe), jnp.zeros_like(step))
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def gather_with_sync_buckets_probe(w_chunk, states, probe, plan, dp_axes,
+                                   step=None):
+    """Per-bucket (non-coalesced) probe gather — the escape-hatch schedule
+    and the only one that can carry multi-tier (WAN) plans."""
+    return _make_bucketed_gather_probe(plan, tuple(dp_axes))(
+        w_chunk, tuple(states), probe, _as_step(step))
+
+
+@lru_cache(maxsize=None)
+def _make_run_gather_probe(plan: ParamPlan, dp_axes: tuple[str, ...]):
+    for b in plan.buckets:
+        _reject_stochastic_rounding(b.sync)
+
+    @jax.custom_vjp
+    def gather(w_chunk: jax.Array, run_states: tuple, probe: jax.Array,
+               step: jax.Array) -> jax.Array:
+        return all_gather_flat(w_chunk, dp_axes)
+
+    def fwd(w_chunk, run_states, probe, step):
+        return all_gather_flat(w_chunk, dp_axes), (run_states, probe, step)
+
+    def bwd(res, g_full):
+        run_states, probe, step = res
+        # the probe variant always runs the FLAT coalesced schedule —
+        # bit-exact with the pipelined one (DESIGN.md §15), and the flat
+        # schedule has the pre-regroup wires in hand for the references
+        g_shard, new_states, refs = dist_sync_runs(
+            g_full, run_states, plan, dp_axes, overlap=False,
+            piece_space=False, step=step, probe=True)
+        new_states = tuple(ns.astype(s.dtype)
+                           for ns, s in zip(new_states, run_states))
+        return (g_shard.astype(g_full.dtype), new_states,
+                _probe_cot(refs, probe), jnp.zeros_like(step))
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def gather_with_sync_runs_probe(w_chunk, run_states, probe, plan, dp_axes,
+                                step=None):
+    """:func:`gather_with_sync_runs` + fidelity refs as ``probe``'s
+    cotangent (flat coalesced schedule, run-space states)."""
+    return _make_run_gather_probe(plan, tuple(dp_axes))(
+        w_chunk, tuple(run_states), probe, _as_step(step))
 
 
 @lru_cache(maxsize=None)

@@ -122,6 +122,28 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         model_flops_dev = model_flops_global / n_dev
 
         ov_rec: dict = HS.overlap_stats(hlo).to_json()
+        fid_rec = None
+        if shape.kind == "train" and bundle.probe_fn is not None:
+            # predicted probe-step overhead (DESIGN.md §17): compile the
+            # probe variant and diff its collective schedule against the
+            # primary module — the extra wire bytes are the reference
+            # reduces, the extra launches include the probe's flat
+            # (non-overlapped) schedule when the primary is pipelined
+            probe_hlo = (bundle.probe_fn.lower(*bundle.input_shapes)
+                         .compile().as_text())
+            pst = HS.analyze(probe_hlo)
+            all_kinds = set(pst.coll_counts) | set(st.coll_counts)
+            delta = {k: round(pst.coll_counts.get(k, 0.0)
+                              - st.coll_counts.get(k, 0.0))
+                     for k in sorted(all_kinds)}
+            fid_rec = dict(
+                every=run.fidelity_every,
+                probe_wire_bytes=round(pst.wire_bytes),
+                extra_wire_bytes=round(pst.wire_bytes - st.wire_bytes),
+                probe_launches={k: round(v)
+                                for k, v in pst.coll_counts.items()},
+                extra_launches={k: v for k, v in delta.items() if v},
+            )
         wire_tiers = None
         if shape.kind == "train" and bundle.helpers.get("plan") is not None:
             # per-tier cadence + capacity-vs-effective bytes (DESIGN.md §16)
@@ -175,6 +197,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                              wire_bytes=round(st.wire_bytes)),
             overlap=ov_rec,
             wire_tiers=wire_tiers,
+            fidelity=fid_rec,
             roofline=terms,
             model_flops_per_device=model_flops_dev,
             useful_flops_ratio=(model_flops_dev / flops) if flops else None,
@@ -212,6 +235,12 @@ def _emit(rec: dict, out_dir: str | None) -> dict:
                 f"{t['effective_bytes'] / 2**20:.2f}"
                 f"/{t['capacity_bytes'] / 2**20:.2f}MiB"
                 for t in rec["wire_tiers"])
+        if rec.get("fidelity"):
+            # probe cadence + predicted probe-step overhead (DESIGN.md §17)
+            f = rec["fidelity"]
+            extra += (f" fid@e{f['every']}:"
+                      f"+{f['extra_wire_bytes'] / 2**20:.2f}MiB"
+                      f"/+{sum(f['extra_launches'].values())}launch")
     elif status == "skipped":
         extra = " " + rec["reason"]
     else:
@@ -238,6 +267,12 @@ def main():
                          "launch/train.py --policy); tier cadence and "
                          "capacity-vs-effective bytes land in the "
                          "wire_tiers record and the tiers= column")
+    ap.add_argument("--fidelity-every", type=int, default=None,
+                    help="also compile the fidelity-probe step variant for "
+                         "train shapes and report the probe cadence plus "
+                         "predicted probe-step overhead (extra wire bytes "
+                         "and collective launches vs a normal step) in the "
+                         "fid= column (DESIGN.md §17)")
     ap.add_argument("--no-overlap", dest="overlap", action="store_false",
                     help="compile the primary train module on the legacy "
                          "flat schedule (the overlap record still reports "
@@ -251,6 +286,8 @@ def main():
         overrides["bucket_bytes"] = int(args.bucket_mb * 2**20)
     if not args.overlap:
         overrides["overlap"] = False
+    if args.fidelity_every is not None:
+        overrides["fidelity_every"] = args.fidelity_every
     if args.policy:
         from repro.core import policy as POL
         # same base sync default_run builds, so presets inherit correctly

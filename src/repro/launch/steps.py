@@ -28,6 +28,7 @@ from repro.core import loco as loco_lib
 from repro.core import policy as POL
 from repro.core.flatparam import MeshTopo, ParamGroup
 from repro.core.loco import SyncConfig, maybe_reset
+from repro.telemetry import fidelity as FID
 from repro.telemetry import metrics as METRICS
 from repro.telemetry import profiler as PROF
 from repro.models import transformer as TF
@@ -90,6 +91,13 @@ class RunConfig:
     # the loss.  Zero extra collectives — the packed metrics vector rides
     # the loss reduction — and no retrace (static schema).
     telemetry: bool = False
+    # Gradient-fidelity probe cadence (telemetry/fidelity, DESIGN.md §17):
+    # every N-th step runs a separately-compiled probe variant that also
+    # reduces the exact fp32 mean gradient and emits per-unit cosine /
+    # relative-L2 / compensation-gain metrics with per-tier attribution.
+    # 0 = never.  Non-probe steps are bit- and launch-identical to
+    # fidelity_every == 0 (the probe variant is selected host-side).
+    fidelity_every: int = 0
 
     def wants_buckets(self) -> bool:
         return self.bucket_bytes > 0 or self.policy is not None
@@ -156,6 +164,15 @@ def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None",
             loco_lib.validate_cadence(c)
         except ValueError as e:
             raise ValueError(f"{where}: {e}") from None
+        if run.fidelity_every > 0 and c.strategy != "fp" and c.every > 1:
+            raise ValueError(
+                f"{where}: the fidelity probe cannot meter a tier-0 sync "
+                f"cadence (every={c.every}): off-cadence steps return the "
+                "accumulator instead of a synced gradient, so probe "
+                "references and the synced shard would describe different "
+                "steps. Drop --fidelity-every or the cadence (outer-tier "
+                "cadence is fine — references are taken after the tier "
+                "select).")
         if c.hierarchical:
             tiers = loco_lib.sync_schedule(c)
             if len(tiers) == 1:
@@ -298,6 +315,39 @@ class StepBundle:
     fn: Callable                 # jitted step function over global arrays
     input_shapes: tuple          # ShapeDtypeStructs (w/ shardings) for .lower()
     helpers: dict
+    # Separately-compiled fidelity-probe step (DESIGN.md §17): same inputs
+    # and train-state outputs as ``fn`` plus the fidelity metric keys; the
+    # host loop selects it every ``run.fidelity_every`` steps.  None when
+    # probing is off.
+    probe_fn: Callable | None = None
+
+
+def _probe_shapes(groups, sync, plan, topo, coalesce):
+    """Static probe-leaf shapes per loco param: an (L?, K, chunklen) f32
+    zeros stack per param, fed to the probe gathers as the extra primal
+    whose cotangent returns the fidelity reference rows (core/comm probe
+    contract).  K follows what the param's schedule emits: 3 base rows
+    (true / comp / nc); the monolithic multi-tier path adds one row per
+    non-final tier; non-coalesced buckets pad to the widest bucket."""
+    out = {}
+    for g in groups:
+        og = {}
+        for info in g.infos:
+            if not info.loco:
+                continue
+            if plan is None:
+                rows = FID.probe_rows(sync)
+            elif coalesce:
+                rows = 3  # packed schedule: in-plan tiers emit no mid refs
+            else:
+                pp = plan.lookup(g.name, info.name)
+                rows = max(FID.probe_rows(b.sync) for b in pp.buckets)
+            shp = (rows, info.chunklen(topo.tp, topo.dp))
+            if g.stacked:
+                shp = (g.n_layers,) + shp
+            og[info.name] = shp
+        out[g.name] = og
+    return out
 
 
 def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -> StepBundle:
@@ -322,6 +372,18 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
     # the packed vector, finalize keys and out_specs agree without tracing
     munits = (METRICS.metric_units(groups, sync, plan, topo, run.coalesce)
               if run.telemetry else ())
+    # static fidelity schema (DESIGN.md §17): same unit geometry as the
+    # health metrics, plus the per-param probe-leaf shapes
+    funits = ()
+    probe_shapes = None
+    if run.fidelity_every > 0:
+        funits = FID.fidelity_units(groups, sync, plan, topo, run.coalesce)
+        if not funits:
+            raise ValueError(
+                "fidelity_every > 0 has nothing to probe: every sync unit "
+                "is the fp baseline (exact by construction). Drop "
+                "--fidelity-every or give at least one unit a wire codec.")
+        probe_shapes = _probe_shapes(groups, sync, plan, topo, run.coalesce)
 
     def reset_states(states_l, step):
         """Per-unit error reset: every state unit follows its own
@@ -386,91 +448,152 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
             return tuple(tuple(b) for b in by)
         return _map_plan_states(states_l, fn)
 
-    def body(chunks, states, opt_state, step, batch):
-        chunks_l = squeeze_chunks(chunks, groups)
-        states_l = squeeze_states(states, groups)
-        opt_l = tuple(squeeze_chunks(t, groups) for t in opt_state)
-        if piece_carry:
-            states_l = to_piece_states(states_l)
+    def make_body(probe_mode: bool):
+        """Step body; ``probe_mode`` builds the fidelity-probe variant
+        (DESIGN.md §17).  The probe runs the flat (non-overlapped)
+        schedule — bit-exact with the pipelined one per §15 — threads a
+        zeros probe primal through the gathers, accumulates the reference
+        cotangents across microbatches exactly like the gradient (the
+        compensation gain is a telescoping quantity; single-microbatch
+        references would under-credit error feedback), and appends the
+        packed fidelity sums to the loss reduction.  Inputs and in_specs
+        are identical to the normal body: the probe buffer is created
+        in-body, so the host loop can swap variants per step."""
+        pc = piece_carry and not probe_mode
 
-        def loss_fn(c, s, mb):
-            store = FP.TrainStore(groups, c, s, sync, topo, plan=plan,
-                                  coalesce=run.coalesce, overlap=run.overlap,
-                                  piece_space=piece_carry,
-                                  step=jnp.asarray(step, jnp.float32))
-            return model.loss_fn(store, mb, remat=run.remat)
+        def body(chunks, states, opt_state, step, batch):
+            chunks_l = squeeze_chunks(chunks, groups)
+            states_l = squeeze_states(states, groups)
+            opt_l = tuple(squeeze_chunks(t, groups) for t in opt_state)
+            if pc:
+                states_l = to_piece_states(states_l)
+            probe0 = None
+            if probe_mode:
+                probe0 = {gn: {n: jnp.zeros(s, jnp.float32)
+                               for n, s in og.items()}
+                          for gn, og in probe_shapes.items()}
 
-        def micro_body(carry, mb):
-            s, gacc = carry
-            (loss, metrics), (g, new_s) = jax.value_and_grad(
-                loss_fn, argnums=(0, 1), has_aux=True)(chunks_l, s, mb)
-            gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
-            s = new_s if needs_state else s
-            return (s, gacc), loss
+            def loss_fn(c, s, pr, mb):
+                store = FP.TrainStore(groups, c, s, sync, topo, plan=plan,
+                                      coalesce=run.coalesce,
+                                      overlap=run.overlap and not probe_mode,
+                                      piece_space=pc,
+                                      step=jnp.asarray(step, jnp.float32),
+                                      probe=pr)
+                return model.loss_fn(store, mb, remat=run.remat)
 
-        gacc0 = jax.tree.map(lambda c: jnp.zeros(c.shape, jnp.float32), chunks_l)
-        mbs = jax.tree.map(lambda x: x.reshape(accum, micro, *x.shape[1:]), batch)
-        if run.unroll_accum:
-            carry, losses_l = (states_l, gacc0), []
-            for i in range(accum):
-                mb = jax.tree.map(lambda x: x[i], mbs)
-                carry, loss_i = micro_body(carry, mb)
-                losses_l.append(loss_i)
-            (states_l, gacc), losses = carry, jnp.stack(losses_l)
-        else:
-            (states_l, gacc), losses = jax.lax.scan(micro_body, (states_l, gacc0), mbs)
-        metric_states = states_l
-        if piece_carry:
-            # metrics read the scan's raw piece leaves (grouped per run) so
-            # each is a single-reader reduction; the stitched run-space
-            # buffer would be refused into every unit's metric fusion and
-            # recomputed U times (see telemetry.metrics._state_metric_sums)
-            metric_states = pieces_by_run(states_l)
-            states_l = from_piece_states(states_l)
-        grads = jax.tree.map(lambda g: g / accum, gacc)
+            def micro_body(carry, mb):
+                if probe_mode:
+                    s, gacc, pacc = carry
+                    (loss, _aux), (g, new_s, gp) = jax.value_and_grad(
+                        loss_fn, argnums=(0, 1, 2), has_aux=True)(
+                            chunks_l, s, probe0, mb)
+                    pacc = jax.tree.map(lambda a, b: a + b, pacc, gp)
+                else:
+                    s, gacc = carry
+                    (loss, _aux), (g, new_s) = jax.value_and_grad(
+                        loss_fn, argnums=(0, 1), has_aux=True)(
+                            chunks_l, s, probe0, mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gacc, g)
+                s = new_s if needs_state else s
+                out = (s, gacc, pacc) if probe_mode else (s, gacc)
+                return out, loss
 
-        # ---- global grad-norm clip (TP replication-aware) -------------------
-        local_sq = jnp.float32(0)
-        for g in groups:
-            for info in g.infos:
-                s2 = jnp.sum(grads[g.name][info.name] ** 2)
-                if info.tp_dim is None and topo.tp > 1:
-                    s2 = s2 / topo.tp
-                local_sq = local_sq + s2
-        gnorm = jnp.sqrt(jax.lax.psum(local_sq, topo.dp_axes + (topo.tp_axis,)))
-        grads_sync = grads  # pre-clip synchronized grads (metrics probe)
-        if run.clip_norm:
-            cs = jnp.minimum(1.0, run.clip_norm / jnp.maximum(gnorm, 1e-12))
-            grads = jax.tree.map(lambda g: g * cs, grads)
+            gacc0 = jax.tree.map(lambda c: jnp.zeros(c.shape, jnp.float32),
+                                 chunks_l)
+            carry0 = ((states_l, gacc0, jax.tree.map(jnp.zeros_like, probe0))
+                      if probe_mode else (states_l, gacc0))
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum, micro, *x.shape[1:]), batch)
+            if run.unroll_accum:
+                carry, losses_l = carry0, []
+                for i in range(accum):
+                    mb = jax.tree.map(lambda x: x[i], mbs)
+                    carry, loss_i = micro_body(carry, mb)
+                    losses_l.append(loss_i)
+                losses = jnp.stack(losses_l)
+            else:
+                carry, losses = jax.lax.scan(micro_body, carry0, mbs)
+            refs_l = None
+            if probe_mode:
+                states_l, gacc, pacc = carry
+                # references average over microbatches like the gradient:
+                # the fidelity of the STEP's synchronized mean vs its true
+                # mean, the quantity the optimizer actually consumes
+                refs_l = jax.tree.map(lambda p: p / accum, pacc)
+            else:
+                states_l, gacc = carry
+            metric_states = states_l
+            if pc:
+                # metrics read the scan's raw piece leaves (grouped per run)
+                # so each is a single-reader reduction; the stitched
+                # run-space buffer would be refused into every unit's metric
+                # fusion and recomputed U times (see
+                # telemetry.metrics._state_metric_sums)
+                metric_states = pieces_by_run(states_l)
+                states_l = from_piece_states(states_l)
+            grads = jax.tree.map(lambda g: g / accum, gacc)
 
-        lr = sched(step)
-        with PROF.phase("apply"):
-            new_chunks_l, new_opt_l = opt.update(grads, opt_l, chunks_l,
-                                                 step, lr, mask)
-        new_states_l = reset_states(states_l, step + 1)
+            # ---- global grad-norm clip (TP replication-aware) ---------------
+            local_sq = jnp.float32(0)
+            for g in groups:
+                for info in g.infos:
+                    s2 = jnp.sum(grads[g.name][info.name] ** 2)
+                    if info.tp_dim is None and topo.tp > 1:
+                        s2 = s2 / topo.tp
+                    local_sq = local_sq + s2
+            gnorm = jnp.sqrt(jax.lax.psum(local_sq,
+                                          topo.dp_axes + (topo.tp_axis,)))
+            grads_sync = grads  # pre-clip synchronized grads (metrics probe)
+            if run.clip_norm:
+                cs = jnp.minimum(1.0, run.clip_norm / jnp.maximum(gnorm, 1e-12))
+                grads = jax.tree.map(lambda g: g * cs, grads)
 
-        loss_local = jnp.mean(losses)
-        metrics = {"gnorm": gnorm, "lr": lr}
-        if run.telemetry:
-            # The packed metrics vector rides the loss reduction: the loss
-            # is TP-replicated, so psum over dp+tp divided by dp*tp equals
-            # the metrics-off pmean over dp — same all-reduce count either
-            # way (the zero-extra-collectives contract, DESIGN.md §14).
-            with PROF.phase("metrics"):
-                mvec = METRICS.local_vector(munits, grads_sync, metric_states,
-                                            chunks_l, new_chunks_l, groups,
-                                            topo.tp)
-                packed = jax.lax.psum(
-                    jnp.concatenate([loss_local[None], mvec]),
-                    topo.dp_axes + (topo.tp_axis,))
+            lr = sched(step)
+            with PROF.phase("apply"):
+                new_chunks_l, new_opt_l = opt.update(grads, opt_l, chunks_l,
+                                                     step, lr, mask)
+            new_states_l = reset_states(states_l, step + 1)
+
+            loss_local = jnp.mean(losses)
+            metrics = {"gnorm": gnorm, "lr": lr}
+            # The packed metrics/fidelity vector rides the loss reduction:
+            # the loss is TP-replicated, so psum over dp+tp divided by
+            # dp*tp equals the metrics-off pmean over dp — same all-reduce
+            # count either way (the zero-extra-collectives contract,
+            # DESIGN.md §14; the probe's only extra collectives are the
+            # reference reduces inside the backward, §17).
+            parts = [loss_local[None]]
+            if run.telemetry:
+                with PROF.phase("metrics"):
+                    parts.append(METRICS.local_vector(
+                        munits, grads_sync, metric_states, chunks_l,
+                        new_chunks_l, groups, topo.tp))
+            if probe_mode:
+                with PROF.phase("probe"):
+                    parts.append(FID.local_vector(funits, grads_sync,
+                                                  refs_l, topo.tp))
+            if len(parts) > 1:
+                packed = jax.lax.psum(jnp.concatenate(parts),
+                                      topo.dp_axes + (topo.tp_axis,))
                 metrics["loss"] = packed[0] / (topo.dp * topo.tp)
-                metrics.update(METRICS.finalize(packed[1:], munits))
-        else:
-            metrics["loss"] = jax.lax.pmean(loss_local, topo.dp_axes)
-        new_chunks = unsqueeze_like(new_chunks_l, chunks)
-        new_states = unsqueeze_like(new_states_l, states)
-        new_opt = tuple(unsqueeze_like(t, chunks) for t in new_opt_l)
-        return new_chunks, new_states, new_opt, metrics
+                off = 1
+                if run.telemetry:
+                    nm = len(munits) * METRICS.NF + 2
+                    metrics.update(METRICS.finalize(packed[off:off + nm],
+                                                    munits))
+                    off += nm
+                if probe_mode:
+                    metrics.update(FID.finalize(packed[off:], funits))
+            else:
+                metrics["loss"] = jax.lax.pmean(loss_local, topo.dp_axes)
+            new_chunks = unsqueeze_like(new_chunks_l, chunks)
+            new_states = unsqueeze_like(new_states_l, states)
+            new_opt = tuple(unsqueeze_like(t, chunks) for t in new_opt_l)
+            return new_chunks, new_states, new_opt, metrics
+
+        return body
 
     cspec, sspec = FP.train_state_specs(groups, topo, plan=plan,
                                         coalesce=run.coalesce)
@@ -481,13 +604,26 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
         batch_spec = {"frames": P(dp, None, None), "tokens": P(dp, None)}
     else:
         batch_spec = {"tokens": P(dp, None)}
-    metric_specs = {"loss": P(), "gnorm": P(), "lr": P()}
-    for k in METRICS.metric_keys(munits) if run.telemetry else ():
-        metric_specs[k] = P()
+    def make_metric_specs(probe_mode: bool):
+        ms = {"loss": P(), "gnorm": P(), "lr": P()}
+        for k in METRICS.metric_keys(munits) if run.telemetry else ():
+            ms[k] = P()
+        if probe_mode:
+            for k in FID.fidelity_keys(funits):
+                ms[k] = P()
+        return ms
+
     in_specs = (cspec, sspec, opt_spec, P(), batch_spec)
-    out_specs = (cspec, sspec, opt_spec, metric_specs)
-    sm = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                       check_vma=False)
+    out_specs = (cspec, sspec, opt_spec, make_metric_specs(False))
+    sm = jax.shard_map(make_body(False), mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    probe_fn = None
+    if run.fidelity_every > 0:
+        probe_sm = jax.shard_map(
+            make_body(True), mesh=mesh, in_specs=in_specs,
+            out_specs=(cspec, sspec, opt_spec, make_metric_specs(True)),
+            check_vma=False)
+        probe_fn = jax.jit(probe_sm, donate_argnums=(0, 1, 2))
 
     cshapes, sshapes = FP.train_state_shapes(groups, sync, topo, plan=plan,
                                              coalesce=run.coalesce)
@@ -506,7 +642,9 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
                      cspec=cspec, sspec=sspec, opt_spec=opt_spec,
                      batch_spec=batch_spec, local_batch=local_batch,
                      micro=micro, accum=accum, plan=plan, munits=munits,
+                     funits=funits,
                      groups_inflight=groups_inflight(run, plan, topo)),
+        probe_fn=probe_fn,
     )
 
 

@@ -103,6 +103,15 @@ def build_args(argv=None):
     ap.add_argument("--metrics-every", type=int, default=0,
                     help="step record cadence for --metrics-jsonl "
                          "(0 = follow --log-every)")
+    ap.add_argument("--fidelity-every", type=int, default=0,
+                    help="gradient-fidelity probe cadence (DESIGN.md §17): "
+                         "every N-th step runs the separately-compiled "
+                         "probe variant that also reduces the exact fp32 "
+                         "mean gradient and emits per-unit cosine / "
+                         "relative-L2 / compensation-gain metrics with "
+                         "per-tier attribution (0 = never; non-probe "
+                         "steps are bit- and launch-identical to "
+                         "--fidelity-every 0)")
     ap.add_argument("--profile-steps", default=None, metavar="N[:M]",
                     help="capture a jax.profiler trace for the inclusive "
                          "step window N:M (phase annotation via "
@@ -148,7 +157,8 @@ def make_run(args) -> RunConfig:
                      bucket_bytes=int(args.bucket_mb * (1 << 20)),
                      policy=policy, coalesce=args.coalesce,
                      overlap=args.overlap,
-                     telemetry=args.telemetry or bool(args.metrics_jsonl))
+                     telemetry=args.telemetry or bool(args.metrics_jsonl),
+                     fidelity_every=args.fidelity_every)
 
 
 _LHS_FLAGS = {
@@ -244,6 +254,8 @@ def main(argv=None):
     peak_err = 0.0
     step_s: list[float] = []
     compile_s = None
+    probe_compiled = False
+    fid_every = run.fidelity_every
     t_run = t0 = time.time()
     m = None
     for step in range(start, args.steps):
@@ -251,7 +263,13 @@ def main(argv=None):
             trace.maybe_start(step)
         t_step = time.time()
         batch = batch_fn(jnp.int32(step))
-        chunks, states, opt, m = bundle.fn(chunks, states, opt, jnp.int32(step), batch)
+        # fidelity-probe dispatch (DESIGN.md §17): a host-side select of
+        # the separately-compiled probe variant — the normal step stays
+        # bit- and launch-identical to a probe-free run
+        probe_step = (fid_every > 0
+                      and step % fid_every == fid_every - 1)
+        step_fn = bundle.probe_fn if probe_step else bundle.fn
+        chunks, states, opt, m = step_fn(chunks, states, opt, jnp.int32(step), batch)
         log_step = step % args.log_every == 0 or step == args.steps - 1
         sink_step = sink is not None and (
             step % metrics_every == 0 or step == args.steps - 1)
@@ -263,13 +281,19 @@ def main(argv=None):
                 compile_s = dt
                 t_run = time.time()
                 print(f"compiled + step {step} in {compile_s:.1f}s", flush=True)
+            elif probe_step and not probe_compiled:
+                probe_compiled = True  # first probe pays its own compile
             else:
                 step_s.append(dt)
         if trace is not None:
             trace.maybe_stop(step)
-        if log_step or sink_step:
+        if log_step or sink_step or (probe_step and sink is not None):
             loss, gnorm, lr, extra_m = scalars(m)
+            fid_m = {k: extra_m.pop(k) for k in list(extra_m)
+                     if k.startswith("fidelity/") or "/fid_" in k}
             peak_err = max(peak_err, extra_m.get("err_norm", 0.0))
+            if sink is not None and probe_step and fid_m:
+                sink.fidelity(step, metrics=fid_m)
             if sink_step:
                 sink.step(step, loss=loss, gnorm=gnorm, lr=lr,
                           step_ms=step_s[-1] * 1e3 if step_s else None,
@@ -283,6 +307,9 @@ def main(argv=None):
                          / max(time.time() - t_run, 1e-9))
                 extra = (f" err_norm={extra_m['err_norm']:.3e}"
                          if "err_norm" in extra_m else "")
+                if fid_m:
+                    extra += (f" fid_cos={fid_m['fidelity/cos']:.4f}"
+                              f" comp_gain={fid_m['fidelity/comp_gain']:.3f}")
                 print(f"step {step:5d} loss={loss:.4f} "
                       f"gnorm={gnorm:.3f} lr={lr:.2e} "
                       f"tok/s={tok_s:,.0f}{extra}", flush=True)

@@ -1,0 +1,205 @@
+"""Gradient-fidelity probe schema: sampled true-mean shadow sync (DESIGN.md §17).
+
+On a probe step (``RunConfig.fidelity_every``) the backward pass carries a
+reference stack out of the custom_vjp hijack alongside each synchronized
+gradient chunk — rows of one extra packed psum-scatter over the same dp
+axes (core/comm ``_probe_reduce``):
+
+* row 0 ``true``  — exact fp32 mean of the raw per-node gradient,
+* row 1 ``comp``  — mean of the *live* roundtrip ``decode(encode(g + e))``
+  (decoded from the wire the sync actually sent; no extra encode),
+* row 2 ``nc``    — mean of the counterfactual uncompensated roundtrip
+  ``decode(encode(g))`` from a fresh zero error state,
+* rows 3+ — intermediate tier references for multi-tier schedules: the
+  exact mean of the tier-t *input* over the remaining (outer) dp axes.
+
+Reference vectors are accumulated across the step's microbatches exactly
+like the gradient itself: compensation is a *telescoping* correction, so
+its gain over the uncompensated encode only materializes once several
+consecutive syncs are summed (single-microbatch comp deviation is
+typically WORSE than nc — the error state injects last-round innovation).
+With grad accumulation >= ~4 the telescoped comp error collapses to the
+boundary terms while nc errors add up, and the measured gain exceeds 1 —
+the paper's Fig. 1 quantity at runtime.
+
+From the accumulated vectors each unit contributes plain f32 sums (the
+fields below), packed into one flat vector that rides the probe step's
+loss/metrics psum over dp x tp — no extra collectives beyond the probe
+reduce itself.  Finalized keys per unit::
+
+    {unit}/fid_cos         cos(sync, true)
+    {unit}/fid_rel_l2      |sync - true| / |true|
+    {unit}/fid_comp_gain   |nc - true| / |comp - true|   (> 1 == EF helps)
+    {unit}/fid_stage{s}_rel  |R_s - R_{s-1}| / |true|    (multi-tier only)
+
+plus the norm-weighted globals ``fidelity/cos``, ``fidelity/rel_l2``,
+``fidelity/comp_gain``.  The stage chain R_0=true, R_1=comp, R_2..=tier
+refs, R_S=sync telescopes exactly: stage deviations are the per-stage
+information loss and their vector sum IS the end-to-end deviation (pinned
+in tests/test_fidelity.py).
+
+The unit schema is shared with telemetry/metrics: one row per non-fp
+state unit (:func:`fidelity_units` delegates to ``metrics.metric_units``),
+so the packed layout, finalized key set and shard_map out_specs agree
+without tracing.  ``fp`` units are exact by construction and carry no
+probe rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import loco as loco_lib
+from repro.core.loco import SyncConfig
+from repro.telemetry.metrics import MetricUnit, metric_units
+
+# Per-unit base slots (before the S per-stage deviation slots).  All plain
+# sums over the dp x tp grid, TP-replicated rows pre-scaled by 1/tp.
+FID_FIELDS = (
+    "true_sq",       # |true|^2
+    "sync_sq",       # |sync|^2
+    "dot",           # <sync, true>
+    "dev_sq",        # |sync - true|^2
+    "comp_dev_sq",   # |comp - true|^2   (live compensated roundtrip)
+    "nc_dev_sq",     # |nc - true|^2     (counterfactual, zero error state)
+)
+NBASE = len(FID_FIELDS)
+_TINY = 1e-20
+
+FidelityUnit = MetricUnit  # same geometry: one row per non-fp state unit
+
+
+def fidelity_units(groups, sync, plan, topo, coalesce: bool = True):
+    """Probe schema rows == the metrics schema rows (non-fp state units)."""
+    return metric_units(groups, sync, plan, topo, coalesce)
+
+
+def n_stages(cfg: SyncConfig) -> int:
+    """Sync stages of one unit: 1 (flat) + one per outer tier."""
+    if cfg.strategy == "fp":
+        return 1
+    return 1 + len(loco_lib.sync_schedule(cfg))
+
+
+def probe_rows(cfg: SyncConfig) -> int:
+    """Rows of the probe reference stack one unit's sync emits.
+
+    Always the 3 base rows (true / comp / nc); multi-tier schedules add
+    one intermediate reference per non-final tier (``hierarchical_sync``).
+    The 2-stage coalesced path emits exactly 3 (its only tier is final).
+    """
+    return 3 + max(0, n_stages(cfg) - 2)
+
+
+def unit_fields(u: MetricUnit) -> int:
+    """Packed f32 slots for one unit: base fields + S stage deviations."""
+    return NBASE + n_stages(u.sync)
+
+
+def vector_len(units) -> int:
+    return sum(unit_fields(u) for u in units)
+
+
+def _unit_local(u: MetricUnit, grads, probes, tp: int) -> jax.Array:
+    """(unit_fields,) f32 sums for one unit on this device (before psum).
+
+    ``grads`` is the synchronized (accumulated) gradient chunk tree,
+    ``probes`` the matching accumulated probe-reference tree whose leaves
+    are ``(..., K, chunk)`` stacks (K >= probe_rows(u.sync); padding rows
+    are zero and never indexed).  Leading dims (scan-stacked layers) sum
+    into the fields like any other element axis.
+    """
+    sl = slice(u.offset, u.offset + u.chunk_elems)
+    sync = grads[u.group][u.name][..., sl].astype(jnp.float32)
+    p = probes[u.group][u.name][..., :, sl].astype(jnp.float32)
+    true, comp, nc = p[..., 0, :], p[..., 1, :], p[..., 2, :]
+
+    def ssum(x):
+        return jnp.sum(x)
+
+    fields = [ssum(true * true), ssum(sync * sync), ssum(sync * true),
+              ssum((sync - true) ** 2), ssum((comp - true) ** 2),
+              ssum((nc - true) ** 2)]
+    S = n_stages(u.sync)
+    # telescoping reference chain: R_0=true, R_1=comp, mid tiers, R_S=sync
+    chain = [true, sync] if S == 1 else (
+        [true, comp] + [p[..., 3 + i, :] for i in range(S - 2)] + [sync])
+    for a, b in zip(chain[:-1], chain[1:]):
+        fields.append(ssum((b - a) ** 2))
+    vec = jnp.stack(fields)
+    if u.tp_replicated:
+        vec = vec / tp  # identical on every TP rank (grad-norm convention)
+    return vec
+
+
+def local_vector(units, grads, probes, tp: int) -> jax.Array:
+    """The packed local fidelity vector: ``vector_len(units)`` f32 sums."""
+    rows = [_unit_local(u, grads, probes, tp) for u in units]
+    return jnp.concatenate(rows) if rows else jnp.zeros((0,), jnp.float32)
+
+
+def _unit_keys(u: MetricUnit) -> tuple[str, ...]:
+    ks = (f"{u.key}/fid_cos", f"{u.key}/fid_rel_l2", f"{u.key}/fid_comp_gain")
+    S = n_stages(u.sync)
+    if S >= 2:
+        ks += tuple(f"{u.key}/fid_stage{s}_rel" for s in range(1, S + 1))
+    return ks
+
+
+GLOBAL_KEYS = ("fidelity/cos", "fidelity/rel_l2", "fidelity/comp_gain")
+
+
+def fidelity_keys(units) -> tuple[str, ...]:
+    """Every key :func:`finalize` emits, in order (drives the out_specs)."""
+    out: list[str] = []
+    for u in units:
+        out.extend(_unit_keys(u))
+    out.extend(GLOBAL_KEYS)
+    return tuple(out)
+
+
+def finalize(red: jax.Array, units) -> dict:
+    """Globally-reduced packed vector -> flat {key: scalar} fidelity tree."""
+    out: dict[str, jax.Array] = {}
+    tot = {f: jnp.float32(0) for f in FID_FIELDS}
+    off = 0
+    for u in units:
+        nf = unit_fields(u)
+        v = dict(zip(FID_FIELDS, red[off:off + NBASE]))
+        stage = red[off + NBASE:off + nf]
+        off += nf
+        t = jnp.maximum(v["true_sq"], _TINY)
+        out[f"{u.key}/fid_cos"] = v["dot"] / jnp.sqrt(
+            t * jnp.maximum(v["sync_sq"], _TINY))
+        out[f"{u.key}/fid_rel_l2"] = jnp.sqrt(v["dev_sq"] / t)
+        out[f"{u.key}/fid_comp_gain"] = jnp.sqrt(
+            v["nc_dev_sq"] / jnp.maximum(v["comp_dev_sq"], _TINY))
+        S = n_stages(u.sync)
+        if S >= 2:
+            for s in range(S):
+                out[f"{u.key}/fid_stage{s + 1}_rel"] = jnp.sqrt(stage[s] / t)
+        for f in FID_FIELDS:
+            tot[f] = tot[f] + v[f]
+    t = jnp.maximum(tot["true_sq"], _TINY)
+    out["fidelity/cos"] = tot["dot"] / jnp.sqrt(
+        t * jnp.maximum(tot["sync_sq"], _TINY))
+    out["fidelity/rel_l2"] = jnp.sqrt(tot["dev_sq"] / t)
+    out["fidelity/comp_gain"] = jnp.sqrt(
+        tot["nc_dev_sq"] / jnp.maximum(tot["comp_dev_sq"], _TINY))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# vector-level oracle (tests, benchmarks) — plain math on whole vectors
+# ---------------------------------------------------------------------------
+
+def fidelity_stats(sync, true) -> dict:
+    """Oracle cos / rel_l2 of one synced-vs-true vector pair (numpy/jnp)."""
+    s = jnp.asarray(sync, jnp.float32).reshape(-1)
+    t = jnp.asarray(true, jnp.float32).reshape(-1)
+    ts = jnp.maximum(jnp.sum(t * t), _TINY)
+    return {
+        "cos": jnp.sum(s * t) / jnp.sqrt(ts * jnp.maximum(
+            jnp.sum(s * s), _TINY)),
+        "rel_l2": jnp.sqrt(jnp.sum((s - t) ** 2) / ts),
+    }

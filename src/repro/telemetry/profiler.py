@@ -20,7 +20,7 @@ import warnings
 
 import jax
 
-PHASES = ("encode", "exchange", "decode", "apply", "metrics")
+PHASES = ("encode", "exchange", "decode", "apply", "metrics", "probe")
 
 
 def phase(name: str, group: int | None = None):

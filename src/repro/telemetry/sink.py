@@ -17,6 +17,13 @@ Kinds
   percentiles, tokens/sec, wire MiB/step, peak error norm, warning count.
 * ``wire_report`` -- WireReport.to_json's envelope (static accounting).
 * ``bench``   -- benchmarks/common.write_bench_json's envelope.
+* ``fidelity`` (schema v2) -- per probe step (DESIGN.md §17): step plus
+  the flat fidelity metrics tree (cos / rel_l2 / comp_gain per unit and
+  global, per-stage attribution) from telemetry/fidelity.
+
+Schema v2 adds the ``fidelity`` kind; v1 records of the original kinds
+still validate (back-compat read path), so pre-fidelity streams keep
+passing the CLI.
 
 The validator is hand-rolled (no jsonschema dependency) and doubles as a
 CLI for CI::
@@ -34,8 +41,11 @@ import math
 import sys
 import time
 
-SCHEMA_VERSION = 1
-KINDS = ("header", "step", "warning", "summary", "wire_report", "bench")
+SCHEMA_VERSION = 2
+KINDS = ("header", "step", "warning", "summary", "wire_report", "bench",
+         "fidelity")
+# kinds that existed under schema v1: v1 records of these still validate
+_V1_KINDS = ("header", "step", "warning", "summary", "wire_report", "bench")
 
 
 def envelope(kind: str, **fields) -> dict:
@@ -59,11 +69,21 @@ class HealthConfig:
     ``sat_rate_max`` flags a quantizer pinned at its bounds (block-mode
     absmax scaling puts >= 1/block of values at the bound by construction,
     so a healthy rate is a few percent).  Non-finite values always warn.
+
+    The fidelity monitors (DESIGN.md §17) are *sustained-window* checks
+    over consecutive ``fidelity`` records: a single noisy probe is
+    expected, ``fid_window`` probes in a row below ``fid_cos_min`` (the
+    synced gradient no longer points where the true mean does) or under
+    ``fid_gain_min`` compensation gain (error feedback making fidelity
+    WORSE than the uncompensated encode) are not.
     """
 
     err_norm_max: float = 1e4
     err_growth_max: float = 50.0
     sat_rate_max: float = 0.5
+    fid_cos_min: float = 0.8
+    fid_gain_min: float = 1.0
+    fid_window: int = 3
 
 
 class HealthMonitor:
@@ -72,6 +92,8 @@ class HealthMonitor:
     def __init__(self, cfg: HealthConfig | None = None):
         self.cfg = cfg or HealthConfig()
         self._err_min: float | None = None
+        self._fid_low = 0     # consecutive probes with cos < fid_cos_min
+        self._fid_nogain = 0  # consecutive probes with gain < fid_gain_min
 
     def check(self, rec: dict) -> list[dict]:
         cfg, out = self.cfg, []
@@ -106,6 +128,27 @@ class HealthMonitor:
                 f"quantizer saturation rate {sr:.2%} exceeds "
                 f"{cfg.sat_rate_max:.0%} (scale pinned at the clip bound)",
                 sr))
+        fc = m.get("fidelity/cos")
+        if isinstance(fc, (int, float)) and math.isfinite(fc):
+            self._fid_low = self._fid_low + 1 if fc < cfg.fid_cos_min else 0
+            if self._fid_low >= cfg.fid_window:
+                out.append(self._warn(
+                    "fidelity_collapse",
+                    f"synced-gradient cosine {fc:.4f} below "
+                    f"{cfg.fid_cos_min} for {self._fid_low} consecutive "
+                    "probes (compression loss dominating the gradient)",
+                    fc))
+        fg = m.get("fidelity/comp_gain")
+        if isinstance(fg, (int, float)) and math.isfinite(fg):
+            self._fid_nogain = (self._fid_nogain + 1
+                                if fg < cfg.fid_gain_min else 0)
+            if self._fid_nogain >= cfg.fid_window:
+                out.append(self._warn(
+                    "negative_comp_gain",
+                    f"compensation gain {fg:.3f} < {cfg.fid_gain_min} for "
+                    f"{self._fid_nogain} consecutive probes (error "
+                    "feedback making fidelity worse than the "
+                    "uncompensated encode)", fg))
         return out
 
     @staticmethod
@@ -159,6 +202,14 @@ class MetricsSink:
             self.n_warnings += 1
             self.write(w)
 
+    def fidelity(self, step: int, *, metrics: dict) -> None:
+        """One probe-step fidelity record (DESIGN.md §17) + health checks."""
+        rec = envelope("fidelity", step=step, metrics=metrics)
+        self.write(rec)
+        for w in self.monitor.check(rec):
+            self.n_warnings += 1
+            self.write(w)
+
     def summary(self, **fields) -> None:
         self.write(envelope("summary", warnings=self.n_warnings, **fields))
 
@@ -188,6 +239,7 @@ _REQUIRED: dict[str, dict[str, type | tuple]] = {
     "summary": {"steps": int, "warnings": int},
     "wire_report": {"total_wire_bytes": int},
     "bench": {"bench": str, "results": dict},
+    "fidelity": {"step": int, "metrics": dict},
 }
 
 
@@ -196,10 +248,13 @@ def validate_record(rec) -> list[str]:
     if not isinstance(rec, dict):
         return ["record is not a JSON object"]
     errs = []
-    if rec.get("schema_version") != SCHEMA_VERSION:
-        errs.append(f"schema_version={rec.get('schema_version')!r} "
-                    f"(expected {SCHEMA_VERSION})")
     kind = rec.get("kind")
+    sv = rec.get("schema_version")
+    # back-compat read path: v1 streams predate the fidelity kind and
+    # remain valid for the kinds that existed then
+    if sv != SCHEMA_VERSION and not (sv == 1 and kind in _V1_KINDS):
+        errs.append(f"schema_version={sv!r} "
+                    f"(expected {SCHEMA_VERSION}, or 1 for v1-era kinds)")
     if kind not in KINDS:
         return errs + [f"unknown kind {kind!r}"]
     if not isinstance(rec.get("t"), (int, float)):
@@ -208,12 +263,12 @@ def validate_record(rec) -> list[str]:
         v = rec.get(field)
         if v is None or (not isinstance(v, ty)) or isinstance(v, bool):
             errs.append(f"{kind}.{field}: expected {ty}, got {type(v).__name__}")
-    if kind == "step":
+    if kind in ("step", "fidelity"):
         m = rec.get("metrics")
         if isinstance(m, dict):
             for k, v in m.items():
                 if not isinstance(v, (int, float)) or isinstance(v, bool):
-                    errs.append(f"step.metrics[{k!r}] is not a number")
+                    errs.append(f"{kind}.metrics[{k!r}] is not a number")
     return errs
 
 

@@ -1,0 +1,301 @@
+"""Gradient-fidelity probes (DESIGN.md §17): numpy oracles for the packed
+schema, the probe-transparency contract (non-probe steps launch-identical
+and the trajectory bit-exact), per-tier attribution on the hierarchical
+exchange, build-time rejections, and the sink's ``fidelity`` kind with
+its sustained-window health monitors and v1 back-compat."""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, get_arch, reduced
+from repro.core.loco import SyncConfig, SyncTier
+from repro.core.quantizer import QuantConfig
+from repro.data.synthetic import DataConfig, make_batch_fn
+from repro.launch.steps import RunConfig, make_init, make_train_step
+from repro.telemetry import fidelity as FID
+from repro.telemetry import sink as SINK
+
+CFG = reduced(get_arch("llama2-400m"))
+SHAPE = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+
+LOCO = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+
+
+def _bundle(mesh, **over):
+    over.setdefault("bucket_bytes", 64 << 10)
+    over.setdefault("sync", LOCO)
+    run = RunConfig(optimizer="adam", microbatch=1, **over)
+    return run, make_train_step(CFG, run, mesh, SHAPE)
+
+
+def _run_steps(mesh, run, bundle, steps, fid_every):
+    """Run real steps, dispatching the probe variant host-side like
+    launch/train.py; returns the final state trees + probe metric dicts."""
+    init_fn, _ = make_init(CFG, run, mesh)
+    chunks, states, opt = init_fn(jax.random.PRNGKey(0))
+    bf = make_batch_fn(DataConfig(vocab=CFG.vocab, seq_len=SHAPE.seq_len,
+                                  global_batch=SHAPE.global_batch, seed=0))
+    probes = []
+    for i in range(steps):
+        probe = fid_every > 0 and i % fid_every == fid_every - 1
+        fn = bundle.probe_fn if probe else bundle.fn
+        chunks, states, opt, m = fn(chunks, states, opt, jnp.int32(i),
+                                    bf(jnp.int32(i)))
+        if probe:
+            probes.append({k: float(v) for k, v in m.items()})
+    return chunks, states, opt, probes
+
+
+# ---------------------------------------------------------------------------
+# packed schema vs numpy: cos / rel_l2 / comp_gain / stage attribution
+# ---------------------------------------------------------------------------
+
+def _unit(sync, chunk=256):
+    return FID.FidelityUnit(key="g/p", group="g", name="p", unit=0, offset=0,
+                            chunk_elems=chunk, sync=sync, tp_replicated=False,
+                            stateful=sync.needs_state())
+
+
+TIERS = SyncConfig(
+    strategy="loco", quant=QuantConfig(mode="block"), hierarchical=True,
+    tiers=(SyncTier(SyncConfig(strategy="naive4"), every=1),
+           SyncTier(SyncConfig(strategy="topk", topk_frac=0.25), every=1)))
+
+
+@pytest.mark.parametrize("sync,S", [
+    (LOCO, 1),
+    (SyncConfig(strategy="loco", quant=QuantConfig(mode="block"),
+                hierarchical=True), 2),
+    (TIERS, 3),
+])
+def test_unit_oracle_and_stage_telescoping(sync, S):
+    """local_vector + finalize against plain numpy on one synthetic unit.
+
+    The probe stack's telescoping contract is pinned at the vector level:
+    the chain R_0=true, R_1=comp, mid-tier refs, R_S=sync has stage
+    deviations whose vector sum IS the end-to-end deviation, and the
+    packed per-stage fields are exactly their squared norms."""
+    assert FID.n_stages(sync) == S
+    assert FID.probe_rows(sync) == 3 + max(0, S - 2)
+    u = _unit(sync)
+    rng = np.random.default_rng(7)
+    C = u.chunk_elems
+    p = rng.normal(size=(FID.probe_rows(sync), C)).astype(np.float32)
+    g = (p[0] + 0.1 * rng.normal(size=C)).astype(np.float32)  # sync ~ true
+    red = FID.local_vector((u,), {"g": {"p": jnp.asarray(g)}},
+                           {"g": {"p": jnp.asarray(p)}}, tp=1)
+    assert red.shape == (FID.vector_len((u,)),) == (FID.NBASE + S,)
+    out = {k: float(v) for k, v in FID.finalize(red, (u,)).items()}
+    assert tuple(out) == FID.fidelity_keys((u,))
+
+    true, comp, nc = p[0], p[1], p[2]
+    oracle = {k: float(v) for k, v in FID.fidelity_stats(g, true).items()}
+    np.testing.assert_allclose(out["g/p/fid_cos"], oracle["cos"], rtol=1e-5)
+    np.testing.assert_allclose(out["g/p/fid_rel_l2"], oracle["rel_l2"],
+                               rtol=1e-5)
+    tsq = float(np.sum(true * true))
+    gain = math.sqrt(np.sum((nc - true) ** 2) / np.sum((comp - true) ** 2))
+    np.testing.assert_allclose(out["g/p/fid_comp_gain"], gain, rtol=1e-5)
+    # globals == the single unit's numbers
+    np.testing.assert_allclose(out["fidelity/cos"], out["g/p/fid_cos"],
+                               rtol=1e-6)
+
+    if S == 1:
+        assert not any("fid_stage" in k for k in out)
+        return
+    chain = [true, comp] + [p[3 + i] for i in range(S - 2)] + [g]
+    devs = [b - a for a, b in zip(chain[:-1], chain[1:])]
+    for s, d in enumerate(devs, start=1):
+        np.testing.assert_allclose(out[f"g/p/fid_stage{s}_rel"],
+                                   math.sqrt(np.sum(d * d) / tsq), rtol=1e-5)
+    # telescoping: per-stage deviation vectors sum to the end-to-end one
+    np.testing.assert_allclose(np.sum(devs, axis=0), g - true, atol=1e-6)
+
+
+def test_lossless_unit_is_exact():
+    """A unit whose sync equals the true mean reports rel_l2 == 0 exactly
+    (the fp-baseline property; fp units themselves carry no probe rows)."""
+    u = _unit(LOCO, chunk=64)
+    t = np.linspace(-1, 1, 64, dtype=np.float32)
+    p = np.stack([t, t, t + 0.5])  # nc deviates, live roundtrip does not
+    red = FID.local_vector((u,), {"g": {"p": jnp.asarray(t)}},
+                           {"g": {"p": jnp.asarray(p)}}, tp=1)
+    out = {k: float(v) for k, v in FID.finalize(red, (u,)).items()}
+    assert out["g/p/fid_rel_l2"] == 0.0
+    np.testing.assert_allclose(out["g/p/fid_cos"], 1.0, rtol=1e-6)
+    assert out["g/p/fid_comp_gain"] > 1e6  # comp_dev == 0 -> tiny-guarded
+
+
+def test_tp_replicated_unit_scaled():
+    u = FID.FidelityUnit(key="g/p", group="g", name="p", unit=0, offset=0,
+                         chunk_elems=32, sync=LOCO, tp_replicated=True,
+                         stateful=True)
+    g = jnp.ones((32,))
+    p = jnp.ones((3, 32))
+    v1 = FID.local_vector((u,), {"g": {"p": g}}, {"g": {"p": p}}, tp=4)
+    v2 = FID.local_vector((u,), {"g": {"p": g}}, {"g": {"p": p}}, tp=1)
+    np.testing.assert_allclose(np.asarray(v1) * 4, np.asarray(v2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the probe-transparency contract (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def test_nonprobe_step_launch_identical(mesh22):
+    """With fidelity_every set, the NON-probe compiled step keeps the
+    trip-weighted collective launch counts of a probing-disabled build:
+    all probe cost lives in the separate probe variant."""
+    from repro.analysis.hlo_stats import collective_launches
+
+    _, b_off = _bundle(mesh22, fidelity_every=0)
+    _, b_on = _bundle(mesh22, fidelity_every=2)
+    assert b_off.probe_fn is None and b_on.probe_fn is not None
+    hlo_off = b_off.fn.lower(*b_off.input_shapes).compile().as_text()
+    hlo_on = b_on.fn.lower(*b_on.input_shapes).compile().as_text()
+    off = {k: round(v) for k, v in collective_launches(hlo_off).items()}
+    on = {k: round(v) for k, v in collective_launches(hlo_on).items()}
+    assert on == off, (on, off)
+
+
+def test_probe_does_not_perturb_trajectory(mesh22):
+    """Chunks, error states and optimizer state are BIT-exact after 4
+    state-evolving steps whether or not steps 1 and 3 ran as probes."""
+    run_p, b_p = _bundle(mesh22, fidelity_every=2)
+    run_0, b_0 = _bundle(mesh22, fidelity_every=0)
+    out_p = _run_steps(mesh22, run_p, b_p, steps=4, fid_every=2)
+    out_0 = _run_steps(mesh22, run_0, b_0, steps=4, fid_every=0)
+    assert len(out_p[3]) == 2 and out_0[3] == []
+    for lp, l0 in zip(jax.tree.leaves(out_p[:3]), jax.tree.leaves(out_0[:3])):
+        assert np.asarray(lp).tobytes() == np.asarray(l0).tobytes()
+
+
+def test_probe_metrics_end_to_end(mesh22):
+    """Probe steps emit exactly the static fidelity key set, finite and in
+    range, and the compensated live roundtrip tracks the truth (cos near 1
+    on a healthy 4-bit run)."""
+    run, bundle = _bundle(mesh22, fidelity_every=2)
+    funits = bundle.helpers["funits"]
+    assert funits
+    keys = FID.fidelity_keys(funits)
+    _, _, _, probes = _run_steps(mesh22, run, bundle, steps=2, fid_every=2)
+    (m,) = probes
+    fid = {k: v for k, v in m.items()
+           if k.startswith("fidelity/") or "/fid_" in k}
+    assert set(fid) == set(keys)
+    for k, v in fid.items():
+        assert math.isfinite(v), (k, v)
+    assert 0.9 < m["fidelity/cos"] <= 1.0 + 1e-6
+    assert 0.0 <= m["fidelity/rel_l2"] < 0.5
+    assert m["fidelity/comp_gain"] >= 0.0
+
+
+def test_hier_per_tier_attribution(mesh_pod):
+    """Two-stage exchange (ICI 4-bit + DCN stage-2): every unit reports
+    both stage deviations, and the scalar summaries obey the triangle
+    bound of the exact vector telescoping (|sync-true| <= sum of per-stage
+    losses) — a wrong intermediate reference breaks this."""
+    run, bundle = _bundle(
+        mesh_pod, fidelity_every=2,
+        sync=SyncConfig(strategy="loco", quant=QuantConfig(mode="block"),
+                        hierarchical=True))
+    funits = bundle.helpers["funits"]
+    assert all(FID.n_stages(u.sync) == 2 for u in funits)
+    _, _, _, probes = _run_steps(mesh_pod, run, bundle, steps=2, fid_every=2)
+    (m,) = probes
+    for u in funits:
+        rel = m[f"{u.key}/fid_rel_l2"]
+        s1, s2 = m[f"{u.key}/fid_stage1_rel"], m[f"{u.key}/fid_stage2_rel"]
+        assert math.isfinite(s1) and math.isfinite(s2)
+        assert s1 >= 0 and s2 >= 0
+        assert rel <= s1 + s2 + 1e-5, (u.key, rel, s1, s2)
+        assert rel >= abs(s1 - s2) - 1e-5, (u.key, rel, s1, s2)
+
+
+# ---------------------------------------------------------------------------
+# build-time rejections
+# ---------------------------------------------------------------------------
+
+def test_probe_rejects_tier0_cadence(mesh22):
+    sync = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"),
+                      every=2)
+    with pytest.raises(ValueError, match="cannot meter a tier-0 sync"):
+        _bundle(mesh22, sync=sync, fidelity_every=2, overlap=False)
+    # without the probe the cadence itself is fine
+    _bundle(mesh22, sync=sync, fidelity_every=0, overlap=False)
+
+
+def test_probe_rejects_all_fp(mesh22):
+    with pytest.raises(ValueError, match="nothing to probe"):
+        _bundle(mesh22, sync=SyncConfig(strategy="fp"), fidelity_every=2)
+
+
+# ---------------------------------------------------------------------------
+# sink: fidelity kind, schema v2 back-compat, sustained-window monitors
+# ---------------------------------------------------------------------------
+
+def test_fidelity_record_schema_and_v1_backcompat():
+    rec = SINK.envelope("fidelity", step=3,
+                        metrics={"fidelity/cos": 0.99,
+                                 "embed/tok/fid_cos": 0.98})
+    assert rec["schema_version"] == 2
+    assert SINK.validate_record(rec) == []
+    # v1 streams (pre-probe) stay valid for v1-era kinds only
+    old = SINK.envelope("step", step=1, loss=1.0, gnorm=1.0, lr=1e-3,
+                        step_ms=1.0, metrics={})
+    old["schema_version"] = 1
+    assert SINK.validate_record(old) == []
+    v1fid = dict(rec, schema_version=1)
+    assert any("schema_version" in e for e in SINK.validate_record(v1fid))
+    bad = dict(rec, metrics={"fidelity/cos": "high"})
+    assert any("not a number" in e for e in SINK.validate_record(bad))
+    missing = {k: v for k, v in rec.items() if k != "metrics"}
+    assert any("fidelity.metrics" in e for e in SINK.validate_record(missing))
+
+
+def test_fidelity_health_monitors_sustained_window(capsys):
+    mon = SINK.HealthMonitor()
+    bad = {"metrics": {"fidelity/cos": 0.5, "fidelity/comp_gain": 0.4}}
+    good = {"metrics": {"fidelity/cos": 0.99, "fidelity/comp_gain": 1.3}}
+    # two bad probes: below the window, silent
+    assert mon.check(bad) == []
+    assert mon.check(bad) == []
+    w = mon.check(bad)  # third consecutive -> both monitors fire
+    assert sorted(x["monitor"] for x in w) == ["fidelity_collapse",
+                                               "negative_comp_gain"]
+    # one healthy probe resets the window
+    assert mon.check(good) == []
+    assert mon.check(bad) == []
+    # non-probe records (no fidelity keys) never advance the counters
+    assert mon.check({"loss": 1.0, "metrics": {"err_norm": 1.0}}) == []
+    assert mon.check(bad) == []
+    capsys.readouterr()
+
+
+def test_sink_fidelity_roundtrip_and_expect_healthy(tmp_path, capsys):
+    path = str(tmp_path / "run.jsonl")
+    sink = SINK.MetricsSink(path, header={"run": {"arch": "t"},
+                                          "topo": {"dp": 2}})
+    sink.step(0, loss=1.0, gnorm=1.0, lr=1e-3, step_ms=5.0, metrics={})
+    sink.fidelity(1, metrics={"fidelity/cos": 0.99, "fidelity/rel_l2": 0.05,
+                              "fidelity/comp_gain": 1.2})
+    sink.summary(steps=2)
+    sink.close()
+    res = SINK.validate_stream(path)
+    assert res["errors"] == []
+    assert res["kinds"]["fidelity"] == 1
+    assert SINK.main([path, "--expect-healthy"]) == 0
+
+    # a collapsing-fidelity stream flips --expect-healthy to exit 2
+    sink = SINK.MetricsSink(path)
+    for i in range(SINK.HealthConfig().fid_window):
+        sink.fidelity(i, metrics={"fidelity/cos": 0.1,
+                                  "fidelity/comp_gain": 0.5})
+    sink.close()
+    assert sink.n_warnings == 2  # collapse + no-gain on the window's edge
+    assert SINK.main([path, "--expect-healthy"]) == 2
+    assert SINK.main([path]) == 0
+    capsys.readouterr()
