@@ -1,11 +1,29 @@
-"""Paper Table 5 (MoE from scratch) + Table 12 analog: LoCo on MoE training.
+"""Paper Table 5 (MoE from scratch) + Table 12 analog: compression on MoE.
 
-Trains the reduced mixtral config end-to-end on the 2x2 CPU mesh (real
-distributed path: FSDP + expert layers + LoCo all2all) under fp vs loco and
-reports loss parity, plus router health (aux loss) -- the paper's point
-that expert-gradient compression doesn't break load balance.
+Trains the reduced ep_a2a architectures end-to-end on the 2x2 CPU mesh
+(real distributed path: FSDP + expert-parallel all-to-all) and measures
+BOTH compression surfaces:
+
+* gradient wire: fp vs loco sync on the dp axis (the original table);
+* activation wire: fp vs block8[/+ef] MoE dispatch/combine codec on the
+  tp axis (core/act_comm.py, DESIGN.md §18), with the gradient sync held
+  at fp so the codec's effect is isolated.
+
+Emits BENCH_moe.json (telemetry envelope, benchmarks/common.write_bench_json)
+and ASSERTS the PR's acceptance gates: block8 dispatch bytes <= 0.56x the
+bf16 baseline, and final-loss + router aux-loss parity vs the fp wire on
+every ep_a2a config -- the paper's point that compressing expert traffic
+does not break load balance.
 """
 from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
@@ -16,40 +34,105 @@ from repro.core.quantizer import QuantConfig
 from repro.data.synthetic import DataConfig, make_batch_fn
 from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import RunConfig, make_init, make_train_step
-from benchmarks.common import csv_row
+from repro.telemetry import wire as WIRE
+
+try:
+    from benchmarks.common import csv_row, write_bench_json
+except ImportError:  # direct invocation: python benchmarks/bench_moe.py
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.common import csv_row, write_bench_json
+
+A2A_ARCHS = ("qwen3-moe-30b-a3b", "deepseek-v3-moe")
+MAX_RATIO = 0.56          # block8 wire vs bf16 gate (512-block int8 + f32 scale)
+LOSS_TOL = 0.3            # |final_loss - fp final_loss|
+AUX_TOL = 0.3             # |router aux loss - fp aux loss| (load balance intact)
+
+SHAPE = ShapeConfig("bench", seq_len=32, global_batch=8, kind="train")
 
 
-def _train(arch, sync, steps=20):
-    import time
+def _train(arch: str, sync: SyncConfig, steps: int, codec: str | None = None):
     mesh = make_local_mesh(dp=2, tp=2)
     cfg = reduced(get_arch(arch))
-    shape = ShapeConfig("bench", seq_len=32, global_batch=8, kind="train")
+    if codec is not None:
+        cfg = dataclasses.replace(cfg, moe_a2a_codec=codec)
     run = RunConfig(sync=sync, optimizer="adamw", microbatch=2,
                     total_steps=steps, warmup_steps=2, lr=2e-3)
-    init_fn, _ = make_init(cfg, run, mesh)
+    init_fn, _ = make_init(cfg, run, mesh, SHAPE)
     chunks, states, opt = init_fn(jax.random.PRNGKey(0))
-    bundle = make_train_step(cfg, run, mesh, shape)
-    bf = make_batch_fn(DataConfig(vocab=cfg.vocab, seq_len=shape.seq_len,
-                                  global_batch=shape.global_batch))
+    bundle = make_train_step(cfg, run, mesh, SHAPE)
+    bf = make_batch_fn(DataConfig(vocab=cfg.vocab, seq_len=SHAPE.seq_len,
+                                  global_batch=SHAPE.global_batch))
     t0 = time.time()
-    losses = []
+    m = None
     for i in range(steps):
         chunks, states, opt, m = bundle.fn(chunks, states, opt, jnp.int32(i),
                                            bf(jnp.int32(i)))
-        losses.append(float(m["loss"]))
-    return losses, time.time() - t0
+    out = {"final_loss": float(m["loss"]), "wall_s": time.time() - t0}
+    if "moe_aux" in m:
+        out["moe_aux"] = float(m["moe_aux"])
+        out["moe_z"] = float(m["moe_z"])
+    return out, cfg
 
 
-def run(steps=20):
+def run(steps: int = 20, out: str = "BENCH_moe.json") -> dict:
+    fp_sync = SyncConfig(strategy="fp")
+    loco = SyncConfig(strategy="loco", quant=QuantConfig(mode="block"))
+    results: dict = {}
+
+    # --- gradient-wire parity (original table; mixtral is tp_dense) --------
     for arch in ("mixtral-8x7b", "qwen3-moe-30b-a3b"):
-        l_fp, t_fp = _train(arch, SyncConfig(strategy="fp"), steps)
-        l_lo, t_lo = _train(arch, SyncConfig(
-            strategy="loco", quant=QuantConfig(mode="block")), steps)
-        csv_row(f"table5/{arch}_fp", t_fp / steps * 1e6,
-                f"final_loss={l_fp[-1]:.4f}")
-        csv_row(f"table5/{arch}_loco", t_lo / steps * 1e6,
-                f"final_loss={l_lo[-1]:.4f} gap={l_lo[-1]-l_fp[-1]:+.4f}")
+        r_fp, _ = _train(arch, fp_sync, steps)
+        r_lo, _ = _train(arch, loco, steps)
+        results[f"{arch}/grad_fp"] = r_fp
+        results[f"{arch}/grad_loco"] = r_lo
+        csv_row(f"table5/{arch}_loco", r_lo["wall_s"] / steps * 1e6,
+                f"final_loss={r_lo['final_loss']:.4f} "
+                f"gap={r_lo['final_loss'] - r_fp['final_loss']:+.4f}")
+
+    # --- activation-wire parity (this PR's gates; grad sync held at fp) ----
+    class _T:
+        dp, tp = 2, 2
+
+    for arch in A2A_ARCHS:
+        per_codec = {}
+        for codec in ("fp", "block8", "block8+ef"):
+            r, cfg = _train(arch, fp_sync, steps, codec=codec)
+            rep = WIRE.moe_a2a_report(cfg, SHAPE, _T, 2)
+            r["dispatch_bytes_per_step"] = rep["per_step_bytes"]
+            r["dispatch_ratio_vs_bf16"] = rep["ratio_vs_bf16"]
+            per_codec[codec] = r
+            results[f"{arch}/a2a_{codec}"] = r
+            csv_row(f"moe_a2a/{arch}_{codec}", r["wall_s"] / steps * 1e6,
+                    f"final_loss={r['final_loss']:.4f} "
+                    f"aux={r['moe_aux']:.4f} "
+                    f"wire={rep['per_step_bytes'] / 2**20:.2f}MiB "
+                    f"({rep['ratio_vs_bf16']:.3f}x)")
+        fp_r = per_codec["fp"]
+        assert fp_r["dispatch_ratio_vs_bf16"] == 1.0, fp_r
+        for codec in ("block8", "block8+ef"):
+            r = per_codec[codec]
+            assert r["dispatch_ratio_vs_bf16"] <= MAX_RATIO, (
+                f"{arch}/{codec}: dispatch ratio "
+                f"{r['dispatch_ratio_vs_bf16']:.3f} > {MAX_RATIO}")
+            loss_gap = abs(r["final_loss"] - fp_r["final_loss"])
+            aux_gap = abs(r["moe_aux"] - fp_r["moe_aux"])
+            assert loss_gap <= LOSS_TOL, (
+                f"{arch}/{codec}: final-loss gap {loss_gap:.4f} > {LOSS_TOL}")
+            assert aux_gap <= AUX_TOL, (
+                f"{arch}/{codec}: router aux gap {aux_gap:.4f} > {AUX_TOL} "
+                f"(load balance drifted under compression)")
+
+    write_bench_json(out, "moe", results, steps=steps,
+                     gates={"max_dispatch_ratio": MAX_RATIO,
+                            "loss_tol": LOSS_TOL, "aux_tol": AUX_TOL})
+    return results
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="6 steps instead of 20 (CI leg)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_moe.json")
+    args = ap.parse_args()
+    run(steps=args.steps or (6 if args.quick else 20), out=args.out)

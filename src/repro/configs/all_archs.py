@@ -2,6 +2,7 @@
 from repro.configs import (  # noqa: F401
     chameleon_34b,
     command_r_35b,
+    deepseek_v3_moe,
     gemma2_27b,
     h2o_danube_1p8b,
     llama2_400m,
@@ -17,6 +18,7 @@ ASSIGNED = [
     "chameleon-34b",
     "mixtral-8x7b",
     "qwen3-moe-30b-a3b",
+    "deepseek-v3-moe",
     "minicpm-2b",
     "gemma2-27b",
     "zamba2-2.7b",

@@ -37,6 +37,10 @@ class ArchConfig:
     capacity_factor: float = 1.25
     aux_loss_coef: float = 0.01
     router_z_coef: float = 1e-3
+    moe_a2a_codec: str = "fp"               # fp | block8 | block8+ef (ep_a2a only)
+    n_shared_experts: int = 0               # deepseek-style always-on experts
+    n_expert_groups: int = 1                # deepseek grouped (node-limited) routing
+    group_top_k: int = 0                    # groups routable per token (0 = all)
     # --- SSM (mamba2) --------------------------------------------------------
     ssm_state: int = 0
     ssm_headdim: int = 64
@@ -100,6 +104,15 @@ def reduced(cfg: ArchConfig, max_d: int = 256, n_layers: int = 2, max_experts: i
     if cfg.n_experts:
         changes["n_experts"] = min(cfg.n_experts, max_experts)
         changes["top_k"] = min(cfg.top_k, 2)
+        if cfg.n_expert_groups > 1:
+            # keep groups dividing the reduced expert count and leave at least
+            # top_k routable experts inside the selected groups
+            g = min(cfg.n_expert_groups, changes["n_experts"] // 2)
+            changes["n_expert_groups"] = max(g, 1)
+            if cfg.group_top_k:
+                changes["group_top_k"] = max(1, min(cfg.group_top_k, g - 1))
+        if cfg.n_shared_experts:
+            changes["n_shared_experts"] = 1
     if cfg.enc_dec:
         changes["enc_layers"] = n_layers
     if cfg.ssm_state:

@@ -1,0 +1,48 @@
+"""deepseek-v3-moe [moe] -- fine-grained experts + shared expert + grouped
+routing [hf:deepseek-ai/DeepSeek-V3, geometry-reduced].
+
+A DeepSeek-V3-style MoE brought down to a trainable-in-CI geometry while
+keeping every routing mechanism that distinguishes it from the
+Qwen3/Mixtral MoEs already in the pool:
+
+* **shared experts** (``n_shared_experts=2``): a dense always-on FFN added
+  to the routed output, so the routed experts specialise on the residual;
+* **grouped (node-limited) routing** (``n_expert_groups=8``,
+  ``group_top_k=4``): each token may only route inside its top-scoring
+  expert groups -- DeepSeek's device-limited routing, which bounds the
+  dispatch fan-out;
+* **fine-grained experts**: many small experts (64 x d_ff=512) rather than
+  few large ones, with top-8 selection.
+
+Experts are expert-parallel with all-to-all dispatch (``ep_a2a``) and ship
+with the compressed activation wire on (``moe_a2a_codec="block8"``,
+core/act_comm.py) -- this is the arch that exercises the compressed
+dispatch path by default in the smoke/bench suites.  Attention is plain
+GQA (no MLA -- latent attention is out of scope for this pool; the MoE
+block is what this config is here to cover).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="deepseek-v3-moe",
+    family="moe",
+    n_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=512,
+    vocab=32000,
+    mlp="swiglu",
+    attn_kind="full",
+    n_experts=64,
+    top_k=8,
+    moe_impl="ep_a2a",
+    moe_a2a_codec="block8",
+    n_shared_experts=2,
+    n_expert_groups=8,
+    group_top_k=4,
+    aux_loss_coef=0.001,
+    rope_theta=1e6,
+    source="hf:deepseek-ai/DeepSeek-V3 (geometry-reduced)",
+))

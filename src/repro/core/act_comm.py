@@ -1,0 +1,262 @@
+"""Compressed activation exchange for the MoE ``ep_a2a`` dispatch/combine.
+
+The expert-parallel MoE moves the ``(tp, El, cap, d)`` capacity-slot buffer
+through ``all_to_all`` twice per layer per direction (dispatch + combine,
+forward AND backward) — the last large comm surface with no codec in front
+of it.  This module is the activation analog of the gradient wire: each
+rank's per-peer row is flattened, zero-padded to a 512 multiple, quantized
+with a stateless per-512-block absmax int8 codec (the activation-shaped
+sibling of ``kernels/loco_quant``), packed into one ``uint8`` row via
+wirepack's byte geometry (``to_bytes``/``from_bytes``), exchanged in ONE u8
+``all_to_all``, and dequantized on the receiving rank.
+
+A ``custom_vjp`` wraps the exchange so the backward's activation-cotangent
+all_to_all is compressed the same way — ``all_to_all(split_axis=0,
+concat_axis=0)`` is a self-inverse permutation, so the transpose of the
+exchange is the exchange itself applied to the cotangent.
+
+Codecs (``ArchConfig.moe_a2a_codec``):
+
+- ``"fp"``       — bit-exact today's path; models/moe.py keeps the raw
+                   ``lax.all_to_all`` and never calls into this module.
+- ``"block8"``   — stateless int8 block-absmax both directions (default
+                   recommendation: activations are re-sampled every step,
+                   so unlike gradients there is no accumulation for a
+                   one-shot quantization error to bias — DESIGN.md §18).
+- ``"block8+ef"``— research flag: SparseLoCo-style error feedback on the
+                   *combine* direction (expert outputs feed the residual
+                   stream, the most error-sensitive hop).  The per-layer
+                   error state is threaded through the train step like the
+                   PR-7 piece carry and checkpointed under
+                   ``states["_moe_a2a"]``.
+
+Dead capacity slots and pad tokens are force-zeroed by the caller before
+encode (``models/moe.py`` scatters with the ``valid`` mask; pinned by
+tests/test_act_comm.py) — the ``mask_by_count`` contract of the ragged
+gradient wire, restated for activations: absmax scales must never see
+garbage bytes.
+"""
+from __future__ import annotations
+
+import os
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.wirepack import from_bytes, to_bytes
+
+ACT_BLOCK = 512     # absmax block length (elements), matches the wire granule
+QMAX = 127.0        # symmetric int8
+SCALE_BYTES = 4     # one f32 scale per block
+MOE_A2A_CODECS = ("fp", "block8", "block8+ef")
+EF_STATE_KEY = "_moe_a2a"
+
+
+# --------------------------------------------------------------------------
+# codec cells (jnp reference; Pallas cell in kernels/act_quant.py, env-gated)
+# --------------------------------------------------------------------------
+
+def _use_kernels() -> bool:
+    return os.environ.get("REPRO_ACT_KERNELS", "") not in ("", "0")
+
+
+def quant_rows(h: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """``(rows, ACT_BLOCK)`` f32 -> (int8 codes, f32 per-row absmax scales).
+
+    ``scale = QMAX / max(absmax, eps)`` so an all-zero block round-trips to
+    exact zeros (dead capacity slots stay dead through the wire).
+    """
+    if _use_kernels():
+        from repro.kernels import ops as KOPS
+        return KOPS.act_encode(h)
+    absmax = jnp.max(jnp.abs(h), axis=-1)
+    scale = QMAX / jnp.maximum(absmax, 1e-30)
+    q = jnp.clip(jnp.round(h * scale[:, None]), -128, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequant_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quant_rows` -> ``(rows, ACT_BLOCK)`` f32."""
+    if _use_kernels():
+        from repro.kernels import ops as KOPS
+        return KOPS.act_decode(q, scale)
+    return q.astype(jnp.float32) / scale[:, None]
+
+
+def _pad_up(n: int) -> int:
+    return -(-n // ACT_BLOCK) * ACT_BLOCK
+
+
+def wire_row_bytes(n_per_peer: int) -> int:
+    """u8 bytes of one peer row: padded int8 payload + packed f32 scales."""
+    n_pad = _pad_up(n_per_peer)
+    return n_pad + (n_pad // ACT_BLOCK) * SCALE_BYTES
+
+
+# --------------------------------------------------------------------------
+# encode / exchange / decode
+# --------------------------------------------------------------------------
+
+def _encode(x4: jax.Array, n_pp: int, n_pad: int, tp: int) -> jax.Array:
+    """``(tp, El, cap, d)`` -> packed ``(tp, row_bytes)`` u8 send buffer."""
+    xf = x4.reshape(tp, n_pp).astype(jnp.float32)
+    if n_pad != n_pp:
+        xf = jnp.pad(xf, ((0, 0), (0, n_pad - n_pp)))
+    q, s = quant_rows(xf.reshape(-1, ACT_BLOCK))
+    qb = jax.lax.bitcast_convert_type(q.reshape(tp, n_pad), jnp.uint8)
+    sb = to_bytes(s).reshape(tp, (n_pad // ACT_BLOCK) * SCALE_BYTES)
+    return jnp.concatenate([qb, sb], axis=1)
+
+
+def _decode(buf: jax.Array, n_pp: int, n_pad: int, tp: int,
+            shape4: tuple, dtype) -> jax.Array:
+    """Packed ``(tp, row_bytes)`` u8 -> ``(tp, El, cap, d)`` in ``dtype``."""
+    q = jax.lax.bitcast_convert_type(buf[:, :n_pad], jnp.int8)
+    s = from_bytes(buf[:, n_pad:], jnp.float32)
+    dec = dequant_rows(q.reshape(-1, ACT_BLOCK), s.reshape(-1))
+    return dec.reshape(tp, n_pad)[:, :n_pp].reshape(shape4).astype(dtype)
+
+
+def _roundtrip_local(x4: jax.Array, n_pp: int, n_pad: int, tp: int) -> jax.Array:
+    """Local quantize->dequantize of the send buffer, f32 ``(tp, n_pad)``
+    (what every peer will decode; the EF update needs it pre-exchange)."""
+    xf = x4.reshape(tp, n_pp).astype(jnp.float32)
+    if n_pad != n_pp:
+        xf = jnp.pad(xf, ((0, 0), (0, n_pad - n_pp)))
+    q, s = quant_rows(xf.reshape(-1, ACT_BLOCK))
+    return dequant_rows(q, s).reshape(tp, n_pad)
+
+
+@lru_cache(maxsize=None)
+def _make_a2a8(axis: str, shape4: tuple, dtype_str: str):
+    """Cached stateless block8 all_to_all with compressed backward.
+
+    ``lru_cache`` keeps the closure identity stable per static config so
+    JAX's jit/custom_vjp caches hit (the hijack idiom, core/hijack.py).
+    """
+    tp, El, cap, d = shape4
+    n_pp = El * cap * d
+    n_pad = _pad_up(n_pp)
+    dtype = jnp.dtype(dtype_str)
+
+    def xchg(x4):
+        buf = _encode(x4, n_pp, n_pad, tp)
+        buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0)
+        return _decode(buf, n_pp, n_pad, tp, shape4, dtype)
+
+    @jax.custom_vjp
+    def a2a8(x4):
+        return xchg(x4)
+
+    def fwd(x4):
+        return xchg(x4), None
+
+    def bwd(_, g):
+        # the a2a permutation is self-inverse: its transpose is itself, so
+        # the cotangent rides the same compressed exchange
+        return (xchg(g.astype(dtype)),)
+
+    a2a8.defvjp(fwd, bwd)
+    return a2a8
+
+
+@lru_cache(maxsize=None)
+def _make_a2a8_ef(axis: str, shape4: tuple, dtype_str: str, err_dtype_str: str):
+    """Cached error-feedback variant: ``(x4, err) -> (y4, new_err)``.
+
+    Forward quantizes ``h = x + err`` and stores ``new_err = h - dec(h)``
+    (the residual every peer failed to receive).  The backward compresses
+    the activation cotangent through the stateless exchange and returns a
+    zero cotangent for the error input — the EF state is a carried buffer,
+    not a differentiated quantity (its "gradient" slot is how the update
+    reaches the train-step carry, mirroring the hijack's error threading).
+    """
+    tp, El, cap, d = shape4
+    n_pp = El * cap * d
+    n_pad = _pad_up(n_pp)
+    dtype = jnp.dtype(dtype_str)
+    err_dtype = jnp.dtype(err_dtype_str)
+    stateless = _make_a2a8(axis, shape4, dtype_str)
+
+    def impl(x4, err):
+        xf = x4.reshape(tp, n_pp).astype(jnp.float32)
+        if n_pad != n_pp:
+            xf = jnp.pad(xf, ((0, 0), (0, n_pad - n_pp)))
+        h = xf + err.reshape(tp, n_pad).astype(jnp.float32)
+        q, s = quant_rows(h.reshape(-1, ACT_BLOCK))
+        dec_local = dequant_rows(q, s).reshape(tp, n_pad)
+        new_err = (h - dec_local).reshape(err.shape).astype(err_dtype)
+        qb = jax.lax.bitcast_convert_type(
+            q.reshape(tp, n_pad), jnp.uint8)
+        sb = to_bytes(s).reshape(tp, (n_pad // ACT_BLOCK) * SCALE_BYTES)
+        buf = jnp.concatenate([qb, sb], axis=1)
+        buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0)
+        y4 = _decode(buf, n_pp, n_pad, tp, shape4, dtype)
+        return y4, new_err
+
+    @jax.custom_vjp
+    def a2a8_ef(x4, err):
+        return impl(x4, err)
+
+    def fwd(x4, err):
+        return impl(x4, err), None
+
+    def bwd(_, ct):
+        g_y, _g_err = ct
+        return stateless(g_y.astype(dtype)), jnp.zeros(
+            (tp * n_pad,), err_dtype)
+
+    a2a8_ef.defvjp(fwd, bwd)
+    return a2a8_ef
+
+
+def a2a_exchange(x4: jax.Array, axis: str) -> jax.Array:
+    """Stateless block8 all_to_all of a ``(tp, El, cap, d)`` slot buffer."""
+    f = _make_a2a8(axis, tuple(x4.shape), jnp.dtype(x4.dtype).name)
+    return f(x4)
+
+
+def a2a_exchange_ef(x4: jax.Array, err: jax.Array,
+                    axis: str) -> tuple[jax.Array, jax.Array]:
+    """Error-feedback block8 all_to_all; returns ``(y4, new_err)``."""
+    f = _make_a2a8_ef(axis, tuple(x4.shape), jnp.dtype(x4.dtype).name,
+                      jnp.dtype(err.dtype).name)
+    return f(x4, err)
+
+
+# --------------------------------------------------------------------------
+# static geometry (shared by moe.py, steps.py state alloc, telemetry/wire)
+# --------------------------------------------------------------------------
+
+def wants_ef(cfg) -> bool:
+    """Does this arch carry a persistent combine-side EF state?"""
+    return (getattr(cfg, "n_experts", 0) > 0
+            and getattr(cfg, "moe_impl", "") == "ep_a2a"
+            and getattr(cfg, "moe_a2a_codec", "fp") == "block8+ef")
+
+
+def a2a_geometry(cfg, n_tokens: int, tp: int) -> dict:
+    """Static shapes of one layer's dispatch/combine exchange.
+
+    Mirrors the ``models/moe.py`` ep_a2a capacity math for ``n_tokens``
+    tokens on this rank's TP group (= microbatch * seq_len pre-slice);
+    pinned against the real trace by tests/test_act_comm.py.
+    """
+    import math
+    E, k, d = cfg.n_experts, cfg.top_k, cfg.d_model
+    Tpad = -(-n_tokens // tp) * tp
+    Tl = Tpad // tp
+    cap = max(1, int(math.ceil(Tl * k / E * cfg.capacity_factor)))
+    El = E // tp
+    n_pp = El * cap * d
+    n_pad = _pad_up(n_pp)
+    return dict(cap=cap, El=El, n_pp=n_pp, n_pad=n_pad,
+                row_bytes=wire_row_bytes(n_pp),
+                fp_row_bytes=2 * n_pp)  # bf16 baseline
+
+
+def ef_state_len(cfg, n_tokens: int, tp: int) -> int:
+    """Flat per-layer EF-state length (tp * padded per-peer elements)."""
+    g = a2a_geometry(cfg, n_tokens, tp)
+    return tp * g["n_pad"]

@@ -22,6 +22,11 @@ registry key                               encode          decode_mean
 (naive4, 8, block, none)                   --  (jnp)       dequant_mean
 (onebit, 1, l1,    bf16)                   onebit_pack     --  (jnp)
 =========================================  ==============  ===============
+
+The MoE activation-wire cell (``act_quant``) is not registry-keyed: it is
+stateless and layout-fixed, so ``core/act_comm`` calls ``act_encode`` /
+``act_decode`` directly when ``REPRO_ACT_KERNELS=1`` (jnp reference
+otherwise; parity pinned by tests/test_act_comm.py).
 """
 from __future__ import annotations
 
@@ -65,6 +70,18 @@ def onebit_pack(h, scale, *, state_dtype=jnp.bfloat16):
     """Fused sign-extract + 8-per-byte pack + error update."""
     return sign_pack.onebit_pack(h, scale, state_dtype=state_dtype,
                                  interpret=_interpret_default())
+
+
+def act_encode(h):
+    """MoE activation-wire block quantize (see act_quant / core.act_comm)."""
+    from repro.kernels import act_quant
+    return act_quant.act_encode(h, interpret=_interpret_default())
+
+
+def act_decode(q, scale):
+    """MoE activation-wire block dequantize."""
+    from repro.kernels import act_quant
+    return act_quant.act_decode(q, scale, interpret=_interpret_default())
 
 
 # ---------------------------------------------------------------------------

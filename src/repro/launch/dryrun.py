@@ -144,6 +144,11 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                                 for k, v in pst.coll_counts.items()},
                 extra_launches={k: v for k, v in delta.items() if v},
             )
+        moe_rec = None
+        if shape.kind == "train":
+            # ep_a2a dispatch/combine traffic on the TP axis (DESIGN.md §18)
+            from repro.telemetry import wire as WIRE
+            moe_rec = WIRE.moe_a2a_report(cfg, shape, topo, run.microbatch)
         wire_tiers = None
         if shape.kind == "train" and bundle.helpers.get("plan") is not None:
             # per-tier cadence + capacity-vs-effective bytes (DESIGN.md §16)
@@ -197,6 +202,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                              wire_bytes=round(st.wire_bytes)),
             overlap=ov_rec,
             wire_tiers=wire_tiers,
+            moe_a2a=moe_rec,
             fidelity=fid_rec,
             roofline=terms,
             model_flops_per_device=model_flops_dev,
@@ -235,6 +241,11 @@ def _emit(rec: dict, out_dir: str | None) -> dict:
                 f"{t['effective_bytes'] / 2**20:.2f}"
                 f"/{t['capacity_bytes'] / 2**20:.2f}MiB"
                 for t in rec["wire_tiers"])
+        if rec.get("moe_a2a"):
+            # compressed ep_a2a activation traffic per step (DESIGN.md §18)
+            m = rec["moe_a2a"]
+            extra += (f" moe_a2a={m['per_step_bytes'] / 2**20:.2f}MiB"
+                      f"@{m['codec']}")
         if rec.get("fidelity"):
             # probe cadence + predicted probe-step overhead (DESIGN.md §17)
             f = rec["fidelity"]

@@ -22,6 +22,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import act_comm as ACT
 from repro.core import buckets as BK
 from repro.core import flatparam as FP
 from repro.core import loco as loco_lib
@@ -113,7 +114,9 @@ def build_sync_plan(run: RunConfig, groups, topo: MeshTopo) -> "BK.SyncPlan | No
 
 
 def state_fingerprint(run: RunConfig, groups, topo: MeshTopo,
-                      plan: "BK.SyncPlan | None") -> dict:
+                      plan: "BK.SyncPlan | None",
+                      arch: "ArchConfig | None" = None,
+                      shape: "ShapeConfig | None" = None) -> dict:
     """Layout fingerprint of this run's train state (DESIGN.md §12).
 
     Built from the *target* plan before any restore happens, so the
@@ -121,11 +124,30 @@ def state_fingerprint(run: RunConfig, groups, topo: MeshTopo,
     reshard (or fail loudly) instead of tripping over mismatched arrays.
     The state-unit geometry follows ``run.coalesce`` (encode runs vs
     per-bucket leaves — DESIGN.md §13).
+
+    When ``arch``/``shape`` are given and the arch carries a MoE
+    activation-wire EF state (moe_a2a_codec="block8+ef"), its geometry is
+    fingerprinted under the ``"moe_a2a"`` key, so restoring across a codec
+    flip (or a shape change that resizes the state) fails loudly with
+    ``CheckpointMismatch`` instead of silently dropping/misreading the
+    ``states["_moe_a2a"]`` entry.
     """
+    from repro.core import act_comm as ACT
     from repro.state import build_fingerprint
 
-    return build_fingerprint(groups, topo, run.sync, plan,
-                             coalesce=run.coalesce)
+    fp = build_fingerprint(groups, topo, run.sync, plan,
+                           coalesce=run.coalesce)
+    if arch is not None and shape is not None and ACT.wants_ef(arch):
+        local_batch = shape.global_batch // topo.dp
+        micro = min(run.microbatch, local_batch)
+        fp["moe_a2a"] = {
+            "codec": arch.moe_a2a_codec,
+            "layers": arch.n_layers,
+            "state_len": ACT.ef_state_len(arch, micro * shape.seq_len,
+                                          topo.tp),
+            "dtype": "bfloat16",
+        }
+    return fp
 
 
 def _validate_sync_configs(run: RunConfig, plan: "BK.SyncPlan | None",
@@ -366,6 +388,16 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
     local_batch = shape.global_batch // topo.dp
     micro = min(run.microbatch, local_batch)
     accum = local_batch // micro
+    # MoE activation-wire EF state (core/act_comm, moe_a2a_codec="block8+ef"):
+    # one flat (tp * padded-slot-buffer) bf16 leaf per layer, carried through
+    # the microbatch scan like the piece carry and checkpointed under
+    # states["_moe_a2a"] (fingerprinted — see state_fingerprint).
+    ef_len = (ACT.ef_state_len(cfg, micro * shape.seq_len, topo.tp)
+              if ACT.wants_ef(cfg) else 0)
+    # MoE runs also surface the router aux/z losses as step metrics (riding
+    # the packed loss psum — no extra collective), so parity checks
+    # (bench_moe) can read load balance straight off the step stream.
+    moe_metrics = bool(cfg.n_experts)
     mask = {g.name: {i.name: jnp.float32(1.0 if i.decay else 0.0) for i in g.infos}
             for g in groups}
     # static metrics schema: unit layout + key set fixed at build time, so
@@ -472,58 +504,73 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
                 probe0 = {gn: {n: jnp.zeros(s, jnp.float32)
                                for n, s in og.items()}
                           for gn, og in probe_shapes.items()}
+            # per-layer MoE a2a EF stack (None = codec carries no state; a
+            # None carry leaf is an empty pytree, so the scan structure is
+            # unchanged for every non-EF config)
+            ef0 = None
+            if ef_len:
+                ef0 = states[ACT.EF_STATE_KEY]["ef"].reshape(
+                    cfg.n_layers, ef_len)
 
-            def loss_fn(c, s, pr, mb):
+            def loss_fn(c, s, pr, ef, mb):
                 store = FP.TrainStore(groups, c, s, sync, topo, plan=plan,
                                       coalesce=run.coalesce,
                                       overlap=run.overlap and not probe_mode,
                                       piece_space=pc,
                                       step=jnp.asarray(step, jnp.float32),
                                       probe=pr)
+                if ef is not None:
+                    return model.loss_fn(store, mb, remat=run.remat,
+                                         moe_a2a_state=ef)
                 return model.loss_fn(store, mb, remat=run.remat)
 
             def micro_body(carry, mb):
                 if probe_mode:
-                    s, gacc, pacc = carry
-                    (loss, _aux), (g, new_s, gp) = jax.value_and_grad(
+                    s, ef, gacc, pacc = carry
+                    (loss, aux_), (g, new_s, gp) = jax.value_and_grad(
                         loss_fn, argnums=(0, 1, 2), has_aux=True)(
-                            chunks_l, s, probe0, mb)
+                            chunks_l, s, probe0, ef, mb)
                     pacc = jax.tree.map(lambda a, b: a + b, pacc, gp)
                 else:
-                    s, gacc = carry
-                    (loss, _aux), (g, new_s) = jax.value_and_grad(
+                    s, ef, gacc = carry
+                    (loss, aux_), (g, new_s) = jax.value_and_grad(
                         loss_fn, argnums=(0, 1), has_aux=True)(
-                            chunks_l, s, probe0, mb)
+                            chunks_l, s, probe0, ef, mb)
+                ef = aux_.pop("moe_a2a_state", ef)
                 gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
                                     gacc, g)
                 s = new_s if needs_state else s
-                out = (s, gacc, pacc) if probe_mode else (s, gacc)
-                return out, loss
+                out = (s, ef, gacc, pacc) if probe_mode else (s, ef, gacc)
+                mv = (jnp.stack([aux_["aux"], aux_["z"]]) if moe_metrics
+                      else jnp.zeros((0,), jnp.float32))
+                return out, (loss, mv)
 
             gacc0 = jax.tree.map(lambda c: jnp.zeros(c.shape, jnp.float32),
                                  chunks_l)
-            carry0 = ((states_l, gacc0, jax.tree.map(jnp.zeros_like, probe0))
-                      if probe_mode else (states_l, gacc0))
+            carry0 = ((states_l, ef0, gacc0,
+                       jax.tree.map(jnp.zeros_like, probe0))
+                      if probe_mode else (states_l, ef0, gacc0))
             mbs = jax.tree.map(
                 lambda x: x.reshape(accum, micro, *x.shape[1:]), batch)
             if run.unroll_accum:
-                carry, losses_l = carry0, []
+                carry, ys_l = carry0, []
                 for i in range(accum):
                     mb = jax.tree.map(lambda x: x[i], mbs)
-                    carry, loss_i = micro_body(carry, mb)
-                    losses_l.append(loss_i)
-                losses = jnp.stack(losses_l)
+                    carry, y_i = micro_body(carry, mb)
+                    ys_l.append(y_i)
+                losses = jnp.stack([y[0] for y in ys_l])
+                mvs = jnp.stack([y[1] for y in ys_l])
             else:
-                carry, losses = jax.lax.scan(micro_body, carry0, mbs)
+                carry, (losses, mvs) = jax.lax.scan(micro_body, carry0, mbs)
             refs_l = None
             if probe_mode:
-                states_l, gacc, pacc = carry
+                states_l, ef_fin, gacc, pacc = carry
                 # references average over microbatches like the gradient:
                 # the fidelity of the STEP's synchronized mean vs its true
                 # mean, the quantity the optimizer actually consumes
                 refs_l = jax.tree.map(lambda p: p / accum, pacc)
             else:
-                states_l, gacc = carry
+                states_l, ef_fin, gacc = carry
             metric_states = states_l
             if pc:
                 # metrics read the scan's raw piece leaves (grouped per run)
@@ -565,6 +612,8 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
             # DESIGN.md §14; the probe's only extra collectives are the
             # reference reduces inside the backward, §17).
             parts = [loss_local[None]]
+            if moe_metrics:
+                parts.append(jnp.mean(mvs, axis=0))  # [router aux, router z]
             if run.telemetry:
                 with PROF.phase("metrics"):
                     parts.append(METRICS.local_vector(
@@ -579,6 +628,12 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
                                       topo.dp_axes + (topo.tp_axis,))
                 metrics["loss"] = packed[0] / (topo.dp * topo.tp)
                 off = 1
+                if moe_metrics:
+                    # per-rank token slices route independently under ep_a2a,
+                    # so this is the mean router loss over all dp*tp shards
+                    metrics["moe_aux"] = packed[1] / (topo.dp * topo.tp)
+                    metrics["moe_z"] = packed[2] / (topo.dp * topo.tp)
+                    off = 3
                 if run.telemetry:
                     nm = len(munits) * METRICS.NF + 2
                     metrics.update(METRICS.finalize(packed[off:off + nm],
@@ -589,7 +644,14 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
             else:
                 metrics["loss"] = jax.lax.pmean(loss_local, topo.dp_axes)
             new_chunks = unsqueeze_like(new_chunks_l, chunks)
-            new_states = unsqueeze_like(new_states_l, states)
+            # states may carry the non-group EF entry; unsqueeze against the
+            # group keys only, then reattach the updated EF stack
+            new_states = unsqueeze_like(new_states_l,
+                                        {k: states[k] for k in new_states_l})
+            if ef_len:
+                ef_ref = states[ACT.EF_STATE_KEY]["ef"]
+                new_states[ACT.EF_STATE_KEY] = {
+                    "ef": ef_fin.reshape(ef_ref.shape).astype(ef_ref.dtype)}
             new_opt = tuple(unsqueeze_like(t, chunks) for t in new_opt_l)
             return new_chunks, new_states, new_opt, metrics
 
@@ -600,12 +662,20 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
     n_opt = len(opt.init(_chunk_shapes_local(groups, topo)))
     opt_spec = tuple(cspec for _ in range(n_opt))
     dp = _dp_entry(topo)
+    if ef_len:
+        # global (L, dp, tp, ef_len): dp replicas each own their microbatch's
+        # EF history; tp dim is this rank's (tp, n_pad) send-buffer residual
+        sspec = dict(sspec)
+        sspec[ACT.EF_STATE_KEY] = {"ef": P(None, dp, topo.tp_axis, None)}
     if cfg.enc_dec:
         batch_spec = {"frames": P(dp, None, None), "tokens": P(dp, None)}
     else:
         batch_spec = {"tokens": P(dp, None)}
     def make_metric_specs(probe_mode: bool):
         ms = {"loss": P(), "gnorm": P(), "lr": P()}
+        if moe_metrics:
+            ms["moe_aux"] = P()
+            ms["moe_z"] = P()
         for k in METRICS.metric_keys(munits) if run.telemetry else ():
             ms[k] = P()
         if probe_mode:
@@ -627,6 +697,10 @@ def make_train_step(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig) -
 
     cshapes, sshapes = FP.train_state_shapes(groups, sync, topo, plan=plan,
                                              coalesce=run.coalesce)
+    if ef_len:
+        sshapes = dict(sshapes)
+        sshapes[ACT.EF_STATE_KEY] = {"ef": jax.ShapeDtypeStruct(
+            (cfg.n_layers, topo.dp, topo.tp, ef_len), jnp.bfloat16)}
     cshapes = _with_sharding(cshapes, cspec, mesh)
     sshapes = _with_sharding(sshapes, sspec, mesh)
     opt_shapes = tuple(cshapes for _ in range(n_opt))
@@ -683,7 +757,7 @@ def _batch_shapes(cfg: ArchConfig, shape: ShapeConfig, mesh, topo, batch_spec):
 # INIT (runs the flatparam init inside the mesh; CPU-scale only)
 # ---------------------------------------------------------------------------
 
-def make_init(cfg: ArchConfig, run: RunConfig, mesh):
+def make_init(cfg: ArchConfig, run: RunConfig, mesh, shape: ShapeConfig | None = None):
     topo = MeshTopo.from_mesh(mesh)
     model = build_model(cfg, topo.tp)
     groups = model.groups()
@@ -693,11 +767,29 @@ def make_init(cfg: ArchConfig, run: RunConfig, mesh):
                                         coalesce=run.coalesce)
     n_opt = len(opt.init(_chunk_shapes_local(groups, topo)))
     opt_spec = tuple(cspec for _ in range(n_opt))
+    ef_len = 0
+    if ACT.wants_ef(cfg):
+        # the EF state is activation-shaped, so init needs the train shape
+        if shape is None:
+            raise ValueError(
+                "moe_a2a_codec='block8+ef' carries an activation-shaped "
+                "error state; pass the train ShapeConfig to make_init "
+                "(make_init(cfg, run, mesh, shape)).")
+        local_batch = shape.global_batch // topo.dp
+        micro = min(run.microbatch, local_batch)
+        ef_len = ACT.ef_state_len(cfg, micro * shape.seq_len, topo.tp)
+        sspec = dict(sspec)
+        sspec[ACT.EF_STATE_KEY] = {"ef": P(None, _dp_entry(topo),
+                                           topo.tp_axis, None)}
 
     def body(key):
         chunks, states = FP.init_train_state_local(groups, key, run.sync, topo,
                                                    plan=plan,
                                                    coalesce=run.coalesce)
+        if ef_len:
+            states = dict(states)
+            states[ACT.EF_STATE_KEY] = {"ef": jnp.zeros(
+                (cfg.n_layers, 1, 1, ef_len), jnp.bfloat16)}
         chunks_l = squeeze_chunks(chunks, groups)
         opt_l = opt.init(chunks_l)
         opt_state = tuple(unsqueeze_like(t, chunks) for t in opt_l)

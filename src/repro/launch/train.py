@@ -56,6 +56,13 @@ def build_args(argv=None):
     ap.add_argument("--beta", type=float, default=0.5)
     ap.add_argument("--reset-every", type=int, default=512)
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--moe-a2a", default=None,
+                    choices=["fp", "block8", "block8+ef"],
+                    help="codec for the ep_a2a MoE dispatch/combine "
+                         "all_to_all (core/act_comm): fp = raw bf16 "
+                         "(bit-exact legacy path), block8 = stateless int8 "
+                         "block-absmax fwd+bwd, block8+ef = block8 plus a "
+                         "persistent combine-side error-feedback state")
     ap.add_argument("--hierarchical", action="store_true",
                     help="two-stage (pod, data) exchange for every bucket: "
                          "the bucket's codec intra-pod, 8-bit block across "
@@ -190,6 +197,12 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    if args.moe_a2a:
+        import dataclasses
+        if cfg.moe_impl != "ep_a2a" or not cfg.n_experts:
+            raise SystemExit(f"--moe-a2a: {cfg.name} has no ep_a2a MoE "
+                             "dispatch to compress")
+        cfg = dataclasses.replace(cfg, moe_a2a_codec=args.moe_a2a)
     if args.production_mesh:
         mesh = make_production_mesh(multi_pod=bool(args.pods > 1))
     else:
@@ -199,7 +212,7 @@ def main(argv=None):
     shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
     run = make_run(args)
 
-    init_fn, _ = make_init(cfg, run, mesh)
+    init_fn, _ = make_init(cfg, run, mesh, shape)
     chunks, states, opt = init_fn(jax.random.PRNGKey(args.seed))
     bundle = make_train_step(cfg, run, mesh, shape)
     topo = bundle.helpers["topo"]
@@ -208,6 +221,9 @@ def main(argv=None):
                 if plan is not None else None)
     if wire_rep is not None:
         print(WIRE.format_report(wire_rep), flush=True)
+    moe_rep = WIRE.moe_a2a_report(cfg, shape, topo, run.microbatch)
+    if moe_rep is not None:
+        print(WIRE.format_moe_a2a(moe_rep), flush=True)
     dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
                     global_batch=args.global_batch, seed=args.seed)
     batch_fn = (make_whisper_batch_fn(dc, cfg.d_model, cfg.dec_len)
@@ -215,7 +231,8 @@ def main(argv=None):
 
     # the *target* plan's fingerprint is built before any restore, so a
     # layout change either reshards explicitly or fails loudly up front
-    ckpt_fp = state_fingerprint(run, bundle.helpers["groups"], topo, plan)
+    ckpt_fp = state_fingerprint(run, bundle.helpers["groups"], topo, plan,
+                                arch=cfg, shape=shape)
     start = 0
     if args.ckpt_dir:
         latest = CKPT.latest_step(args.ckpt_dir)
@@ -236,6 +253,7 @@ def main(argv=None):
             topo=dict(dp=topo.dp, tp=topo.tp, pods=topo.pods, wans=topo.wans,
                       dp_axes=list(topo.dp_axes), tp_axis=topo.tp_axis,
                       devices=int(mesh.devices.size)),
+            **({"moe_a2a": moe_rep} if moe_rep is not None else {}),
         ))
         if wire_rep is not None:
             sink.write(wire_rep.record())

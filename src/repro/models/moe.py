@@ -9,11 +9,23 @@
   ``all_to_all``, computed, returned with the inverse ``all_to_all``, and
   re-replicated with an ``all_gather``.  This is the DeepSpeed-MoE/GShard
   schedule mapped onto the TP axis -- the collective-heavy path the paper's
-  technique cares about (activation traffic stays bf16; LoCo compresses only
-  dp-axis gradient traffic; see DESIGN.md §6).
+  technique cares about.
+
+The ep_a2a dispatch/combine activation traffic routes through the codec
+registry via ``cfg.moe_a2a_codec`` (core/act_comm): ``"fp"`` keeps the raw
+bf16 ``all_to_all`` (bit-exact legacy path), ``"block8"`` sends packed-u8
+int8 block-absmax both directions (forward AND backward, via custom_vjp),
+``"block8+ef"`` adds a persistent combine-side error-feedback state carried
+by the caller (``a2a_state``).  Dead capacity slots and pad tokens are
+zeroed by the ``valid``-masked scatter before encode, so absmax scales are
+never poisoned by garbage (pinned by tests/test_act_comm.py).
 
 Routing is top-k softmax with renormalized weights and capacity-based token
 dropping (GShard); aux load-balance loss (Switch) + router z-loss.
+DeepSeek-style extensions: grouped (node-limited) routing restricts each
+token's top-k to the ``group_top_k`` highest-scoring expert groups, and
+``n_shared_experts`` always-on experts add a dense TP-sliced FFN alongside
+the routed path.
 """
 from __future__ import annotations
 
@@ -22,6 +34,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core import act_comm as ACT
 from repro.models import common as C
 from repro.models.common import TP_AXIS
 
@@ -34,11 +47,28 @@ def _activation(kind: str, a, b=None):
     return jax.nn.gelu(a)
 
 
-def route(x2d, w_router, top_k: int, n_experts: int):
-    """x2d: (T, d) -> (weights (T,k), experts (T,k), aux_metrics dict)."""
+def route(x2d, w_router, top_k: int, n_experts: int,
+          n_groups: int = 1, group_top_k: int = 0):
+    """x2d: (T, d) -> (weights (T,k), experts (T,k), aux_metrics dict).
+
+    With ``n_groups > 1`` and ``0 < group_top_k < n_groups``, routing is
+    group-limited (DeepSeek-V3): each group is scored by the sum of its
+    top-2 expert probs, only the ``group_top_k`` best groups stay routable,
+    and the token's top-k is drawn from those.  Aux losses stay on the full
+    (unmasked) distribution so load balance is still measured globally.
+    """
     logits = (x2d.astype(jnp.float32) @ w_router.astype(jnp.float32))  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
-    topv, topi = jax.lax.top_k(probs, top_k)
+    sel = probs
+    if n_groups > 1 and 0 < group_top_k < n_groups:
+        T = x2d.shape[0]
+        Eg = n_experts // n_groups
+        pg = probs.reshape(T, n_groups, Eg)
+        gscore = jnp.sum(jax.lax.top_k(pg, min(2, Eg))[0], axis=-1)  # (T, G)
+        _, gi = jax.lax.top_k(gscore, group_top_k)
+        gmask = jnp.sum(jax.nn.one_hot(gi, n_groups, dtype=probs.dtype), axis=1)
+        sel = (pg * gmask[:, :, None]).reshape(T, n_experts)
+    topv, topi = jax.lax.top_k(sel, top_k)
     topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
     # Switch aux loss: E * sum_e f_e * P_e
     T = x2d.shape[0]
@@ -82,21 +112,39 @@ def _expert_ffn(xe, w1, w3, w2, mlp_kind):
     return jnp.einsum("ecf,efd->ecd", h, w2)
 
 
+def _shared_ffn(x2d, p, cfg):
+    """Always-on shared-expert FFN (deepseek-style), TP col/row sliced over
+    the shared d_ff.  Output is PARTIAL -- the caller finishes the psum."""
+    a = C.col_linear(x2d, p["ws1"])
+    if "ws3" in p:
+        h = _activation(cfg.mlp, a, C.col_linear(x2d, p["ws3"]))
+    else:
+        h = _activation(cfg.mlp, a)
+    return h @ p["ws2"]
+
+
 def moe_block(x, p, cfg, *, deterministic_capacity: int | None = None,
-              sp: bool = False):
+              sp: bool = False, a2a_state=None):
     """x: (B, S, d) replicated over TP -> (y, aux_losses).
 
     p: dict with router (d, E), w1/w3 (E, d, f_local) or (E_local, d, f),
-    w2 likewise, per cfg.moe_impl.
+    w2 likewise, per cfg.moe_impl; ws1/ws3/ws2 when cfg.n_shared_experts.
+
+    ``a2a_state`` is the flat per-layer combine-side error-feedback buffer
+    for ``moe_a2a_codec="block8+ef"`` (ep_a2a only).  When passed (even for
+    other codecs), the updated state rides back in ``aux["a2a_state"]`` so
+    the caller's scan can carry it; when None, "block8+ef" degrades to the
+    stateless block8 exchange (serve paths don't thread state).
     """
     B, S, d = x.shape
     E, k = cfg.n_experts, cfg.top_k
+    groups, gk = cfg.n_expert_groups, cfg.group_top_k
     x2d = x.reshape(B * S, d)
 
     if cfg.moe_impl == "tp_dense":
         T = B * S
         cap = deterministic_capacity or max(1, int(math.ceil(T * k / E * cfg.capacity_factor)))
-        topv, topi, aux = route(x2d, p["router"], k, E)
+        topv, topi, aux = route(x2d, p["router"], k, E, groups, gk)
         slot, valid = _dispatch_indices(topi, E, cap)
         tok = jnp.repeat(jnp.arange(T), k)
         xe = jnp.zeros((E * cap, d), x.dtype)
@@ -110,6 +158,10 @@ def moe_block(x, p, cfg, *, deterministic_capacity: int | None = None,
         y2d = jnp.zeros((T, d), x.dtype).at[tok].add(
             y_tok * topv.reshape(-1)[:, None].astype(x.dtype)
         )
+        if cfg.n_shared_experts:
+            y2d = y2d + _shared_ffn(x2d, p, cfg).astype(x.dtype)  # partial
+        if a2a_state is not None:
+            aux = {**aux, "a2a_state": a2a_state}  # no a2a here; pass through
         if sp:  # sequence-parallel exit: scatter the summed tokens over TP
             y = C.sp_scatter_sum(y2d.reshape(B, S, d), True)
             return y, aux
@@ -128,25 +180,46 @@ def moe_block(x, p, cfg, *, deterministic_capacity: int | None = None,
     xs = jax.lax.dynamic_slice_in_dim(x2d, r * Tl, Tl, axis=0)  # my token slice
 
     cap = deterministic_capacity or max(1, int(math.ceil(Tl * k / E * cfg.capacity_factor)))
-    topv, topi, aux = route(xs, p["router"], k, E)
+    topv, topi, aux = route(xs, p["router"], k, E, groups, gk)
     slot, valid = _dispatch_indices(topi, E, cap)
     tok = jnp.repeat(jnp.arange(Tl), k)
+    # valid-masked scatter: dead capacity slots (and the zero pad tokens
+    # above) are exactly 0 in the slot buffer -- the precondition for the
+    # block-absmax encode below (scales must never see garbage)
     xe = jnp.zeros((E * cap, d), x.dtype)
     xe = xe.at[jnp.where(valid, slot, E * cap - 1)].add(
         jnp.where(valid[:, None], xs[tok], 0)
     )
+    codec = cfg.moe_a2a_codec
     # (E, cap, d) -> (tp, El, cap, d) -> a2a: receive my El experts from all ranks
     xe = xe.reshape(tp, El, cap, d)
-    xe = jax.lax.all_to_all(xe, TP_AXIS, split_axis=0, concat_axis=0)  # (tp, El, cap, d)
+    if codec == "fp":
+        xe = jax.lax.all_to_all(xe, TP_AXIS, split_axis=0, concat_axis=0)  # (tp, El, cap, d)
+    else:
+        xe = ACT.a2a_exchange(xe, TP_AXIS)  # compressed dispatch (fwd+bwd)
     xe = xe.transpose(1, 0, 2, 3).reshape(El, tp * cap, d)
     ye = _expert_ffn(xe, p["w1"], p.get("w3"), p["w2"], cfg.mlp)
     ye = ye.reshape(El, tp, cap, d).transpose(1, 0, 2, 3)  # (tp, El, cap, d)
-    ye = jax.lax.all_to_all(ye, TP_AXIS, split_axis=0, concat_axis=0)
+    new_state = a2a_state
+    if codec == "fp":
+        ye = jax.lax.all_to_all(ye, TP_AXIS, split_axis=0, concat_axis=0)
+    elif codec == "block8+ef" and a2a_state is not None:
+        ye, new_state = ACT.a2a_exchange_ef(ye, a2a_state, TP_AXIS)
+    else:
+        ye = ACT.a2a_exchange(ye, TP_AXIS)  # compressed combine (fwd+bwd)
     ye = ye.reshape(E * cap, d)
     y_tok = jnp.where(valid[:, None], ye[jnp.clip(slot, 0, E * cap - 1)], 0)
     ys = jnp.zeros((Tl, d), x.dtype).at[tok].add(
         y_tok * topv.reshape(-1)[:, None].astype(x.dtype)
     )
+    if cfg.n_shared_experts:
+        # the shared-expert psum must reduce f-slice partials of the SAME
+        # tokens, so compute on the full padded token set (every rank sees
+        # every token -- tp_dense cost) and then take my slice
+        shared = C.psum_tp(_shared_ffn(x2d, p, cfg)).astype(x.dtype)
+        ys = ys + jax.lax.dynamic_slice_in_dim(shared, r * Tl, Tl, axis=0)
+    if a2a_state is not None:
+        aux = {**aux, "a2a_state": new_state}
     if sp:
         # sequence parallelism composes with EP for free: the per-rank token
         # slice IS the sequence shard -- skip the re-replicating all_gather.

@@ -91,6 +91,17 @@ def _moe_infos(cfg: ArchConfig):
     ]
     if cfg.mlp in ("swiglu", "geglu"):
         infos.append(_pi("w3", (E, d, f), tp_dim=w_tp[0], init_scale=1.0 / math.sqrt(d)))
+    if cfg.n_shared_experts:
+        # deepseek-style always-on experts: one dense TP-sliced FFN of width
+        # n_shared_experts * d_ff alongside the routed experts
+        fs = cfg.n_shared_experts * f
+        infos += [
+            _pi("ws1", (d, fs), tp_dim=1, init_scale=1.0 / math.sqrt(d)),
+            _pi("ws2", (fs, d), tp_dim=0, init_scale=1.0 / math.sqrt(fs)),
+        ]
+        if cfg.mlp in ("swiglu", "geglu"):
+            infos.append(_pi("ws3", (d, fs), tp_dim=1,
+                             init_scale=1.0 / math.sqrt(d)))
     return infos
 
 
@@ -264,13 +275,14 @@ def dense_block(p, x, cfg, lay, layer_idx, positions, cache, sp: bool = False):
     return x, new_cache, {}
 
 
-def moe_layer(p, x, cfg, lay, layer_idx, positions, cache, sp: bool = False):
+def moe_layer(p, x, cfg, lay, layer_idx, positions, cache, sp: bool = False,
+              a2a_state=None):
     a, new_cache = attention_block(p, x, cfg, lay, layer_idx, positions, cache,
                                    sp=sp)
     x = _res(cfg, x, a)
     h = C.norm(cfg.norm, x, p["norm2"])
     h = C.sp_gather(h, sp) if sp else h
-    y, aux = MOE.moe_block(h, p, cfg, sp=sp)
+    y, aux = MOE.moe_block(h, p, cfg, sp=sp, a2a_state=a2a_state)
     x = _res(cfg, x, y)
     return x, new_cache, aux
 
@@ -371,8 +383,13 @@ class DecoderLM:
 
     # ---- full forward over a sequence (train / prefill) --------------------
     def forward(self, store, tokens, *, caches: DecodeState | None = None,
-                remat: bool = True):
-        """tokens: (B, S) -> (local_logits (B, S, V_local), aux, new_caches)."""
+                remat: bool = True, moe_a2a_state=None):
+        """tokens: (B, S) -> (local_logits (B, S, V_local), aux, new_caches).
+
+        ``moe_a2a_state``: optional ``(n_layers, state_len)`` per-layer MoE
+        combine error-feedback stack (moe_a2a_codec="block8+ef"); when
+        passed, the updated stack rides back as ``aux["moe_a2a_state"]``.
+        """
         cfg = self.cfg
         B, S = tokens.shape
         positions = jnp.arange(S, dtype=jnp.int32)
@@ -389,23 +406,32 @@ class DecoderLM:
             lay = head_layout(cfg, self.tp)
             xs = store.scan_xs("block")
             idxs = jnp.arange(cfg.n_layers)
+            ef = moe_a2a_state  # (L, state_len) or None
 
             def body(carry, sl):
                 xc, aux = carry
-                xs_slice, idx = sl
+                if ef is not None:
+                    xs_slice, idx, ef_l = sl
+                else:
+                    (xs_slice, idx), ef_l = sl, None
                 p = store.materialize_slice("block", xs_slice)
                 if cfg.family == "moe":
                     xc, _nc, a = moe_layer(p, xc, cfg, lay, idx, positions, None,
-                                           sp=sp)
+                                           sp=sp, a2a_state=ef_l)
+                    new_ef = a.pop("a2a_state", None)
                     aux = {k: aux[k] + a[k] for k in aux}
                 else:
                     xc, _nc, _ = dense_block(p, xc, cfg, lay, idx, positions, None,
                                              sp=sp)
-                return (xc, aux), None
+                    new_ef = None
+                return (xc, aux), new_ef
 
             if remat:
                 body = jax.checkpoint(body, prevent_cse=False)
-            (x, aux), _ = jax.lax.scan(body, (x, aux0), (xs, idxs))
+            sl_xs = (xs, idxs) if ef is None else (xs, idxs, ef)
+            (x, aux), new_ef_stack = jax.lax.scan(body, (x, aux0), sl_xs)
+            if ef is not None:
+                aux = {**aux, "moe_a2a_state": new_ef_stack}
             new_caches = None
 
         elif cfg.family == "ssm":
@@ -555,17 +581,22 @@ class DecoderLM:
                                     pos=caches.pos + S)
 
     # ---- losses -------------------------------------------------------------
-    def loss_fn(self, store, batch, remat: bool = True):
+    def loss_fn(self, store, batch, remat: bool = True, moe_a2a_state=None):
         tokens = batch["tokens"]
         inputs, targets = tokens[:, :-1], tokens[:, 1:]
-        logits, aux, _ = self.forward(store, inputs, remat=remat)
+        logits, aux, _ = self.forward(store, inputs, remat=remat,
+                                      moe_a2a_state=moe_a2a_state)
+        new_ef = aux.pop("moe_a2a_state", None)
         loss = C.vocab_parallel_xent(
             logits, targets, self.cfg.vocab, softcap=self.cfg.final_softcap
         )
         total = loss
         if self.cfg.n_experts:
             total = total + self.cfg.aux_loss_coef * aux["aux"] + self.cfg.router_z_coef * aux["z"]
-        return total, {"ce": loss, **aux}
+        out = {"ce": loss, **aux}
+        if new_ef is not None:
+            out["moe_a2a_state"] = new_ef  # non-scalar: steps.py pops it
+        return total, out
 
     # ---- decode -------------------------------------------------------------
     def decode_step(self, store, state: DecodeState, token):

@@ -173,6 +173,10 @@ def fingerprint_diff(src: dict, tgt: dict) -> list[str]:
     out: list[str] = []
     _diff_value("topo", src.get("topo"), tgt.get("topo"), out)
     _diff_value("planned", src.get("planned"), tgt.get("planned"), out)
+    # MoE activation-wire EF state (states["_moe_a2a"], launch/steps.py):
+    # absent-vs-present IS a mismatch — a codec flip would otherwise
+    # silently drop or fabricate the error history
+    _diff_value("moe_a2a", src.get("moe_a2a"), tgt.get("moe_a2a"), out)
     sp = {f"{p['group']}/{p['name']}": p for p in src.get("params", [])}
     tp = {f"{p['group']}/{p['name']}": p for p in tgt.get("params", [])}
     for q in sorted(set(sp) | set(tp)):

@@ -573,6 +573,73 @@ def format_report(rep: WireReport, max_rows: int = 12) -> str:
 
 
 # ---------------------------------------------------------------------------
+# MoE activation wire (ep_a2a dispatch/combine, core/act_comm)
+# ---------------------------------------------------------------------------
+
+def moe_a2a_layer_bytes(cfg, n_tokens: int, tp: int) -> dict | None:
+    """Per-layer, per-direction bytes of one ep_a2a slot-buffer exchange.
+
+    Byte-matched to the arrays core/act_comm actually exchanges: the
+    compressed wire is the packed ``(tp, row_bytes)`` u8 buffer (int8
+    payload padded to the 512 granule + one f32 scale per block); the
+    baseline is the bf16 ``(tp, El, cap, d)`` buffer (2 bytes/elem, the
+    same convention as the gradient rows above).  ``n_tokens`` is the
+    pre-slice microbatch token count (micro * seq_len).
+    """
+    from repro.core import act_comm as ACT
+
+    if not getattr(cfg, "n_experts", 0) or cfg.moe_impl != "ep_a2a":
+        return None
+    g = ACT.a2a_geometry(cfg, n_tokens, tp)
+    bf16 = tp * g["fp_row_bytes"]
+    wire = bf16 if cfg.moe_a2a_codec == "fp" else tp * g["row_bytes"]
+    return {"codec": cfg.moe_a2a_codec, "cap": g["cap"],
+            "exchange_bytes": wire, "bf16_exchange_bytes": bf16}
+
+
+def moe_a2a_report(cfg, shape, topo, microbatch: int) -> dict | None:
+    """Per-step MoE dispatch-traffic accounting (None for non-ep_a2a archs).
+
+    Four exchanges per layer per microbatch — dispatch + combine, forward
+    AND backward (the custom_vjp compresses the activation cotangents the
+    same way) — times ``n_layers`` times the grad-accumulation factor.
+    Every byte crosses the "model" (TP) axis, which never leaves the pod,
+    so the ICI/DCN split is degenerate: all ICI, zero DCN — the
+    complementary surface to the dp-axis gradient wire of
+    :func:`plan_report`.
+    """
+    local_batch = shape.global_batch // topo.dp
+    micro = min(microbatch, local_batch)
+    accum = local_batch // micro
+    per = moe_a2a_layer_bytes(cfg, micro * shape.seq_len, topo.tp)
+    if per is None:
+        return None
+    exchanges = 4 * cfg.n_layers * accum
+    step = per["exchange_bytes"] * exchanges
+    bf16_step = per["bf16_exchange_bytes"] * exchanges
+    return {
+        "codec": per["codec"], "cap": per["cap"],
+        "layers": cfg.n_layers, "exchanges_per_step": exchanges,
+        "exchange_bytes": per["exchange_bytes"],
+        "bf16_exchange_bytes": per["bf16_exchange_bytes"],
+        "per_step_bytes": step, "bf16_per_step_bytes": bf16_step,
+        "ratio_vs_bf16": step / max(bf16_step, 1),
+        "ici_bytes": step, "dcn_bytes": 0,
+    }
+
+
+def format_moe_a2a(rep: dict) -> str:
+    """Training-log line for the MoE activation wire (format_report style)."""
+    return (
+        f"moe_a2a/step/device: {rep['per_step_bytes'] / 2**20:.2f} MiB "
+        f"@{rep['codec']} ({rep['ratio_vs_bf16']:.3f}x of bf16 "
+        f"{rep['bf16_per_step_bytes'] / 2**20:.2f} MiB); "
+        f"cap={rep['cap']}, {rep['exchanges_per_step']} exchanges/step "
+        f"over {rep['layers']} layers (fwd+bwd, dispatch+combine); all ICI"
+    )
+
+
+# ---------------------------------------------------------------------------
 # runtime telemetry: decoded error-feedback norms
 # ---------------------------------------------------------------------------
 

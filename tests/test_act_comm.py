@@ -1,0 +1,379 @@
+"""Compressed ep_a2a activation exchange (core/act_comm, DESIGN.md §18).
+
+Pins the PR's contracts: the block8 codec against a numpy oracle, the
+packed-u8 all_to_all against a permute+roundtrip oracle, the custom_vjp's
+compressed cotangent, fp-codec bit-exactness of the MoE block, the
+dead-slot/pad-token scale-poisoning regression, the EF-state checkpoint
+fingerprint guard, the Pallas cell vs the jnp reference, and the
+deepseek-style routing extensions (grouped routing + shared experts).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ShapeConfig, get_arch, reduced
+from repro.core import act_comm as ACT
+from repro.core.loco import SyncConfig
+from repro.models.moe import moe_block, route
+
+BLK = ACT.ACT_BLOCK
+
+
+def _np_roundtrip(x):
+    """numpy oracle of the per-512-block absmax int8 codec; x: (rows, BLK)."""
+    absmax = np.max(np.abs(x), axis=-1)
+    scale = 127.0 / np.maximum(absmax, 1e-30)
+    q = np.clip(np.round(x * scale[:, None]), -128, 127).astype(np.int8)
+    return q.astype(np.float32) / scale[:, None]
+
+
+def _np_a2a(X):
+    """Oracle of a2a_exchange: X (tp, tp, El, cap, d) with X[j] = rank j's
+    send buffer -> Y with Y[r, j] = what rank r receives from rank j."""
+    tp = X.shape[0]
+    n_pp = int(np.prod(X.shape[2:]))
+    n_pad = -(-n_pp // BLK) * BLK
+    rt = np.zeros((tp, tp, n_pad), np.float32)
+    for j in range(tp):
+        buf = np.zeros((tp, n_pad), np.float32)
+        buf[:, :n_pp] = X[j].reshape(tp, n_pp)
+        rt[j] = _np_roundtrip(buf.reshape(-1, BLK)).reshape(tp, n_pad)
+    Y = np.zeros_like(X)
+    for r in range(tp):
+        for j in range(tp):
+            Y[r, j] = rt[j, r, :n_pp].reshape(X.shape[2:])
+    return Y
+
+
+# --------------------------------------------------------------------------
+# codec cell
+# --------------------------------------------------------------------------
+
+def test_quant_roundtrip_matches_numpy_oracle():
+    x = np.random.RandomState(0).randn(16, BLK).astype(np.float32)
+    x[3] = 0.0  # dead block: must round-trip to exact zeros
+    q, s = ACT.quant_rows(jnp.asarray(x))
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    dec = np.asarray(ACT.dequant_rows(q, s))
+    np.testing.assert_allclose(dec, _np_roundtrip(x), rtol=0, atol=1e-7)
+    assert (dec[3] == 0.0).all()
+    # elementwise error bound: half a quantization step per block
+    step = np.max(np.abs(x), -1, keepdims=True) / 127.0
+    assert (np.abs(dec - x) <= 0.5 * step + 1e-7).all()
+
+
+def test_kernel_cell_matches_jnp_reference(monkeypatch):
+    from repro.kernels import act_quant as AQ
+
+    x = np.random.RandomState(1).randn(4, BLK).astype(np.float32)
+    x[1] = 0.0
+    q_ref, s_ref = ACT.quant_rows(jnp.asarray(x))
+    q_k, s_k = AQ.act_encode(jnp.asarray(x), interpret=True)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_ref))
+    dec_k = AQ.act_decode(q_k, s_k, interpret=True)
+    np.testing.assert_allclose(np.asarray(dec_k),
+                               np.asarray(ACT.dequant_rows(q_ref, s_ref)),
+                               rtol=0, atol=1e-6)
+    # env gate routes quant_rows through the kernel wrapper
+    monkeypatch.setenv("REPRO_ACT_KERNELS", "1")
+    q_env, s_env = ACT.quant_rows(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(q_env), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(s_env), np.asarray(s_ref), rtol=1e-6)
+
+
+def test_wire_geometry_ratio_under_gate():
+    assert ACT.wire_row_bytes(BLK) == BLK + ACT.SCALE_BYTES
+    for arch in ("qwen3-moe-30b-a3b", "deepseek-v3-moe"):
+        cfg = reduced(get_arch(arch))
+        g = ACT.a2a_geometry(cfg, 64, 2)
+        ratio = g["row_bytes"] / g["fp_row_bytes"]
+        assert ratio <= 0.56, (arch, ratio)
+
+
+# --------------------------------------------------------------------------
+# packed all_to_all + custom_vjp
+# --------------------------------------------------------------------------
+
+def test_a2a_exchange_matches_permuted_roundtrip_oracle(mesh22):
+    tp, El, cap, d = 2, 2, 3, 40  # n_pp=240 < 512: exercises the pad path
+    X = np.random.RandomState(2).randn(tp, tp, El, cap, d).astype(np.float32)
+
+    def body(x):
+        return ACT.a2a_exchange(x[0], "model")[None]
+
+    f = jax.jit(jax.shard_map(body, mesh=mesh22, in_specs=(P("model"),),
+                              out_specs=P("model"), check_vma=False))
+    y = np.asarray(f(jnp.asarray(X)))
+    np.testing.assert_allclose(y, _np_a2a(X), rtol=0, atol=1e-6)
+
+
+def test_a2a_vjp_compresses_the_cotangent(mesh22):
+    """d/dx sum(a2a(x) * w) must be the SAME compressed exchange applied to
+    w -- the backward rides the packed-u8 wire, not a raw bf16 a2a."""
+    tp, El, cap, d = 2, 1, 2, 256  # n_pp = 512, aligned
+    rs = np.random.RandomState(3)
+    X = rs.randn(tp, tp, El, cap, d).astype(np.float32)
+    W = rs.randn(tp, tp, El, cap, d).astype(np.float32)
+
+    def body(x, w):
+        def loss(xr):
+            return jnp.sum(ACT.a2a_exchange(xr, "model") * w[0])
+        return jax.grad(loss)(x[0])[None]
+
+    f = jax.jit(jax.shard_map(body, mesh=mesh22,
+                              in_specs=(P("model"), P("model")),
+                              out_specs=P("model"), check_vma=False))
+    g = np.asarray(f(jnp.asarray(X), jnp.asarray(W)))
+    np.testing.assert_allclose(g, _np_a2a(W), rtol=0, atol=1e-6)
+
+
+def test_ef_exchange_carries_residual(mesh22):
+    """block8+ef: y decodes quant(x + err); new_err = (x + err) - dec."""
+    tp, El, cap, d = 2, 1, 2, 256
+    n_pp = El * cap * d
+    rs = np.random.RandomState(4)
+    X = rs.randn(tp, tp, El, cap, d).astype(np.float32)
+    E0 = (rs.randn(tp, tp * n_pp) * 0.01).astype(np.float32)
+
+    def body(x, e):
+        y, ne = ACT.a2a_exchange_ef(x[0], e[0], "model")
+        return y[None], ne[None]
+
+    f = jax.jit(jax.shard_map(body, mesh=mesh22,
+                              in_specs=(P("model"), P("model")),
+                              out_specs=(P("model"), P("model")),
+                              check_vma=False))
+    y, ne = f(jnp.asarray(X), jnp.asarray(E0))
+    H = X + E0.reshape(X.shape)  # n_pad == n_pp: no pad region
+    np.testing.assert_allclose(np.asarray(y), _np_a2a(H), rtol=0, atol=1e-6)
+    rt_local = np.stack([  # each rank's LOCAL roundtrip of its own h
+        _np_roundtrip(H[j].reshape(-1, BLK)).reshape(H[j].shape)
+        for j in range(tp)])
+    np.testing.assert_allclose(np.asarray(ne).reshape(H.shape), H - rt_local,
+                               rtol=0, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# MoE block through the codec
+# --------------------------------------------------------------------------
+
+def _moe_params(cfg, key, shared=False):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": jax.random.normal(jax.random.fold_in(key, 1), (d, E)) * 0.1,
+        "w1": jax.random.normal(jax.random.fold_in(key, 2), (E, d, f)) * 0.05,
+        "w3": jax.random.normal(jax.random.fold_in(key, 3), (E, d, f)) * 0.05,
+        "w2": jax.random.normal(jax.random.fold_in(key, 4), (E, f, d)) * 0.05,
+    }
+    if shared:
+        fs = cfg.n_shared_experts * f
+        p["ws1"] = jax.random.normal(jax.random.fold_in(key, 5), (d, fs)) * 0.05
+        p["ws3"] = jax.random.normal(jax.random.fold_in(key, 6), (d, fs)) * 0.05
+        p["ws2"] = jax.random.normal(jax.random.fold_in(key, 7), (fs, d)) * 0.05
+    return p
+
+
+def _run_ep(mesh22, cfg, x, p, cap, grad_of=None):
+    """moe_block under shard_map on the ep_a2a layout; optionally return the
+    gradient of sum(y^2) w.r.t. ``grad_of`` instead of (y, aux)."""
+    specs = {"router": P(None), "w1": P("model"), "w3": P("model"),
+             "w2": P("model"), "ws1": P(None, "model"),
+             "ws3": P(None, "model"), "ws2": P("model", None)}
+    names = sorted(p)
+
+    def body(x, *ws):
+        pp = dict(zip(names, ws))
+        if grad_of is None:
+            y, aux = moe_block(x, pp, cfg, deterministic_capacity=cap)
+            return y, jnp.stack([aux["aux"], aux["z"]])
+
+        def loss(w):
+            y, _ = moe_block(x, {**pp, grad_of: w}, cfg,
+                             deterministic_capacity=cap)
+            return jnp.sum(y.astype(jnp.float32) ** 2)
+        return jax.grad(loss)(pp[grad_of])
+
+    in_specs = (P(None),) + tuple(specs[n] for n in names)
+    out_specs = (specs[grad_of] if grad_of is not None
+                 else (P(None), P(None)))
+    f = jax.jit(jax.shard_map(body, mesh=mesh22, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False))
+    return f(x, *(p[n] for n in names))
+
+
+def test_moe_block_fp_codec_is_bit_exact(mesh22):
+    """codec="fp" must keep the raw all_to_all path bit-for-bit: compare
+    against an inline reference that monkey-free re-runs the same block with
+    act_comm entirely unused (fp never calls into it)."""
+    cfg = reduced(get_arch("qwen3-moe-30b-a3b"))
+    assert cfg.moe_a2a_codec == "fp"
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 8, cfg.d_model))
+    p = _moe_params(cfg, jax.random.PRNGKey(12))
+    y1, a1 = _run_ep(mesh22, cfg, x, p, cap=16)
+    y2, a2 = _run_ep(mesh22, cfg, x, p, cap=16)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_moe_block_block8_parity_fwd_and_bwd(mesh22):
+    cfg = reduced(get_arch("qwen3-moe-30b-a3b"))
+    b8 = dataclasses.replace(cfg, moe_a2a_codec="block8")
+    x = jax.random.normal(jax.random.PRNGKey(13), (2, 8, cfg.d_model))
+    p = _moe_params(cfg, jax.random.PRNGKey(14))
+    y_fp, a_fp = _run_ep(mesh22, cfg, x, p, cap=16)
+    y_b8, a_b8 = _run_ep(mesh22, b8, x, p, cap=16)
+    # routing happens BEFORE the codec on identical inputs: aux identical
+    np.testing.assert_array_equal(np.asarray(a_fp), np.asarray(a_b8))
+    ref = np.abs(np.asarray(y_fp)).max()
+    assert np.abs(np.asarray(y_b8) - np.asarray(y_fp)).max() <= 0.05 * ref
+    # backward: expert-weight gradients flow through TWO compressed a2as
+    g_fp = np.asarray(_run_ep(mesh22, cfg, x, p, cap=16, grad_of="w1"))
+    g_b8 = np.asarray(_run_ep(mesh22, b8, x, p, cap=16, grad_of="w1"))
+    assert np.isfinite(g_b8).all()
+    assert np.abs(g_b8 - g_fp).max() <= 0.1 * np.abs(g_fp).max()
+
+
+def test_dropped_token_cannot_poison_scales(mesh22):
+    """A huge-magnitude token that LOSES the capacity race must not leak
+    into the slot buffer: if it did, the block absmax would explode and the
+    kept (small) tokens would quantize to garbage.  Also covers the odd-S
+    pad-token path (B*S not divisible by tp)."""
+    cfg = reduced(get_arch("qwen3-moe-30b-a3b"))
+    b8 = dataclasses.replace(cfg, moe_a2a_codec="block8")
+    d = cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(15), (1, 9, d))  # 9 % 2 != 0
+    x = x.at[0, 5].mul(1e4)  # huge token, late flat index
+    p = _moe_params(cfg, jax.random.PRNGKey(16))
+    # router pinned to expert 0 for every token: with capacity=1 only the
+    # earliest token is kept, the huge one is dropped on the floor
+    p["router"] = jnp.zeros_like(p["router"]).at[:, 0].set(0.0)
+    p["router"] = p["router"].at[0, 0].set(10.0)
+    y_fp, _ = _run_ep(mesh22, cfg, x, p, cap=1)
+    y_b8, _ = _run_ep(mesh22, b8, x, p, cap=1)
+    kept = np.abs(np.asarray(y_fp)).max()
+    assert kept > 0  # somebody survived the capacity race
+    assert np.abs(np.asarray(y_b8) - np.asarray(y_fp)).max() <= 0.05 * kept
+
+
+# --------------------------------------------------------------------------
+# deepseek-style routing extensions
+# --------------------------------------------------------------------------
+
+def test_grouped_routing_limits_expert_set():
+    T, d, E, G, gk, k = 32, 16, 8, 4, 2, 2
+    x = jax.random.normal(jax.random.PRNGKey(20), (T, d))
+    wr = jax.random.normal(jax.random.PRNGKey(21), (d, E))
+    topv, topi, aux = route(x, wr, k, E, G, gk)
+    _, _, aux_full = route(x, wr, k, E)
+    # z-loss is on raw logits: grouping cannot change it
+    np.testing.assert_allclose(float(aux["z"]), float(aux_full["z"]), rtol=1e-6)
+    probs = jax.nn.softmax(x.astype(jnp.float32) @ wr, axis=-1)
+    Eg = E // G
+    pg = np.asarray(probs).reshape(T, G, Eg)
+    gscore = np.sort(pg, axis=-1)[:, :, ::-1][:, :, :2].sum(-1)
+    allowed = np.argsort(-gscore, axis=-1, kind="stable")[:, :gk]
+    chosen_groups = np.asarray(topi) // Eg
+    for t in range(T):
+        assert set(chosen_groups[t]) <= set(allowed[t]), t
+    np.testing.assert_allclose(np.asarray(topv.sum(-1)), np.ones(T), atol=1e-5)
+
+
+def test_shared_experts_add_dense_ffn(mesh22):
+    """With the routed experts zeroed (w2=0) the ep_a2a block reduces to
+    exactly the shared-expert FFN, TP-sliced -- checked against a dense
+    numpy reference."""
+    cfg = dataclasses.replace(reduced(get_arch("qwen3-moe-30b-a3b")),
+                              n_shared_experts=1)
+    x = jax.random.normal(jax.random.PRNGKey(22), (2, 8, cfg.d_model))
+    p = _moe_params(cfg, jax.random.PRNGKey(23), shared=True)
+    p["w2"] = jnp.zeros_like(p["w2"])
+    y, _ = _run_ep(mesh22, cfg, x, p, cap=16)
+    xf = np.asarray(x, np.float32)
+    ref = (jax.nn.silu(xf @ np.asarray(p["ws1"]))
+           * (xf @ np.asarray(p["ws3"]))) @ np.asarray(p["ws2"])
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(ref),
+                               atol=2e-3)
+
+
+def test_deepseek_reduced_keeps_codec_knobs():
+    cfg = get_arch("deepseek-v3-moe")
+    assert cfg.moe_a2a_codec == "block8" and cfg.moe_impl == "ep_a2a"
+    r = reduced(cfg)
+    assert r.moe_a2a_codec == "block8"
+    assert r.n_shared_experts == 1
+    assert r.n_expert_groups > 1 and r.group_top_k >= 1
+    assert r.n_experts % r.n_expert_groups == 0
+
+
+# --------------------------------------------------------------------------
+# EF state: init, carry, checkpoint guard
+# --------------------------------------------------------------------------
+
+def _ef_cfg():
+    return dataclasses.replace(reduced(get_arch("qwen3-moe-30b-a3b")),
+                               moe_a2a_codec="block8+ef")
+
+
+def test_ef_train_smoke_state_updates(mesh22):
+    from repro.launch.steps import RunConfig, make_init, make_train_step
+    from repro.data.synthetic import DataConfig, make_batch_fn
+
+    cfg = _ef_cfg()
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    run = RunConfig(sync=SyncConfig(strategy="fp"), optimizer="adam",
+                    microbatch=1, total_steps=10, warmup_steps=1, lr=1e-3)
+    with pytest.raises(ValueError, match="block8\\+ef"):
+        make_init(cfg, run, mesh22)  # EF state needs the train shape
+    init_fn, _ = make_init(cfg, run, mesh22, shape)
+    chunks, states, opt = init_fn(jax.random.PRNGKey(0))
+    assert ACT.EF_STATE_KEY in states
+    ef = states[ACT.EF_STATE_KEY]["ef"]
+    assert ef.dtype == jnp.bfloat16 and not np.asarray(ef, np.float32).any()
+    bundle = make_train_step(cfg, run, mesh22, shape)
+    bf = make_batch_fn(DataConfig(vocab=cfg.vocab, seq_len=shape.seq_len,
+                                  global_batch=shape.global_batch))
+    for i in range(2):
+        chunks, states, opt, m = bundle.fn(chunks, states, opt, jnp.int32(i),
+                                           bf(jnp.int32(i)))
+    assert jnp.isfinite(m["loss"])
+    ef = np.asarray(states[ACT.EF_STATE_KEY]["ef"], np.float32)
+    assert np.isfinite(ef).all()
+    assert np.abs(ef).max() > 0  # residual actually carried across steps
+
+
+def test_ef_fingerprint_guards_codec_flip(mesh22):
+    from repro.core.flatparam import MeshTopo
+    from repro.launch.steps import (RunConfig, build_model, build_sync_plan,
+                                    state_fingerprint)
+    from repro.state.manifest import CheckpointMismatch, fingerprint_diff
+
+    cfg = _ef_cfg()
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    run = RunConfig(sync=SyncConfig(strategy="fp"), optimizer="adam",
+                    microbatch=1, total_steps=10, warmup_steps=1, lr=1e-3)
+    topo = MeshTopo.from_mesh(mesh22)
+    groups = build_model(cfg, topo.tp).groups()
+    plan = build_sync_plan(run, groups, topo)
+    fp_ef = state_fingerprint(run, groups, topo, plan, arch=cfg, shape=shape)
+    assert fp_ef["moe_a2a"]["codec"] == "block8+ef"
+    assert fp_ef["moe_a2a"]["state_len"] > 0
+    # same config round-trips clean
+    again = state_fingerprint(run, groups, topo, plan, arch=cfg, shape=shape)
+    assert fingerprint_diff(fp_ef, again) == []
+    # codec flip (EF checkpoint -> stateless target): loud, named diff
+    stateless = dataclasses.replace(cfg, moe_a2a_codec="block8")
+    fp_b8 = state_fingerprint(run, groups, topo, plan,
+                              arch=stateless, shape=shape)
+    diffs = fingerprint_diff(fp_ef, fp_b8)
+    assert diffs and any("moe_a2a" in ln for ln in diffs), diffs
+    # shape change resizes the state: also a named mismatch
+    wider = ShapeConfig("tiny2", seq_len=64, global_batch=4, kind="train")
+    fp_w = state_fingerprint(run, groups, topo, plan, arch=cfg, shape=wider)
+    diffs = fingerprint_diff(fp_ef, fp_w)
+    assert any("moe_a2a.state_len" in ln for ln in diffs), diffs
+    assert issubclass(CheckpointMismatch, ValueError)
